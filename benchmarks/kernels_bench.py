@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: CPU-host timings of the reference execution paths.
+
+Pallas kernels target TPU; here we time the chunked jnp twins (the CPU
+dispatch path in ``kernels.ops``) and report achieved FLOP/s plus the
+modeled TPU roofline occupancy of the kernel working sets (VMEM fit).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import vmem_bytes
+
+
+def _time(f, *args, iters: int = 3) -> float:
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(verbose: bool = True) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention (B, S, H, D)
+    B, S, H, KVH, D = 1, 1024, 8, 4, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, KVH, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, KVH, D), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, causal=True))
+    dt = _time(fa, q, k, v)
+    flops = 4.0 * B * H * S * S * D / 2  # causal half
+    rows.append(("kernels/flash_attn_ms", round(dt * 1e3, 2),
+                 f"{flops / dt / 1e9:.1f} GFLOP/s cpu-ref"))
+    rows.append(("kernels/flash_attn_vmem_kb",
+                 round(vmem_bytes(128, 128, D) / 1024, 1),
+                 "128x128 block working set"))
+
+    # ssd scan
+    Bs, L, nh, P, N = 1, 2048, 8, 64, 64
+    x = jax.random.normal(key, (Bs, L, nh, P), jnp.float32)
+    dtt = jax.nn.softplus(jax.random.normal(key, (Bs, L, nh)))
+    a_log = jnp.ones((nh,))
+    b = jax.random.normal(key, (Bs, L, 1, N)) * 0.3
+    c = jax.random.normal(key, (Bs, L, 1, N)) * 0.3
+    dsk = jnp.ones((nh,))
+    ssd = jax.jit(lambda *a: ops.ssd_scan(*a, chunk=256))
+    dt = _time(ssd, x, dtt, a_log, b, c, dsk)
+    rows.append(("kernels/ssd_scan_ms", round(dt * 1e3, 2),
+                 f"L={L} chunked cpu-ref"))
+
+    # grouped matmul
+    E, C, d, f = 8, 256, 512, 1024
+    xg = jax.random.normal(key, (E, C, d), jnp.bfloat16)
+    wg = jax.random.normal(key, (E, d, f), jnp.bfloat16)
+    gm = jax.jit(ops.gmm)
+    dt = _time(gm, xg, wg)
+    gf = 2.0 * E * C * d * f
+    rows.append(("kernels/gmm_ms", round(dt * 1e3, 2),
+                 f"{gf / dt / 1e9:.1f} GFLOP/s cpu-ref"))
+    if verbose:
+        for r in rows:
+            print(f"{r[0]:34s} {r[1]:>10} ({r[2]})")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,70 @@
+"""Fig. 2 vision: multi-tenant multiplexing on the shared TPU cluster.
+
+N independent video-understanding workflows arrive staggered. Murakkab's
+shared scheduling (warm-instance reuse + workflow-aware rebalance) is
+compared against the siloed status quo (each tenant gets a dedicated
+cluster slice, models cold per tenant).
+
+Metrics: total makespan, energy, warm-hit ratio, pool utilization.
+"""
+from __future__ import annotations
+
+from repro.core import MIN_LATENCY, Murakkab
+from repro.core.workflow import Job, VideoInput
+
+
+def _job(i: int) -> Job:
+    return Job(
+        description=f"List objects shown/mentioned in tenant {i}'s videos",
+        inputs=(VideoInput(f"tenant{i}.mov", scenes=4, frames_per_scene=10),),
+        constraints=MIN_LATENCY, quality_floor=0.8)
+
+
+def run(verbose: bool = True, n_tenants: int = 8,
+        stagger_s: float = 2.0) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+
+    # shared Murakkab cluster
+    shared = Murakkab.tpu_cluster(v5e=64, v5p=0, v4_harvest=0, host_cores=256)
+    report = shared.execute_many(
+        {f"wf{i}": (_job(i), i * stagger_s) for i in range(n_tenants)})
+    warm_hits = sum(1 for e in report.trace if e.note == "warm")
+    starts = sum(1 for e in report.trace if e.note in ("warm", "cold"))
+    rows.append(("multitenant/shared_makespan_s", round(report.makespan_s, 1),
+                 f"{n_tenants} tenants"))
+    rows.append(("multitenant/shared_energy_wh", round(report.energy_wh, 1),
+                 ""))
+    rows.append(("multitenant/warm_hit_ratio",
+                 round(warm_hits / max(starts, 1), 3), "instance reuse"))
+
+    # siloed: each tenant keeps a dedicated 1/N slice provisioned for the
+    # whole period (the fragmentation the paper calls out) + cold models.
+    from repro.core import CATALOG
+    silo_span, silo_active = 0.0, 0.0
+    chips = max(64 // n_tenants, 8)
+    for i in range(n_tenants):
+        silo = Murakkab.tpu_cluster(v5e=chips, v5p=0, v4_harvest=0,
+                                    host_cores=max(256 // n_tenants, 16))
+        r = silo.execute(_job(i))
+        silo_span = max(silo_span, i * stagger_s + r.makespan_s)
+        silo_active += r.sim.active_wh
+    # idle floor: every silo's chips, provisioned over the full span
+    idle_wh = n_tenants * chips * CATALOG["tpu-v5e"].idle_w * silo_span / 3600
+    silo_energy = silo_active + idle_wh
+    rows.append(("multitenant/siloed_makespan_s", round(silo_span, 1), ""))
+    rows.append(("multitenant/siloed_energy_wh", round(silo_energy, 1),
+                 "slices provisioned for full span"))
+    rows.append(("multitenant/energy_saving_x",
+                 round(silo_energy / max(report.energy_wh, 1e-9), 2),
+                 "shared vs siloed"))
+    rows.append(("multitenant/makespan_saving_x",
+                 round(silo_span / max(report.makespan_s, 1e-9), 2), ""))
+    if verbose:
+        for r in rows:
+            print(f"{r[0]:38s} {r[1]:>10} ({r[2]})")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,62 @@
+"""Paper §3.3: Murakkab's overheads.
+
+(a) Profiling — amortized: one profile sweep serves every subsequent
+    workflow; we measure sweep size/time and per-job reuse.
+(b) DAG creation — <1% of workflow execution time (short LLM queries).
+(c) Configuration search — greedy hierarchical pruning visits a small
+    fraction of the full lever cross-product.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import MIN_COST, Murakkab, dag_creation_overhead
+from repro.configs.workflow_video import make_declarative_job
+
+from .paper_eval import prewarm
+
+
+def run(verbose: bool = True) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+
+    # (a) profiling sweep: every (impl x device x count) pair, once
+    system = Murakkab.tpu_cluster()
+    t0 = time.perf_counter()
+    table = system.profiles.profile_table(
+        {"tpu-v5e": [1, 8, 64, 256], "tpu-v5p": [8, 64],
+         "host-core": [1, 8, 64]})
+    sweep_s = time.perf_counter() - t0
+    rows.append(("overheads/profile_sweep_entries", len(table), "one-time"))
+    rows.append(("overheads/profile_sweep_s", round(sweep_s, 4), "amortized"))
+
+    # (b) DAG creation overhead vs makespan
+    system = Murakkab.paper_cluster()
+    prewarm(system)
+    job = make_declarative_job(MIN_COST)
+    res = job.execute(system)
+    frac = dag_creation_overhead(res.dag, res.makespan_s)
+    rows.append(("overheads/dag_creation_frac", round(frac, 4),
+                 "paper <0.01"))
+
+    # (c) greedy search vs full cross-product
+    system = Murakkab.paper_cluster()
+    prewarm(system)
+    dag = system.lower(job)
+    full = sum(system.scheduler.search_space_size(dag.nodes[t])
+               for t in dag.topo_order)
+    system.scheduler.evals = 0
+    system.scheduler.plan(dag, job.constraint_order, job.quality_floor)
+    visited = system.scheduler.evals
+    rows.append(("overheads/search_full_space", full, "lever cross-product"))
+    rows.append(("overheads/search_visited", visited, "greedy"))
+    rows.append(("overheads/search_prune_ratio",
+                 round(full / max(visited, 1), 1), "x fewer"))
+    if verbose:
+        for r in rows:
+            print(f"{r[0]:38s} {r[1]:>12} ({r[2]})")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,116 @@
+"""Shared harness for the paper's evaluation (§4): the four configurations.
+
+Builds the baseline (Listing 1: pinned, sequential) and the three Murakkab
+STT configurations of Fig. 3 / Table 2:
+
+  - ``cpu``      STT on 64-core Whisper instances (what MIN_COST selects)
+  - ``gpu``      STT on 1 A100 (batched decode), "similar to the baseline"
+  - ``gpu+cpu``  STT split: 6 scenes on the GPU + 2 scenes on a 64-core pool
+
+The GPU and GPU+CPU rows are *constructed* configurations — the paper shows
+them as "execution traces from the various resource configurations that
+Murakkab can choose"; only the CPU row is what the MIN_COST constraint
+actually selects (asserted in tests).
+"""
+from __future__ import annotations
+
+from repro.core import MIN_COST, Murakkab
+from repro.core.dag import DAG, TaskNode
+from repro.core.scheduler import ExecutionPlan
+from repro.core.simulator import SimReport, Simulator
+from repro.configs.workflow_video import (PAPER_VIDEOS,
+                                          make_baseline_workflow,
+                                          make_declarative_job)
+
+PAPER_TARGETS = {
+    "baseline": (285.0, 155.0),
+    "cpu": (83.0, 34.0),
+    "gpu": (77.0, 43.0),
+    "gpu+cpu": (77.0, 42.0),
+}
+
+
+def prewarm(system: Murakkab):
+    """The always-on serving capacity of the paper's cluster."""
+    system.prewarm("nvlm-72b", "gpu", 8)
+    system.prewarm("nvlm-embed", "gpu", 2)
+    system.prewarm("whisper-large", "gpu", 1)
+
+
+def run_baseline():
+    system = Murakkab.paper_cluster()
+    wf = make_baseline_workflow()
+    return wf.execute(system, inputs=PAPER_VIDEOS)
+
+
+def run_murakkab_cpu():
+    """The config MIN_COST actually picks (STT on CPU cores)."""
+    system = Murakkab.paper_cluster()
+    prewarm(system)
+    return make_declarative_job(MIN_COST).execute(system)
+
+
+def _murakkab_dag(system: Murakkab):
+    job = make_declarative_job(MIN_COST)
+    dag = system.lower(job)
+    plan = system.scheduler.plan(dag, job.constraint_order,
+                                 job.quality_floor)
+    return job, dag, plan
+
+
+def run_murakkab_gpu():
+    """STT forced onto 1 A100 (batched): the paper's 'GPU' row."""
+    system = Murakkab.paper_cluster()
+    prewarm(system)
+    _, dag, plan = _murakkab_dag(system)
+    stt_id = next(t for t in dag.topo_order if "speech" in t)
+    pinned = system.scheduler.pin(dag.nodes[stt_id], "whisper-large",
+                                  "gpu", 1)
+    plan.configs[stt_id] = pinned.with_(batch=2, warm=True)
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    return sim.run({"gpu": (dag, plan, 0.0)})
+
+
+def run_murakkab_gpu_cpu():
+    """STT split 6 GPU-scenes + 2 CPU-scenes: the paper's 'GPU + CPU' row."""
+    system = Murakkab.paper_cluster()
+    prewarm(system)
+    _, dag, plan = _murakkab_dag(system)
+    stt_id = next(t for t in dag.topo_order if "speech" in t)
+    old = dag.nodes[stt_id]
+    # split the STT node across the two pools
+    gpu_node = old.with_(id=stt_id + "_gpu", work_items=6)
+    cpu_node = old.with_(id=stt_id + "_cpu", work_items=2)
+    nodes = []
+    for tid in dag.topo_order:
+        n = dag.nodes[tid]
+        if tid == stt_id:
+            nodes += [gpu_node, cpu_node]
+        elif stt_id in n.deps:
+            nodes.append(n.with_(deps=tuple(
+                d for d in n.deps if d != stt_id) +
+                (gpu_node.id, cpu_node.id)))
+        else:
+            nodes.append(n)
+    dag2 = DAG(nodes)
+    plan.configs[gpu_node.id] = system.scheduler.pin(
+        gpu_node, "whisper-large", "gpu", 1).with_(warm=True)
+    plan.configs[cpu_node.id] = system.scheduler.pin(
+        cpu_node, "whisper-large", "cpu", 64)
+    del plan.configs[stt_id]
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    return sim.run({"gpu+cpu": (dag2, plan, 0.0)})
+
+
+def run_all() -> dict[str, tuple[float, float, object]]:
+    """{config: (makespan_s, energy_wh, report-ish)} for all four rows."""
+    base = run_baseline()
+    cpu = run_murakkab_cpu()
+    gpu = run_murakkab_gpu()
+    mix = run_murakkab_gpu_cpu()
+    return {
+        "baseline": (base.makespan_s, base.energy_wh, base),
+        "cpu": (cpu.makespan_s, cpu.energy_wh, cpu),
+        "gpu": (gpu.makespan_s, gpu.energy_wh, gpu),
+        "gpu+cpu": (mix.makespan_s, mix.energy_wh, mix),
+    }

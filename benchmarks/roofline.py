@@ -1,0 +1,150 @@
+"""Roofline analysis (deliverable (g)): three terms per (arch x shape x mesh)
+from the dry-run's compiled artifacts.
+
+    compute    = HLO_FLOPs / (peak_FLOP/s per chip)        [per-device]
+    memory     = HLO_bytes / HBM_bw
+    collective = collective_bytes / link_bw
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Also reports MODEL_FLOPS (6*N_active*D for train, 2*N_active*D for serve),
+the useful-compute ratio MODEL_FLOPS/HLO_FLOPs, the dominant term, and the
+roofline fraction = ideal-compute-time / bound-time (1.0 = perfectly
+compute-bound with zero waste) — the headline §Perf metric.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+PEAK = 197e12          # bf16 FLOP/s per v5e chip
+HBM = 819e9            # bytes/s
+LINK = 50e9            # bytes/s per ICI link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+_SHAPES = {"train_4k": (4096, 256, "train"),
+           "prefill_32k": (32768, 32, "prefill"),
+           "decode_32k": (32768, 128, "decode"),
+           "long_500k": (524288, 1, "decode")}
+
+
+def model_flops_per_device(rec: dict) -> float:
+    """Useful FLOPs per device: 6*N_active*D (train), 2*N_active*D (serve).
+
+    decode processes ONE new token per sequence; prefill the full context.
+    """
+    seq, batch, kind = _SHAPES[rec["shape"]]
+    n_dev = {"16x16": 256, "2x16x16": 512}[rec["mesh"]]
+    n_act = rec["params_active"]
+    if kind == "train":
+        tokens = seq * batch
+        per_tok = 6.0
+    elif kind == "prefill":
+        tokens = seq * batch
+        per_tok = 2.0
+    else:
+        tokens = batch          # one token per sequence
+        per_tok = 2.0
+    return per_tok * n_act * tokens / n_dev
+
+
+def analyze(rec: dict) -> dict:
+    t_c = rec["flops_per_device"] / PEAK
+    # v2 = production-artifact accounting (launch/hlo_cost.py): while bodies
+    # scaled by known_trip_count, Pallas-kernel IO substituted for the
+    # kernel-interior loops. Falls back to the legacy extrapolation fields.
+    if "v2_bytes_per_device" in rec:
+        t_m = rec["v2_bytes_per_device"] / HBM
+        t_x = rec["v2_collective_bytes_per_device"] / LINK
+    else:
+        t_m = rec["hbm_bytes_per_device"] / HBM
+        raw_coll = rec.get("scan_cost_raw", {}).get("coll", {}).get(
+            "total_bytes", 0.0)
+        t_x = max(rec["collective_bytes_per_device"], raw_coll, 0.0) / LINK
+    bound = max(t_c, t_m, t_x)
+    dom = {t_c: "compute", t_m: "memory", t_x: "collective"}[bound]
+    mf = model_flops_per_device(rec)
+    ideal = mf / PEAK
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "bound_s": bound, "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": mf / rec["flops_per_device"]
+        if rec["flops_per_device"] else 0.0,
+        "roofline_fraction": ideal / bound if bound else 0.0,
+    }
+
+
+def load_records(mesh: str = "16x16", results_dir: str = RESULTS) \
+        -> list[dict]:
+    recs = []
+    if not os.path.isdir(results_dir):
+        return recs
+    for name in sorted(os.listdir(results_dir)):
+        if not name.endswith(f"_{mesh}.json"):
+            continue
+        with open(os.path.join(results_dir, name)) as f:
+            rec = json.load(f)
+        if rec.get("ok"):
+            recs.append(rec)
+        elif rec.get("skipped"):
+            recs.append(rec)
+    return recs
+
+
+def improvement_hint(a: dict) -> str:
+    """One sentence on what would move the dominant term down."""
+    if a["dominant"] == "compute":
+        if a["useful_ratio"] < 0.5:
+            return ("compute-bound but <50% useful: cut remat recompute / "
+                    "redundant einsum transposes")
+        return "compute-bound at high useful ratio: near roofline; " \
+               "only micro-fusion left"
+    if a["dominant"] == "memory":
+        return ("memory-bound: raise arithmetic intensity (bigger per-chip "
+                "batch, fuse decode GEMVs, quantize KV/weights)")
+    return ("collective-bound: reshard to cut all-gather/all-reduce volume "
+            "(FSDP->TP swap, overlap collectives with compute, int8 grads)")
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | bound "
+            "| MODEL/HLO | roofline frac | note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for rec in load_records(mesh):
+        if rec.get("skipped"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"skip | — | — | {rec['reason']} |")
+            continue
+        a = analyze(rec)
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.3g} | "
+            f"{a['t_memory_s']:.3g} | {a['t_collective_s']:.3g} | "
+            f"{a['dominant']} | {a['useful_ratio']:.2f} | "
+            f"{a['roofline_fraction']:.2f} | {improvement_hint(a)} |")
+    return "\n".join(rows)
+
+
+def run(verbose: bool = True) -> list[tuple[str, float, str]]:
+    out: list[tuple[str, float, str]] = []
+    for rec in load_records():
+        if rec.get("skipped"):
+            out.append((f"roofline/{rec['arch']}/{rec['shape']}", -1.0,
+                        "skipped: " + rec["reason"]))
+            continue
+        a = analyze(rec)
+        out.append((f"roofline/{a['arch']}/{a['shape']}",
+                    round(a["roofline_fraction"], 3),
+                    f"bound={a['dominant']} useful={a['useful_ratio']:.2f}"))
+    if verbose:
+        print(markdown_table())
+    if not out:
+        out.append(("roofline/no_records", 0.0,
+                    "run repro.launch.dryrun --all first"))
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown_table())

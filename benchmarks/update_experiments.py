@@ -1,0 +1,85 @@
+"""Regenerate the §Roofline table inside EXPERIMENTS.md from results/dryrun.
+
+    PYTHONPATH=src:. python -m benchmarks.update_experiments
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .roofline import RESULTS, analyze, load_records, improvement_hint
+
+MARK_BEGIN = "<!-- ROOFLINE TABLE BEGIN -->"
+MARK_END = "<!-- ROOFLINE TABLE END -->"
+
+
+def full_table() -> str:
+    rows = ["", MARK_BEGIN,
+            "### §Roofline table — 40 cells, single-pod (data=16, model=16)",
+            "",
+            "| arch | shape | compute s | memory s | collective s | bound "
+            "| MODEL/HLO | roofline frac | what would move the bound |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    n_ok = n_skip = 0
+    for rec in load_records("16x16"):
+        if rec.get("serving_rules"):
+            continue
+        if rec.get("skipped"):
+            n_skip += 1
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"skip | — | — | {rec['reason']} |")
+            continue
+        n_ok += 1
+        a = analyze(rec)
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.3g} | "
+            f"{a['t_memory_s']:.3g} | {a['t_collective_s']:.3g} | "
+            f"{a['dominant']} | {a['useful_ratio']:.2f} | "
+            f"{a['roofline_fraction']:.3f} | {improvement_hint(a)} |")
+    rows.append("")
+    rows.append(f"({n_ok} compiled cells + {n_skip} documented skips; "
+                "optimized `*_opt` records are reported in §Perf, "
+                "not in this baseline table.)")
+
+    # optimized cells comparison
+    opt = []
+    for name in sorted(os.listdir(RESULTS)):
+        if not name.endswith("_opt.json"):
+            continue
+        with open(os.path.join(RESULTS, name)) as f:
+            rec = json.load(f)
+        if rec.get("ok"):
+            opt.append(rec)
+    if opt:
+        rows += ["", "### Optimized (serving-rules) cells — §Perf result",
+                 "",
+                 "| arch | shape | compute s | memory s | collective s | "
+                 "bound | roofline frac |",
+                 "|---|---|---|---|---|---|---|"]
+        for rec in opt:
+            a = analyze(rec)
+            rows.append(
+                f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.3g} | "
+                f"{a['t_memory_s']:.3g} | {a['t_collective_s']:.3g} | "
+                f"{a['dominant']} | {a['roofline_fraction']:.3f} |")
+    rows.append(MARK_END)
+    return "\n".join(rows)
+
+
+def main():
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    with open(path) as f:
+        txt = f.read()
+    if MARK_BEGIN in txt:
+        pre = txt.split(MARK_BEGIN)[0].rstrip("\n")
+        post = txt.split(MARK_END)[1]
+        txt = pre + "\n" + full_table() + post
+    else:
+        txt = txt.rstrip("\n") + "\n" + full_table() + "\n"
+    with open(path, "w") as f:
+        f.write(txt)
+    print("EXPERIMENTS.md §Roofline table updated")
+
+
+if __name__ == "__main__":
+    main()

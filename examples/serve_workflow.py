@@ -1,0 +1,72 @@
+"""End-to-end driver (the paper's kind = serving): batched request serving
+of a small zoo model, scheduled by Murakkab on the TPU-cluster model.
+
+1. Murakkab receives a stream of QA jobs (declarative),
+2. plans them onto the shared TPU cluster model (warm instances multiplex),
+3. and serves the actual generations with a real JAX model on this machine.
+
+    PYTHONPATH=src python examples/serve_workflow.py --requests 12
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Job, MIN_LATENCY, Murakkab
+from repro.configs.registry import get_config
+from repro.models.model_zoo import build_model
+from repro.runtime.serve import ServeOptions, ServeSession
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    # --- 1) Murakkab schedules the request stream on the cluster model ------
+    system = Murakkab.tpu_cluster(v5e=64, v5p=0, v4_harvest=0, host_cores=64)
+    jobs = {
+        f"req{i}": (Job(description=f"Answer the user question #{i} over "
+                        "the indexed summaries",
+                        tasks=(f"Answer question {i} from retrieved context",),
+                        constraints=MIN_LATENCY, quality_floor=0.8), i * 0.5)
+        for i in range(args.requests)}
+    report = system.execute_many(jobs)
+    warm = sum(1 for e in report.trace if e.note == "warm")
+    print(f"[murakkab] {args.requests} QA jobs: makespan "
+          f"{report.makespan_s:.1f}s, energy {report.energy_wh:.2f}Wh, "
+          f"warm-instance hits {warm}/{len(report.trace)}")
+
+    # --- 2) real batched serving of the generations --------------------------
+    cfg = get_config(args.arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sess = ServeSession(model, params, opts=ServeOptions())
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    outs = []
+    for i in range(0, args.requests, args.batch):
+        n = min(args.batch, args.requests - i)
+        prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (n, 24),
+                                           dtype=np.int32))
+        outs.append(sess.generate(prompts, max_new_tokens=args.max_new))
+    jax.block_until_ready(outs[-1])
+    dt = time.time() - t0
+    total = args.requests * args.max_new
+    print(f"[serve] {args.arch} (reduced): {total} tokens in {dt:.1f}s "
+          f"({total / dt:.1f} tok/s) across "
+          f"{(args.requests + args.batch - 1) // args.batch} batches")
+    print("sample generation:", np.asarray(outs[0][0]))
+
+
+if __name__ == "__main__":
+    main()

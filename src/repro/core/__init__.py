@@ -1,0 +1,38 @@
+"""Murakkab core: the paper's contribution as a composable system.
+
+Public API::
+
+    from repro.core import (Job, Workflow, Tool, MLModel, LLM,
+                            MIN_COST, MIN_ENERGY, MIN_LATENCY, MAX_QUALITY,
+                            Murakkab, VideoInput)
+
+    system = Murakkab.paper_cluster()
+    result = Job("List objects shown/mentioned in the videos",
+                 inputs=videos, constraints=MIN_COST).execute(system)
+"""
+from .agents import (AgentImpl, AgentInterface, AgentLibrary, Work,
+                     default_library)
+from .cluster import ClusterManager, Instance, Pool
+from .dag import DAG, TaskNode
+from .energy import CATALOG, DeviceSpec, EnergyLedger, roofline_latency
+from .orchestrator import LLMPlanner, RulePlanner, dag_creation_overhead
+from .profiles import Profile, ProfileStore
+from .scheduler import ExecutionPlan, Scheduler, TaskConfig
+from .simulator import SimReport, Simulator, TraceEntry, render_trace
+from .system import JobResult, Murakkab
+from .workflow import (LLM, MAX_QUALITY, MIN_COST, MIN_ENERGY, MIN_LATENCY,
+                       Constraint, ImperativeWorkflow, Job, MLModel, Tool,
+                       VideoInput, Workflow)
+
+__all__ = [
+    "AgentImpl", "AgentInterface", "AgentLibrary", "Work", "default_library",
+    "ClusterManager", "Instance", "Pool", "DAG", "TaskNode",
+    "CATALOG", "DeviceSpec", "EnergyLedger", "roofline_latency",
+    "LLMPlanner", "RulePlanner", "dag_creation_overhead",
+    "Profile", "ProfileStore", "ExecutionPlan", "Scheduler", "TaskConfig",
+    "SimReport", "Simulator", "TraceEntry", "render_trace",
+    "JobResult", "Murakkab",
+    "LLM", "MAX_QUALITY", "MIN_COST", "MIN_ENERGY", "MIN_LATENCY",
+    "Constraint", "ImperativeWorkflow", "Job", "MLModel", "Tool",
+    "VideoInput", "Workflow",
+]

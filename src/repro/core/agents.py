@@ -1,0 +1,300 @@
+"""Agent library: interfaces, schemas, implementations (paper §3.2).
+
+An *interface* is what tasks bind to ("speech_to_text"); an *implementation*
+is a concrete model/tool that satisfies it ("whisper-large",
+"seamless-m4t-large-v2"), each with its own quality score, hardware support
+and workload model. Murakkab selects among implementations at runtime — this
+indirection is the fungibility the paper builds on.
+
+Implementations backed by the model zoo carry ``arch=<assigned architecture>``;
+their FLOP/byte workload models are derived from the config (same math as the
+roofline analysis), and the real executor can run their reduced configs on
+CPU end-to-end.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+from ..configs.registry import get_config
+from ..models.model_zoo import build_model
+
+
+@dataclass(frozen=True)
+class Work:
+    """Device-agnostic workload of one task invocation."""
+
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+
+    def __mul__(self, k: float) -> "Work":
+        return Work(self.flops * k, self.hbm_bytes * k, self.coll_bytes * k)
+
+    __rmul__ = __mul__
+
+    def __add__(self, o: "Work") -> "Work":
+        return Work(self.flops + o.flops, self.hbm_bytes + o.hbm_bytes,
+                    self.coll_bytes + o.coll_bytes)
+
+
+@dataclass(frozen=True)
+class AgentInterface:
+    """A capability tasks can bind to, with a toolcall schema."""
+
+    name: str
+    description: str
+    schema: dict[str, str]            # arg name -> type (toolcall schema)
+    keywords: tuple[str, ...]         # rule-planner matching terms
+    produces: str                     # dataflow type: frames|transcript|...
+    consumes: tuple[str, ...] = ()
+
+
+@dataclass(frozen=True)
+class AgentImpl:
+    """One concrete model/tool implementing an interface."""
+
+    name: str
+    interface: str
+    quality: float                      # relative result quality in [0, 1]
+    hw_kinds: tuple[str, ...]           # device kinds this impl can run on
+    # workload per work-item as a function of (tokens_in, tokens_out):
+    work_fn: Callable[[int, int], Work]
+    min_devices: dict[str, int] = field(default_factory=dict)
+    max_devices: dict[str, int] = field(default_factory=dict)
+    chunkable: bool = True              # intra-task fan-out allowed
+    mxu_efficiency: float = 0.6         # fraction of peak when compute-bound
+    power_frac: float = 1.0             # fraction of (active-idle) power drawn
+    load_time_s: float = 0.0            # cold-start (weights load) latency
+    arch: str | None = None             # model-zoo backing (real execution)
+    params_bytes: float = 0.0
+    overhead_s: float = 0.0             # per-step invocation overhead
+    # batching lever: time(batch of b items) = per_item * b**batch_alpha.
+    # alpha ~ 0.15 for weight-streaming-bound LLM decode (weights read once
+    # per step regardless of batch); alpha = 1.0 means no batching benefit.
+    max_batch: int = 1
+    batch_alpha: float = 1.0
+
+
+def _lm_work(arch: str) -> tuple[Callable[[int, int], Work], float]:
+    """LLM workload model from a zoo config: prefill FLOPs + decode bytes.
+
+    flops  = 2 * N_active * (tokens_in + tokens_out)   (forward only)
+    bytes  = params_bytes * tokens_out                  (decode is weight-
+             streaming bound; prefill reads weights ~once, negligible vs this)
+    """
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    n_active = model.active_param_count()
+    pbytes = model.param_count() * 2.0  # bf16
+
+    def work(tokens_in: int, tokens_out: int) -> Work:
+        flops = 2.0 * n_active * (tokens_in + tokens_out)
+        bytes_ = pbytes * max(tokens_out, 1) + 2.0 * n_active * tokens_in
+        return Work(flops=flops, hbm_bytes=bytes_)
+
+    return work, pbytes
+
+
+def _fixed_work(flops: float, bytes_: float) -> Callable[[int, int], Work]:
+    return lambda ti, to: Work(flops=flops, hbm_bytes=bytes_)
+
+
+# ---------------------------------------------------------------------------
+# Library
+# ---------------------------------------------------------------------------
+
+
+class AgentLibrary:
+    def __init__(self):
+        self.interfaces: dict[str, AgentInterface] = {}
+        self.impls: dict[str, AgentImpl] = {}
+
+    def register_interface(self, iface: AgentInterface):
+        self.interfaces[iface.name] = iface
+
+    def register_impl(self, impl: AgentImpl):
+        if impl.interface not in self.interfaces:
+            raise KeyError(f"unknown interface {impl.interface!r}")
+        self.impls[impl.name] = impl
+
+    def impls_for(self, interface: str) -> list[AgentImpl]:
+        return [i for i in self.impls.values() if i.interface == interface]
+
+    def match_interface(self, text: str) -> str | None:
+        """Keyword-match a task description to an interface (rule planner)."""
+        low = text.lower()
+        best, score = None, 0
+        for iface in self.interfaces.values():
+            s = sum(len(k) for k in iface.keywords if k in low)
+            if s > score:
+                best, score = iface.name, s
+        return best
+
+    def toolcall(self, interface: str, args: dict) -> str:
+        """Render the executable toolcall string (paper §3.2 example)."""
+        iface = self.interfaces[interface]
+        known = {k: v for k, v in args.items() if k in iface.schema}
+        arg_s = ", ".join(f"{k}={v!r}" for k, v in sorted(known.items()))
+        return f"{_camel(interface)}({arg_s})"
+
+
+_TOOLNAMES = {"frame_extract": "FrameExtractor", "speech_to_text":
+              "SpeechToText", "object_detect": "ObjectDetector"}
+
+
+def _camel(s: str) -> str:
+    if s in _TOOLNAMES:
+        return _TOOLNAMES[s]
+    return "".join(p.capitalize() for p in s.split("_"))
+
+
+# ---------------------------------------------------------------------------
+# Default library: the Video-Understanding agents + zoo-backed LLM tiers
+# ---------------------------------------------------------------------------
+
+
+def default_library() -> AgentLibrary:
+    lib = AgentLibrary()
+
+    lib.register_interface(AgentInterface(
+        "frame_extract", "Extract frames from video at a sampling rate",
+        schema={"file": "str", "start_time": "float", "end_time": "float",
+                "num_frames": "int"},
+        keywords=("frame", "extract", "sample", "video"),
+        produces="frames", consumes=("video",)))
+    lib.register_interface(AgentInterface(
+        "speech_to_text", "Transcribe speech audio to text",
+        schema={"file": "str", "language": "str"},
+        keywords=("speech", "transcri", "audio", "text", "stt"),
+        produces="transcript", consumes=("video",)))
+    lib.register_interface(AgentInterface(
+        "object_detect", "Detect/classify objects in images",
+        schema={"frames": "list", "labels": "list"},
+        keywords=("object", "detect", "classif", "recogni"),
+        produces="objects", consumes=("frames",)))
+    lib.register_interface(AgentInterface(
+        "summarize", "Summarize scenes from frames, objects and transcripts",
+        schema={"context": "str", "max_tokens": "int"},
+        keywords=("summar", "describe", "caption"),
+        produces="summary", consumes=("frames", "objects", "transcript")))
+    lib.register_interface(AgentInterface(
+        "embed", "Embed text into a vector DB for retrieval",
+        schema={"texts": "list"},
+        keywords=("embed", "vector", "index", "insert"),
+        produces="vectors", consumes=("summary",)))
+    lib.register_interface(AgentInterface(
+        "qa", "Answer questions over retrieved context",
+        schema={"question": "str", "top_k": "int"},
+        keywords=("answer", "question", "qa", "query"),
+        produces="answer", consumes=("vectors",)))
+
+    # ---- tools ----
+    lib.register_impl(AgentImpl(
+        "opencv", "frame_extract", quality=1.0, hw_kinds=("cpu",),
+        work_fn=_fixed_work(flops=2.0e9, bytes_=6.0e8),   # per scene
+        max_devices={"cpu": 16}, power_frac=1.0, overhead_s=0.5))
+    lib.register_impl(AgentImpl(
+        "clip", "object_detect", quality=0.90, hw_kinds=("cpu", "gpu", "tpu"),
+        work_fn=_fixed_work(flops=4.0e11, bytes_=3.0e10),  # per scene (frames)
+        max_devices={"cpu": 8, "gpu": 1, "tpu": 1}, power_frac=0.5,
+        overhead_s=0.5))
+
+    # ---- STT tiers ----
+    lib.register_impl(AgentImpl(
+        "whisper-large", "speech_to_text", quality=0.97,
+        hw_kinds=("cpu", "gpu", "tpu"),
+        # ~60 s of audio per scene; enc-dec forward + decode streaming
+        work_fn=_fixed_work(flops=6.0e12, bytes_=2.5e11),
+        min_devices={"cpu": 8}, max_devices={"cpu": 64, "gpu": 1, "tpu": 1},
+        power_frac=0.55, load_time_s=4.0, params_bytes=3.2e9,
+        max_batch=2, batch_alpha=0.5, overhead_s=1.0))
+    lib.register_impl(AgentImpl(
+        "fast-conformer", "speech_to_text", quality=0.93,
+        hw_kinds=("cpu", "gpu", "tpu"),
+        work_fn=_fixed_work(flops=1.2e12, bytes_=6.0e10),
+        min_devices={"cpu": 8}, max_devices={"cpu": 64, "gpu": 1, "tpu": 1},
+        power_frac=0.5, load_time_s=2.0, params_bytes=2.3e8))
+    stt_work, stt_bytes = _lm_work("seamless-m4t-large-v2")
+    lib.register_impl(AgentImpl(
+        "seamless-m4t-large-v2", "speech_to_text", quality=0.96,
+        hw_kinds=("tpu",), work_fn=lambda ti, to: stt_work(1500, 200),
+        max_devices={"tpu": 8}, power_frac=0.6, load_time_s=6.0,
+        arch="seamless-m4t-large-v2", params_bytes=stt_bytes,
+        max_batch=8, batch_alpha=0.3, overhead_s=0.5))
+
+    # ---- vision tier (zoo) ----
+    vlm_work, vlm_bytes = _lm_work("llama-3.2-vision-90b")
+    lib.register_impl(AgentImpl(
+        "llama-3.2-vision-90b", "object_detect", quality=0.98,
+        hw_kinds=("tpu",), work_fn=lambda ti, to: vlm_work(4096, 128),
+        min_devices={"tpu": 8}, max_devices={"tpu": 64}, power_frac=0.7,
+        load_time_s=30.0, arch="llama-3.2-vision-90b",
+        params_bytes=vlm_bytes))
+
+    # ---- summarize / LLM tiers (the model-zoo ladder) ----
+    # (quality scores: relative ladder for the scheduler, not benchmarks)
+    for arch, quality, hw in [
+        ("deepseek-7b", 0.88, ("gpu", "tpu")),
+        ("gemma2-9b", 0.90, ("gpu", "tpu")),
+        ("stablelm-12b", 0.89, ("gpu", "tpu")),
+        ("deepseek-moe-16b", 0.87, ("gpu", "tpu")),
+        ("zamba2-7b", 0.86, ("gpu", "tpu")),
+        ("command-r-plus-104b", 0.97, ("tpu",)),
+        ("kimi-k2-1t-a32b", 0.99, ("tpu",)),
+    ]:
+        wfn, pbytes = _lm_work(arch)
+        big = pbytes > 60e9
+        lib.register_impl(AgentImpl(
+            arch, "summarize", quality=quality, hw_kinds=hw,
+            work_fn=wfn,
+            min_devices={"tpu": 8 if big else 1, "gpu": 8 if big else 1},
+            max_devices={"tpu": 256, "gpu": 8},
+            power_frac=0.65, load_time_s=8.0 if not big else 45.0,
+            arch=arch, params_bytes=pbytes, max_batch=128, batch_alpha=0.15,
+            overhead_s=0.3))
+
+    # NVLM-class profile from the paper's setup (8xA100 summarize)
+    lib.register_impl(AgentImpl(
+        "nvlm-72b", "summarize", quality=0.96, hw_kinds=("gpu",),
+        work_fn=lambda ti, to: Work(flops=2.0 * 72e9 * (ti + to),
+                                    hbm_bytes=144e9 * max(to, 1)),
+        min_devices={"gpu": 8}, max_devices={"gpu": 8},
+        power_frac=0.55, load_time_s=40.0, params_bytes=144e9,
+        max_batch=128, batch_alpha=0.15, overhead_s=0.3))
+    lib.register_impl(AgentImpl(
+        "nvlm-embed", "embed", quality=1.0, hw_kinds=("gpu", "tpu"),
+        work_fn=_fixed_work(flops=1.5e12, bytes_=1.5e11),
+        min_devices={"gpu": 2}, max_devices={"gpu": 2, "tpu": 2},
+        power_frac=0.45, load_time_s=20.0, overhead_s=0.5,
+        max_batch=8, batch_alpha=0.3))
+
+    lib.register_impl(AgentImpl(
+        "minilm-embed", "embed", quality=0.88, hw_kinds=("cpu",),
+        work_fn=_fixed_work(flops=2.0e10, bytes_=2.0e9),
+        max_devices={"cpu": 8}, power_frac=0.8, load_time_s=1.0,
+        overhead_s=0.3, max_batch=8, batch_alpha=0.4))
+
+    # ---- qa tiers (zoo) ----
+    for arch, quality in [("command-r-plus-104b", 0.97),
+                          ("kimi-k2-1t-a32b", 0.99),
+                          ("deepseek-7b", 0.85)]:
+        wfn, pbytes = _lm_work(arch)
+        big = pbytes > 60e9
+        lib.register_impl(AgentImpl(
+            f"{arch}-qa", "qa", quality=quality, hw_kinds=("tpu",),
+            work_fn=wfn, min_devices={"tpu": 8 if big else 1},
+            max_devices={"tpu": 256}, power_frac=0.65,
+            load_time_s=45.0 if big else 8.0, arch=arch,
+            params_bytes=pbytes, max_batch=16, batch_alpha=0.15,
+            overhead_s=0.3))
+
+    # draft/cheap tier: attention-free SSM
+    mwork, mbytes = _lm_work("mamba2-370m")
+    lib.register_impl(AgentImpl(
+        "mamba2-370m-draft", "summarize", quality=0.55,
+        hw_kinds=("cpu", "gpu", "tpu"), work_fn=mwork,
+        max_devices={"cpu": 16, "gpu": 1, "tpu": 1}, power_frac=0.4,
+        load_time_s=1.0, arch="mamba2-370m", params_bytes=mbytes,
+        overhead_s=0.2))
+    return lib

@@ -1,0 +1,170 @@
+"""Workflow-aware cluster manager (paper §3.2).
+
+Tracks resource pools (TPU slices / GPUs / CPU-host cores), serves
+allocations to the scheduler, and — the paper's key point — *sees workflow
+DAGs*, so it can anticipate demand: pre-warm model instances for upcoming
+tasks and reclaim instances no registered workflow will need
+("if no workflows are expected to require a Speech-To-Text agent soon, it
+can reallocate GPU resources from Whisper to Llama").
+
+Also exposes *harvestable* capacity (the spot/harvest-VM analogue): devices
+that are free right now but may be reclaimed; the orchestrator uses them for
+optional execution paths (CoT top-k) but not for critical-path work.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+from .dag import DAG
+from .energy import CATALOG, DeviceSpec
+
+
+@dataclass
+class Pool:
+    name: str
+    device: str                # DeviceSpec name
+    capacity: int
+    reserved: int = 0          # devices reserved for priority tenants
+    harvestable: bool = False  # spot-like: allocs may be preempted
+
+    @property
+    def spec(self) -> DeviceSpec:
+        return CATALOG[self.device]
+
+
+@dataclass(frozen=True)
+class Lease:
+    id: int
+    pool: str
+    n_devices: int
+    t_start: float
+    harvest: bool = False      # preemptible allocation
+
+
+@dataclass
+class Instance:
+    """A warm model instance: weights resident on a device group."""
+
+    impl: str
+    pool: str
+    n_devices: int
+    busy_until: float = 0.0
+    warm_since: float = 0.0
+    lease: "Lease | None" = None   # the devices this instance holds
+
+
+class ClusterManager:
+    def __init__(self, pools: list[Pool]):
+        self.pools: dict[str, Pool] = {p.name: p for p in pools}
+        self._used: dict[str, int] = {p.name: 0 for p in pools}
+        self._leases: dict[int, Lease] = {}
+        self._ids = itertools.count()
+        self.instances: list[Instance] = []
+        self._dags: dict[str, DAG] = {}
+        self._done: dict[str, set[str]] = {}
+        self.preemptions: int = 0
+
+    # -- allocation ------------------------------------------------------------
+    def free(self, pool: str) -> int:
+        p = self.pools[pool]
+        return p.capacity - self._used[pool]
+
+    def alloc(self, pool: str, n: int, t: float,
+              harvest: bool = False) -> Lease | None:
+        if n <= 0 or self.free(pool) < n:
+            return None
+        self._used[pool] += n
+        lease = Lease(next(self._ids), pool, n, t, harvest=harvest)
+        self._leases[lease.id] = lease
+        return lease
+
+    def release(self, lease: Lease, t: float):
+        if lease.id not in self._leases:
+            raise KeyError(f"double release of lease {lease.id}")
+        del self._leases[lease.id]
+        self._used[lease.pool] -= lease.n_devices
+
+    def preempt_harvest(self, pool: str, n_needed: int, t: float) \
+            -> list[Lease]:
+        """Reclaim harvest leases to make room (spot semantics)."""
+        victims = []
+        for lease in list(self._leases.values()):
+            if lease.pool == pool and lease.harvest and n_needed > 0:
+                victims.append(lease)
+                n_needed -= lease.n_devices
+        for v in victims:
+            self.release(v, t)
+            self.preemptions += 1
+        return victims
+
+    # -- stats for the orchestrator (paper: "continuously receives stats") -----
+    def stats(self) -> dict[str, dict]:
+        out = {}
+        for name, p in self.pools.items():
+            free = self.free(name)
+            out[name] = {
+                "device": p.device, "kind": p.spec.kind,
+                "capacity": p.capacity, "free": free,
+                "harvestable": free if p.harvestable else
+                    max(free - p.reserved, 0),
+            }
+        return out
+
+    def pools_of_kind(self, kind: str) -> list[Pool]:
+        return [p for p in self.pools.values() if p.spec.kind == kind]
+
+    # -- workflow awareness ------------------------------------------------------
+    def register_workflow(self, wf_id: str, dag: DAG):
+        self._dags[wf_id] = dag
+        self._done[wf_id] = set()
+
+    def complete_task(self, wf_id: str, task_id: str):
+        if wf_id in self._done:
+            self._done[wf_id].add(task_id)
+            if self._done[wf_id] >= set(self._dags[wf_id].nodes):
+                del self._dags[wf_id], self._done[wf_id]
+
+    def upcoming_demand(self) -> dict[str, int]:
+        """Pending task count per agent interface, across registered DAGs."""
+        demand: dict[str, int] = {}
+        for wf_id, dag in self._dags.items():
+            done = self._done[wf_id]
+            for tid, node in dag.nodes.items():
+                if tid not in done:
+                    demand[node.agent] = demand.get(node.agent, 0) + 1
+        return demand
+
+    # -- warm instances ------------------------------------------------------------
+    def find_instance(self, impl: str, t: float) -> Instance | None:
+        """Earliest-available warm instance of ``impl``."""
+        cands = [i for i in self.instances if i.impl == impl]
+        return min(cands, key=lambda i: i.busy_until) if cands else None
+
+    def add_instance(self, inst: Instance):
+        self.instances.append(inst)
+
+    def rebalance(self, library, t: float) -> list[str]:
+        """Reclaim warm instances for interfaces with no upcoming demand.
+
+        Returns a log of actions (tested; the paper's Whisper->Llama example).
+        """
+        demand = self.upcoming_demand()
+        actions = []
+        for inst in list(self.instances):
+            iface = library.impls[inst.impl].interface
+            if demand.get(iface, 0) == 0 and inst.busy_until <= t:
+                self.evict_instance(inst, t)
+                actions.append(f"reclaim {inst.impl} ({inst.n_devices} dev "
+                               f"of {inst.pool}): no upcoming {iface} demand")
+        return actions
+
+    def evict_instance(self, inst: Instance, t: float):
+        """Remove a warm instance and free its devices."""
+        self.instances.remove(inst)
+        if inst.lease is not None and inst.lease.id in self._leases:
+            self.release(inst.lease, t)
+
+    def utilization(self) -> dict[str, float]:
+        return {name: self._used[name] / p.capacity
+                for name, p in self.pools.items() if p.capacity}

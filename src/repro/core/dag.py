@@ -1,0 +1,123 @@
+"""Task-DAG intermediate representation.
+
+The orchestrator lowers a declarative ``Job`` into this IR: nodes are agent
+invocations, edges are dataflow (paper §3.2 "Job Decomposition"). The IR is
+pure metadata — scheduling and execution layers consume it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Iterable
+
+
+@dataclass(frozen=True)
+class TaskNode:
+    """One agent invocation in a workflow DAG."""
+
+    id: str
+    description: str                 # NL task text (paper Listing 2)
+    agent: str                       # agent *interface* name (library key)
+    deps: tuple[str, ...] = ()       # dataflow predecessors
+    args: dict = field(default_factory=dict)   # toolcall arguments
+    # workload descriptors the profile model consumes:
+    work_items: int = 1              # chunkable units (scenes, frames, ...)
+    chunkable: bool = False          # may be split across instances
+    tokens_in: int = 0               # LLM-agent input size
+    tokens_out: int = 0              # LLM-agent output size
+
+    def with_(self, **kw) -> "TaskNode":
+        return replace(self, **kw)
+
+
+class DAG:
+    """Validated directed acyclic task graph."""
+
+    def __init__(self, nodes: Iterable[TaskNode]):
+        self.nodes: dict[str, TaskNode] = {}
+        for n in nodes:
+            if n.id in self.nodes:
+                raise ValueError(f"duplicate task id {n.id!r}")
+            self.nodes[n.id] = n
+        for n in self.nodes.values():
+            for d in n.deps:
+                if d not in self.nodes:
+                    raise ValueError(f"{n.id!r} depends on unknown {d!r}")
+        self._topo = self._toposort()
+
+    # -- structure -----------------------------------------------------------
+    def _toposort(self) -> tuple[str, ...]:
+        indeg = {i: len(n.deps) for i, n in self.nodes.items()}
+        out: dict[str, list[str]] = {i: [] for i in self.nodes}
+        for n in self.nodes.values():
+            for d in n.deps:
+                out[d].append(n.id)
+        ready = sorted(i for i, k in indeg.items() if k == 0)
+        order: list[str] = []
+        while ready:
+            i = ready.pop(0)
+            order.append(i)
+            for j in sorted(out[i]):
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    ready.append(j)
+        if len(order) != len(self.nodes):
+            cyc = set(self.nodes) - set(order)
+            raise ValueError(f"cycle involving {sorted(cyc)}")
+        return tuple(order)
+
+    @property
+    def topo_order(self) -> tuple[str, ...]:
+        return self._topo
+
+    def successors(self, node_id: str) -> list[str]:
+        return [n.id for n in self.nodes.values() if node_id in n.deps]
+
+    def roots(self) -> list[str]:
+        return [i for i, n in self.nodes.items() if not n.deps]
+
+    def leaves(self) -> list[str]:
+        succ_of = {d for n in self.nodes.values() for d in n.deps}
+        return [i for i in self.nodes if i not in succ_of]
+
+    # -- analysis -------------------------------------------------------------
+    def critical_path(self, durations: dict[str, float]) \
+            -> tuple[float, tuple[str, ...]]:
+        """Longest path under per-node ``durations`` (lower bound on makespan
+        with infinite resources)."""
+        finish: dict[str, float] = {}
+        best_pred: dict[str, str | None] = {}
+        for i in self._topo:
+            n = self.nodes[i]
+            start, pred = 0.0, None
+            for d in n.deps:
+                if finish[d] > start:
+                    start, pred = finish[d], d
+            finish[i] = start + durations.get(i, 0.0)
+            best_pred[i] = pred
+        end = max(finish, key=finish.get)  # type: ignore[arg-type]
+        path = [end]
+        while best_pred[path[-1]] is not None:
+            path.append(best_pred[path[-1]])  # type: ignore[arg-type]
+        return finish[end], tuple(reversed(path))
+
+    def levels(self) -> list[list[str]]:
+        """Antichains of tasks that may run concurrently (fan-out view)."""
+        depth: dict[str, int] = {}
+        for i in self._topo:
+            n = self.nodes[i]
+            depth[i] = 1 + max((depth[d] for d in n.deps), default=-1)
+        out: dict[int, list[str]] = {}
+        for i, d in depth.items():
+            out.setdefault(d, []).append(i)
+        return [sorted(out[d]) for d in sorted(out)]
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def __iter__(self):
+        return iter(self._topo)
+
+    def to_json(self) -> list[dict[str, Any]]:
+        return [{"id": n.id, "agent": n.agent, "deps": list(n.deps),
+                 "description": n.description, "work_items": n.work_items}
+                for n in (self.nodes[i] for i in self._topo)]

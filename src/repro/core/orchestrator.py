@@ -1,0 +1,189 @@
+"""Job decomposition + task->agent mapping (paper §3.2).
+
+Two planners behind one interface:
+
+- ``RulePlanner`` — deterministic: keyword/schema matching over the agent
+  library, dataflow edges derived from interface produces/consumes types.
+  This is the offline stand-in for the paper's orchestrator LLM (DESIGN.md
+  §5.3 records the substitution; the paper itself measures DAG creation at
+  <1% of workflow time, so the swap does not distort the evaluation).
+- ``LLMPlanner`` — the paper's NVLM/ReAct protocol: agent library via system
+  prompt, task descriptions via user prompt, JSON DAG back. Takes any
+  ``llm_fn(system, user) -> str`` (tests inject a fake; production would bind
+  a served model from the zoo).
+
+Both emit toolcalls in the paper's format, e.g.
+``FrameExtractor(end_time=60, file='cats.mov', num_frames=10, start_time=0)``.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+from .agents import AgentLibrary
+from .dag import DAG, TaskNode
+from .workflow import Job, VideoInput
+
+# Default NL decomposition templates per job genre (RulePlanner fallback when
+# the job gives no sub-task hints). Mirrors paper Listing 2's t1..t3 plus the
+# aggregation stages of the evaluated workflow (summarize + embed).
+_VIDEO_TASKS = (
+    "Extract frames from each video",
+    "Run speech-to-text on all scenes",
+    "Detect objects in the frames",
+)
+_AGGREGATE_TASKS = (
+    "Summarize each scene using the gathered context",
+    "Embed the summaries into the vector database",
+)
+
+
+def _scenes(inputs: Sequence) -> tuple[int, int]:
+    """(total scenes, frames per scene) across the job's video inputs."""
+    vids = [v for v in inputs if isinstance(v, VideoInput)]
+    if not vids:
+        return 1, 1
+    return (sum(v.scenes for v in vids),
+            max(v.frames_per_scene for v in vids))
+
+
+class RulePlanner:
+    """Deterministic job -> DAG lowering via the agent library."""
+
+    # per-frame summarize context: frame caption + objects + transcript chunk
+    SUMM_TOKENS_IN = 900
+    SUMM_TOKENS_OUT = 120
+
+    def __init__(self, library: AgentLibrary):
+        self.library = library
+
+    def decompose(self, job: Job) -> list[str]:
+        """Job description -> NL sub-tasks (hints kept if sufficient)."""
+        tasks = list(job.tasks)
+        if not tasks:
+            tasks = list(_VIDEO_TASKS)
+        # ensure the job's deliverable is produced: aggregation stages
+        mapped = {self.library.match_interface(t) for t in tasks}
+        for extra in _AGGREGATE_TASKS:
+            if self.library.match_interface(extra) not in mapped:
+                tasks.append(extra)
+                mapped.add(self.library.match_interface(extra))
+        return tasks
+
+    def lower(self, job: Job) -> DAG:
+        tasks = self.decompose(job)
+        scenes, fps = _scenes(job.inputs)
+        nodes: list[TaskNode] = []
+        produced: dict[str, str] = {}         # dataflow type -> producer id
+        for i, text in enumerate(tasks):
+            iface_name = self.library.match_interface(text)
+            if iface_name is None:
+                raise ValueError(
+                    f"no agent in the library matches task {text!r}")
+            iface = self.library.interfaces[iface_name]
+            deps = tuple(produced[c] for c in iface.consumes if c in produced)
+            tid = f"t{i}_{iface_name}"
+            work_items = scenes * fps if iface_name == "summarize" else scenes
+            tok_in = self.SUMM_TOKENS_IN if iface_name in ("summarize", "qa") \
+                else 0
+            tok_out = self.SUMM_TOKENS_OUT if iface_name in ("summarize", "qa") \
+                else 0
+            nodes.append(TaskNode(
+                id=tid, description=text, agent=iface_name, deps=deps,
+                args=self.toolcall_args(iface_name, job),
+                work_items=work_items, chunkable=True,
+                tokens_in=tok_in, tokens_out=tok_out))
+            produced[iface.produces] = tid
+        return DAG(nodes)
+
+    def toolcall_args(self, iface: str, job: Job) -> dict:
+        vids = [v for v in job.inputs if isinstance(v, VideoInput)]
+        first = vids[0] if vids else VideoInput("input")
+        if iface == "frame_extract":
+            return {"file": first.name, "start_time": 0,
+                    "end_time": int(first.duration_s),
+                    "num_frames": first.frames_per_scene}
+        if iface == "speech_to_text":
+            return {"file": first.name, "language": "en"}
+        if iface == "object_detect":
+            return {"frames": "$frames", "labels": "auto"}
+        if iface == "summarize":
+            return {"context": "$frames+$objects+$transcript",
+                    "max_tokens": self.SUMM_TOKENS_OUT}
+        if iface == "embed":
+            return {"texts": "$summary"}
+        if iface == "qa":
+            return {"question": job.description, "top_k": 5}
+        return {}
+
+    def toolcalls(self, dag: DAG) -> dict[str, str]:
+        return {tid: self.library.toolcall(dag.nodes[tid].agent,
+                                           dag.nodes[tid].args)
+                for tid in dag.topo_order}
+
+
+# ---------------------------------------------------------------------------
+# LLM planner (the paper's protocol, pluggable model)
+# ---------------------------------------------------------------------------
+
+_SYSTEM_TMPL = """You are a workflow orchestrator (ReAct). Available agents:
+{agents}
+Decompose the user's job into tasks, one agent each. Respond with JSON:
+{{"tasks": [{{"id": str, "agent": str, "description": str,
+             "deps": [str], "args": {{...}}}}]}}"""
+
+
+@dataclass
+class LLMPlanner:
+    """ReAct-style decomposition through an LLM (paper §3.2).
+
+    ``llm_fn(system_prompt, user_prompt) -> str`` is any text-completion
+    callable — a zoo model served by the runtime, or a test fake. Falls back
+    to ``RulePlanner`` output validation: whatever the LLM returns must parse
+    into a valid DAG over known agents.
+    """
+
+    library: AgentLibrary
+    llm_fn: Callable[[str, str], str]
+
+    def system_prompt(self) -> str:
+        lines = [f"- {i.name}({', '.join(i.schema)}): {i.description} "
+                 f"[consumes: {','.join(i.consumes) or '-'}; "
+                 f"produces: {i.produces}]"
+                 for i in self.library.interfaces.values()]
+        return _SYSTEM_TMPL.format(agents="\n".join(lines))
+
+    def lower(self, job: Job) -> DAG:
+        user = job.description
+        if job.tasks:
+            user += "\nSub-tasks: " + "; ".join(job.tasks)
+        raw = self.llm_fn(self.system_prompt(), user)
+        spec = json.loads(raw)
+        scenes, fps = _scenes(job.inputs)
+        nodes = []
+        for t in spec["tasks"]:
+            if t["agent"] not in self.library.interfaces:
+                raise ValueError(f"LLM mapped to unknown agent {t['agent']!r}")
+            items = scenes * fps if t["agent"] == "summarize" else scenes
+            nodes.append(TaskNode(
+                id=t["id"], description=t.get("description", ""),
+                agent=t["agent"], deps=tuple(t.get("deps", ())),
+                args=t.get("args", {}), work_items=items, chunkable=True,
+                tokens_in=RulePlanner.SUMM_TOKENS_IN
+                if t["agent"] in ("summarize", "qa") else 0,
+                tokens_out=RulePlanner.SUMM_TOKENS_OUT
+                if t["agent"] in ("summarize", "qa") else 0))
+        return DAG(nodes)
+
+
+def dag_creation_overhead(dag: DAG, makespan_s: float,
+                          llm_latency_s: float = 0.15) -> float:
+    """Fraction of workflow time spent on DAG creation (paper §3.3b: <1%).
+
+    One short-in/short-out LLM query per task node.
+    """
+    if makespan_s <= 0:
+        return math.inf
+    return len(dag) * llm_latency_s / makespan_s

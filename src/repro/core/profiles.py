@@ -1,0 +1,122 @@
+"""Execution profiles: (implementation x hardware) efficiency/quality records.
+
+The paper (§3.2 Model/Tool Selection): "Murakkab generates an execution
+profile for each model/tool and hardware resource pair when a new one is
+added to the library — the profile captures an efficiency vs quality
+tradeoff."
+
+Here a profile is generated analytically from the same three-term roofline
+the perf analysis uses (DESIGN.md §5.4): latency = max(compute, memory,
+collective) over the implementation's workload model and the device's specs.
+Measured calibration points (e.g. the paper-cluster Whisper timings in
+``configs/workflow_video.py``) can be *pinned* and take precedence — that is
+the moral equivalent of the paper's offline profiling runs, amortized across
+workflows.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .agents import AgentImpl, AgentLibrary, Work
+from .energy import CATALOG, DeviceSpec, roofline_latency
+
+
+@dataclass(frozen=True)
+class Profile:
+    """One (impl, device SKU, device count) profile row."""
+
+    impl: str
+    device: str
+    n_devices: int
+    latency_s: float          # per work-item
+    energy_j: float           # marginal (above idle) energy per work-item
+    usd: float                # $ per work-item
+    quality: float
+    pinned: bool = False      # measured (calibrated) vs analytic
+
+
+class ProfileStore:
+    """Profile generation + pinned calibration overrides."""
+
+    def __init__(self, library: AgentLibrary):
+        self.library = library
+        # (impl, device, n_devices) -> (latency_s per item, power_frac)
+        self._pinned: dict[tuple[str, str, int], tuple[float, float]] = {}
+
+    # -- calibration ---------------------------------------------------------
+    def pin(self, impl: str, device: str, n_devices: int, latency_s: float,
+            power_frac: float | None = None):
+        imp = self.library.impls[impl]
+        pf = imp.power_frac if power_frac is None else power_frac
+        self._pinned[(impl, device, n_devices)] = (latency_s, pf)
+
+    # -- queries --------------------------------------------------------------
+    def latency(self, impl: AgentImpl, spec: DeviceSpec, n_devices: int,
+                work: Work) -> float:
+        """Per-work-item latency for one instance of ``n_devices``."""
+        key = (impl.name, spec.name, n_devices)
+        if key in self._pinned:
+            return self._pinned[key][0]
+        # nearest pinned device-count, strong-scaled (90% efficiency/doubling)
+        cands = [(n, v) for (i, d, n), v in self._pinned.items()
+                 if i == impl.name and d == spec.name]
+        if cands:
+            n0, (lat0, _) = min(cands, key=lambda c: abs(
+                math.log(c[0] / max(n_devices, 1))))
+            scale = (n0 / n_devices) ** 0.9
+            return lat0 * scale
+        return impl.overhead_s + roofline_latency(
+            work.flops, work.hbm_bytes, spec, n_devices=n_devices,
+            collective_bytes=work.coll_bytes,
+            efficiency=impl.mxu_efficiency)
+
+    def pinned_counts(self, impl_name: str, device: str) -> list[int]:
+        """Profiled device counts for (impl, device). When non-empty, the
+        scheduler selects among exactly these configurations — the paper's
+        semantics: selection happens over the profile library."""
+        return sorted(n for (i, d, n) in self._pinned
+                      if i == impl_name and d == device)
+
+    def power_frac(self, impl: AgentImpl, spec: DeviceSpec,
+                   n_devices: int) -> float:
+        key = (impl.name, spec.name, n_devices)
+        if key in self._pinned:
+            return self._pinned[key][1]
+        return impl.power_frac
+
+    def profile(self, impl_name: str, device: str, n_devices: int,
+                tokens_in: int = 1024, tokens_out: int = 256) -> Profile:
+        impl = self.library.impls[impl_name]
+        spec = CATALOG[device]
+        work = impl.work_fn(tokens_in, tokens_out)
+        lat = self.latency(impl, spec, n_devices, work)
+        pf = self.power_frac(impl, spec, n_devices)
+        energy = lat * n_devices * pf * (spec.active_w - spec.idle_w)
+        usd = lat * n_devices / 3600.0 * spec.usd_per_hour
+        return Profile(impl=impl_name, device=device, n_devices=n_devices,
+                       latency_s=lat, energy_j=energy, usd=usd,
+                       quality=impl.quality,
+                       pinned=(impl_name, device, n_devices) in self._pinned)
+
+    # -- the "profile everything on add" sweep --------------------------------
+    def profile_table(self, devices: dict[str, list[int]],
+                      tokens_in: int = 1024, tokens_out: int = 256) \
+            -> list[Profile]:
+        """Profiles for every (impl x compatible device x count) pair.
+
+        ``devices``: device-SKU name -> candidate device counts.
+        """
+        rows: list[Profile] = []
+        for impl in self.library.impls.values():
+            for dev, counts in devices.items():
+                spec = CATALOG[dev]
+                if spec.kind not in impl.hw_kinds:
+                    continue
+                lo = impl.min_devices.get(spec.kind, 1)
+                hi = impl.max_devices.get(spec.kind, max(counts))
+                for n in counts:
+                    if lo <= n <= hi:
+                        rows.append(self.profile(impl.name, dev, n,
+                                                 tokens_in, tokens_out))
+        return rows

@@ -1,0 +1,269 @@
+"""Adaptive scheduling: the Table-1 levers + greedy hierarchical search.
+
+For every task the scheduler chooses a configuration over the paper's levers:
+
+  ========================  =======================================
+  Paper lever (Table 1)     ``TaskConfig`` field
+  ========================  =======================================
+  GPU generation            ``pool`` (device SKU of the pool)
+  CPU vs GPU                ``pool`` (kind)
+  Task parallelism          ``n_instances`` (fan-out), ``batch``
+  Execution paths           ``paths`` (top-k parallel reasoning)
+  Model/tool                ``impl``
+  ========================  =======================================
+
+The search space explodes combinatorially (paper §3.3c), so selection is a
+greedy *hierarchy of optimization functions*: (1) implementation by quality
+gate + constraint preference, (2) hardware/device-count by the constraint
+objective, (3) parallelism given real-time free resources from the cluster
+manager. Constraints compare lexicographically in 5%-tolerance bands, so a
+secondary objective breaks near-ties of the primary one.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+
+from .agents import AgentImpl, AgentLibrary
+from .cluster import ClusterManager
+from .dag import DAG, TaskNode
+from .energy import CATALOG
+from .profiles import ProfileStore
+from .workflow import Constraint
+
+
+@dataclass(frozen=True)
+class TaskConfig:
+    """One fully-resolved execution configuration for a task."""
+
+    impl: str
+    pool: str
+    n_devices: int                # per instance
+    n_instances: int = 1          # fan-out across instances
+    batch: int = 1                # items co-scheduled per step
+    paths: int = 1                # parallel execution paths (CoT top-k)
+    # estimates (filled by the scheduler; simulator recomputes actuals)
+    est_latency_s: float = 0.0
+    est_energy_j: float = 0.0
+    est_usd: float = 0.0
+    est_power_w: float = 0.0      # marginal draw while running
+    quality: float = 1.0
+    warm: bool = False            # a warm instance was available
+
+    def with_(self, **kw) -> "TaskConfig":
+        return replace(self, **kw)
+
+
+@dataclass
+class ExecutionPlan:
+    configs: dict[str, TaskConfig] = field(default_factory=dict)
+
+    def __getitem__(self, tid: str) -> TaskConfig:
+        return self.configs[tid]
+
+    def total_quality(self, dag: DAG) -> float:
+        """End-to-end quality = product over stages (cascading effects)."""
+        q = 1.0
+        for tid in dag.topo_order:
+            q *= self.configs[tid].quality
+        return q
+
+    def report(self, dag: DAG) -> dict:
+        lat = {tid: c.est_latency_s for tid, c in self.configs.items()}
+        cp, path = dag.critical_path(lat)
+        return {
+            "critical_path_s": cp,
+            "critical_path": path,
+            "est_energy_j": sum(c.est_energy_j
+                                for c in self.configs.values()),
+            "est_usd": sum(c.est_usd for c in self.configs.values()),
+            "quality": self.total_quality(dag),
+        }
+
+
+def _pow2_range(lo: int, hi: int) -> list[int]:
+    out, n = [], 1
+    while n <= hi:
+        if n >= lo:
+            out.append(n)
+        n *= 2
+    return out or [lo]
+
+
+class Scheduler:
+    def __init__(self, library: AgentLibrary, profiles: ProfileStore,
+                 cluster: ClusterManager):
+        self.library = library
+        self.profiles = profiles
+        self.cluster = cluster
+        self.evals = 0          # estimate() calls (greedy-search footprint)
+
+    # -- estimation ------------------------------------------------------------
+    def estimate(self, node: TaskNode, impl: AgentImpl, pool: str,
+                 n_devices: int, n_instances: int = 1, batch: int = 1,
+                 paths: int = 1, warm: bool = False) -> TaskConfig:
+        self.evals += 1
+        spec = CATALOG[self.cluster.pools[pool].device]
+        work = impl.work_fn(node.tokens_in, node.tokens_out)
+        per_item = self.profiles.latency(impl, spec, n_devices, work)
+        if spec.kind == "cpu":
+            batch = 1     # batching is an accelerator lever (weights reuse)
+        items_per_inst = math.ceil(node.work_items / n_instances)
+        steps = math.ceil(items_per_inst / batch)
+        compute = steps * per_item * batch ** impl.batch_alpha
+        lat = compute if warm else compute + impl.load_time_s
+        pf = self.profiles.power_frac(impl, spec, n_devices)
+        # active energy/$ accrue over compute time; weight-loading is an
+        # idle-power period (covered by the pool idle floor).
+        dev_s = compute * n_devices * n_instances * paths
+        energy = dev_s * pf * (spec.active_w - spec.idle_w)
+        usd = dev_s / 3600.0 * spec.usd_per_hour
+        power = n_devices * n_instances * paths * pf * \
+            (spec.active_w - spec.idle_w)
+        q = 1.0 - (1.0 - impl.quality) ** paths
+        return TaskConfig(impl=impl.name, pool=pool, n_devices=n_devices,
+                          n_instances=n_instances, batch=batch, paths=paths,
+                          est_latency_s=lat, est_energy_j=energy,
+                          est_usd=usd, est_power_w=power, quality=q,
+                          warm=warm)
+
+    # -- constraint comparison ---------------------------------------------------
+    @staticmethod
+    def _objective(cfg: TaskConfig, c: Constraint) -> float:
+        return {
+            Constraint.MIN_COST: cfg.est_usd,
+            Constraint.MIN_ENERGY: cfg.est_energy_j,
+            Constraint.MIN_LATENCY: cfg.est_latency_s,
+            Constraint.MAX_QUALITY: -cfg.quality,
+        }[c]
+
+    @classmethod
+    def _key(cls, cfg: TaskConfig, order: tuple[Constraint, ...]) -> tuple:
+        """Lexicographic in 5% bands: primary banded, then secondaries."""
+        key: list[float] = []
+        for i, c in enumerate(order):
+            v = cls._objective(cfg, c)
+            if i < len(order) - 1:
+                v = 0.0 if v <= 0 else round(math.log(max(v, 1e-12), 1.05))
+            key.append(v)
+        # final universal tie-breaks: latency, then $.
+        key += [cfg.est_latency_s, cfg.est_usd]
+        return tuple(key)
+
+    # -- the greedy hierarchical search -------------------------------------------
+    def plan_task(self, node: TaskNode, order: tuple[Constraint, ...],
+                  quality_floor: float | dict) -> TaskConfig:
+        impls = self.library.impls_for(node.agent)
+        if not impls:
+            raise ValueError(f"no implementation for agent {node.agent!r}")
+        floor = (quality_floor.get(node.agent, 0.0)
+                 if isinstance(quality_floor, dict) else quality_floor)
+
+        # Level 1 — implementation: quality gate, then constraint preference.
+        ok = [i for i in impls if i.quality >= floor] or \
+            [max(impls, key=lambda i: i.quality)]
+        if order[0] is Constraint.MAX_QUALITY:
+            cand_impls = sorted(ok, key=lambda i: -i.quality)[:2]
+        else:
+            cand_impls = ok  # defer to the objective over hw configs
+
+        stats = self.cluster.stats()
+
+        # Level 2 — hardware + device count per candidate implementation.
+        def search(cands) -> TaskConfig | None:
+            best: TaskConfig | None = None
+            for impl in cands:
+                for pool_name, st in stats.items():
+                    if st["kind"] not in impl.hw_kinds:
+                        continue
+                    cap = self.cluster.pools[pool_name].capacity
+                    lo = impl.min_devices.get(st["kind"], 1)
+                    hi = min(impl.max_devices.get(st["kind"], cap), cap)
+                    if lo > hi:
+                        continue
+                    warm = any(inst.impl == impl.name
+                               and inst.pool == pool_name
+                               for inst in self.cluster.instances)
+                    device = self.cluster.pools[pool_name].device
+                    counts = [n for n in self.profiles.pinned_counts(
+                                  impl.name, device) if lo <= n <= cap]                         or _pow2_range(lo, hi)
+                    for n in counts:
+                        cfg = self.estimate(node, impl, pool_name, n,
+                                            warm=warm)
+                        if best is None or self._key(cfg, order) < \
+                                self._key(best, order):
+                            best = cfg
+            return best
+
+        best = search(cand_impls)
+        if best is None:   # quality-gated impls don't fit this cluster
+            best = search(sorted(impls, key=lambda i: -i.quality))
+        if best is None:
+            raise ValueError(
+                f"no (pool x devices) fits agent {node.agent!r}; "
+                f"pools: {list(stats)}")
+
+        # Level 3 — parallelism levers, given free resources right now.
+        impl = self.library.impls[best.impl]
+        st = stats[best.pool]
+        free_inst = max(st["free"] // best.n_devices, 1)
+        if impl.max_batch > 1:   # batching: fewer steps, ~free energy win
+            b = min(impl.max_batch, node.work_items)
+            cand = self.estimate(node, impl, best.pool, best.n_devices,
+                                 best.n_instances, b, warm=best.warm)
+            if self._key(cand, order) < self._key(best, order):
+                best = cand
+        if node.chunkable and node.work_items > 1:
+            for k in _pow2_range(2, min(free_inst, node.work_items)):
+                cand = self.estimate(node, impl, best.pool, best.n_devices,
+                                     k, best.batch, warm=best.warm)
+                if self._key(cand, order) < self._key(best, order):
+                    best = cand
+        # Execution paths: only under MAX_QUALITY, only on harvestable slack.
+        if order[0] is Constraint.MAX_QUALITY:
+            harvest = st["harvestable"] // max(
+                best.n_devices * best.n_instances, 1)
+            for p in (2, 4):
+                if p - 1 > harvest:
+                    break
+                cand = self.estimate(node, impl, best.pool, best.n_devices,
+                                     best.n_instances, best.batch, paths=p,
+                                     warm=best.warm)
+                if self._key(cand, order) < self._key(best, order):
+                    best = cand
+        return best
+
+    def plan(self, dag: DAG, order: tuple[Constraint, ...],
+             quality_floor: float | dict = 0.85) -> ExecutionPlan:
+        plan = ExecutionPlan()
+        for tid in dag.topo_order:
+            plan.configs[tid] = self.plan_task(dag.nodes[tid], order,
+                                               quality_floor)
+        return plan
+
+    # -- pinned plans (imperative baseline) -----------------------------------------
+    def pin(self, node: TaskNode, impl_name: str, pool: str,
+            n_devices: int) -> TaskConfig:
+        """Fixed configuration: no levers (paper Listing-1 semantics)."""
+        impl = self.library.impls[impl_name]
+        return self.estimate(node, impl, pool, n_devices, n_instances=1,
+                             batch=1, paths=1, warm=False)
+
+    def search_space_size(self, node: TaskNode) -> int:
+        """|configs| the full cross-product would visit (overheads bench)."""
+        total = 0
+        stats = self.cluster.stats()
+        for impl in self.library.impls_for(node.agent):
+            for pool_name, st in stats.items():
+                if st["kind"] not in impl.hw_kinds:
+                    continue
+                cap = self.cluster.pools[pool_name].capacity
+                lo = impl.min_devices.get(st["kind"], 1)
+                hi = min(impl.max_devices.get(st["kind"], cap), cap)
+                if lo > hi:
+                    continue
+                nd = len(_pow2_range(lo, hi))
+                ni = len(_pow2_range(1, max(node.work_items, 1)))
+                nb = len(_pow2_range(1, max(impl.max_batch, 1)))
+                total += nd * ni * nb * 3   # 3 = paths in {1,2,4}
+        return total

@@ -1,0 +1,294 @@
+"""Discrete-event execution engine over the modeled cluster.
+
+Runs one or many workflows (DAG + ExecutionPlan) against the cluster
+manager's pools: list-scheduling with dependency and capacity constraints,
+warm-instance reuse, cold-start (weights-load) latencies, and energy/$
+integration via ``EnergyLedger``. Produces per-task traces — the Fig-3
+artifact — and is the scale path (a 1000-node cluster is just bigger pool
+capacities; the engine is O(events log events)).
+
+Semantics notes:
+- A *model* implementation (``load_time_s > 0`` or zoo-backed) executes on
+  persistent warm instances; first use pays the load. Tools alloc/release
+  per task.
+- If fewer than ``n_instances`` instances fit right now, the task degrades
+  gracefully to what fits (>=1) rather than deadlocking; if none fit, it
+  waits for the next completion event.
+- Energy: active increments per task; the idle floor for every metered pool
+  is integrated over the makespan at ``finalize`` (paper Table-2 semantics).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+
+from .agents import AgentLibrary
+from .cluster import ClusterManager, Instance, Lease
+from .dag import DAG
+from .energy import CATALOG, EnergyLedger
+from .profiles import ProfileStore
+from .scheduler import ExecutionPlan, TaskConfig
+
+
+@dataclass(frozen=True)
+class TraceEntry:
+    workflow: str
+    task: str
+    impl: str
+    pool: str
+    devices: int              # total devices (n_devices * n_instances)
+    start: float
+    end: float
+    note: str = ""
+
+
+@dataclass
+class SimReport:
+    makespan_s: float
+    energy_wh: float
+    active_wh: float
+    idle_wh: float
+    usd: float
+    trace: list[TraceEntry]
+    per_workflow: dict[str, dict]
+    pool_busy_device_s: dict[str, float]
+    preemptions: int = 0
+
+    def workflow_span(self, wf: str) -> float:
+        return self.per_workflow[wf]["finish"] - self.per_workflow[wf]["start"]
+
+
+@dataclass
+class _WfState:
+    dag: DAG
+    plan: ExecutionPlan
+    arrival: float
+    done: set[str] = field(default_factory=set)
+    started: set[str] = field(default_factory=set)
+    finish: float = 0.0
+
+
+class Simulator:
+    def __init__(self, cluster: ClusterManager, library: AgentLibrary,
+                 profiles: ProfileStore):
+        self.cluster = cluster
+        self.library = library
+        self.profiles = profiles
+
+    # -- duration under actual warmth ------------------------------------------
+    def _duration(self, node, cfg: TaskConfig, n_inst: int,
+                  new_instances: int) -> float:
+        impl = self.library.impls[cfg.impl]
+        spec = CATALOG[self.cluster.pools[cfg.pool].device]
+        work = impl.work_fn(node.tokens_in, node.tokens_out)
+        per_item = self.profiles.latency(impl, spec, cfg.n_devices, work)
+        batch = 1 if spec.kind == "cpu" else cfg.batch
+        items = math.ceil(node.work_items / max(n_inst, 1))
+        steps = math.ceil(items / batch)
+        compute = steps * per_item * batch ** impl.batch_alpha
+        lat = compute
+        if new_instances and not cfg.warm:
+            # cfg.warm = provisioned capacity (PTU-style): always-on, no load
+            lat += impl.load_time_s
+        return lat, compute
+
+    def _is_model(self, impl) -> bool:
+        return impl.load_time_s > 0 or impl.arch is not None
+
+    # -- engine ------------------------------------------------------------------
+    def run(self, workflows: dict[str, tuple[DAG, ExecutionPlan, float]],
+            log: list | None = None) -> SimReport:
+        wfs = {wid: _WfState(dag, plan, arrival)
+               for wid, (dag, plan, arrival) in workflows.items()}
+        for wid, st in wfs.items():
+            self.cluster.register_workflow(wid, st.dag)
+
+        ledger = EnergyLedger()
+        trace: list[TraceEntry] = []
+        busy: dict[str, float] = {}
+        events: list[tuple[float, int, str, str, list[Lease],
+                           list[Instance]]] = []
+        ctr = itertools.count()
+        for wid, st in wfs.items():
+            heapq.heappush(events, (st.arrival, next(ctr), "arrive", wid,
+                                    [], []))
+        t = 0.0
+
+        def ready_tasks():
+            out = []
+            for wid, st in sorted(wfs.items(),
+                                  key=lambda kv: kv[1].arrival):
+                if t < st.arrival:
+                    continue
+                for tid in st.dag.topo_order:
+                    if tid in st.done or tid in st.started:
+                        continue
+                    if all(d in st.done for d in st.dag.nodes[tid].deps):
+                        out.append((wid, tid))
+            return out
+
+        def try_start(wid: str, tid: str) -> bool:
+            st = wfs[wid]
+            node = st.dag.nodes[tid]
+            cfg = st.plan[tid]
+            impl = self.library.impls[cfg.impl]
+            spec = CATALOG[self.cluster.pools[cfg.pool].device]
+            leases: list[Lease] = []
+            insts: list[Instance] = []
+            new_inst = 0
+            # degrade configs planned for a larger cluster (elasticity)
+            cap = self.cluster.pools[cfg.pool].capacity
+            if cfg.n_devices > cap:
+                lo = impl.min_devices.get(spec.kind, 1)
+                n = 1
+                while n * 2 <= cap:
+                    n *= 2
+                if n < lo:
+                    raise RuntimeError(
+                        f"{cfg.impl} needs >= {lo} {spec.kind} devices; "
+                        f"pool {cfg.pool} has {cap}")
+                cfg = cfg.with_(n_devices=n, n_instances=1)
+                st.plan.configs[tid] = cfg
+
+            def _alloc_or_evict(n):
+                lease = self.cluster.alloc(cfg.pool, n, t)
+                if lease is None:
+                    # evict idle warm instances of *other* impls (LRU)
+                    idle = sorted(
+                        (i for i in self.cluster.instances
+                         if i.pool == cfg.pool and i.busy_until <= t
+                         and i.impl != cfg.impl),
+                        key=lambda i: i.warm_since)
+                    for victim in idle:
+                        self.cluster.evict_instance(victim, t)
+                        lease = self.cluster.alloc(cfg.pool, n, t)
+                        if lease is not None:
+                            break
+                return lease
+
+            if self._is_model(impl):
+                # reuse idle warm instances on the right pool/size first
+                avail = [i for i in self.cluster.instances
+                         if i.impl == cfg.impl and i.pool == cfg.pool
+                         and i.n_devices == cfg.n_devices
+                         and i.busy_until <= t]
+                insts = avail[:cfg.n_instances]
+                while len(insts) < cfg.n_instances:
+                    lease = _alloc_or_evict(cfg.n_devices)
+                    if lease is None:
+                        break
+                    inst = Instance(cfg.impl, cfg.pool, cfg.n_devices,
+                                    warm_since=t, lease=lease)
+                    self.cluster.add_instance(inst)
+                    insts.append(inst)
+                    new_inst += 1
+                if not insts:
+                    return False
+                n_inst = len(insts)
+            else:
+                total = cfg.n_devices * cfg.n_instances
+                lease = self.cluster.alloc(cfg.pool, total, t)
+                n_inst = cfg.n_instances
+                if lease is None:
+                    lease = _alloc_or_evict(cfg.n_devices)
+                    n_inst = 1
+                    if lease is None:
+                        return False
+                leases.append(lease)
+
+            dur, compute = self._duration(node, cfg, n_inst, new_inst)
+            dur *= cfg.paths if cfg.paths > 1 and not node.chunkable else 1.0
+            end = t + dur
+            for inst in insts:
+                inst.busy_until = end
+            ndev = cfg.n_devices * n_inst
+            dev_s = compute * ndev * cfg.paths
+            pf = self.profiles.power_frac(impl, spec, cfg.n_devices)
+            ledger.charge_active(spec, dev_s, utilization=pf, pool=cfg.pool)
+            busy[cfg.pool] = busy.get(cfg.pool, 0.0) + dev_s
+            st.started.add(tid)
+            trace.append(TraceEntry(wid, tid, cfg.impl, cfg.pool, ndev, t,
+                                    end,
+                                    note="cold" if new_inst else
+                                    ("warm" if insts else "")))
+            heapq.heappush(events, (end, next(ctr), "finish", f"{wid}|{tid}",
+                                    leases, []))
+            if log is not None:
+                log.append(f"[{t:8.1f}s] start {wid}:{tid} on "
+                           f"{ndev}x{cfg.pool} ({cfg.impl})")
+            return True
+
+        while events:
+            t, _, kind, key, leases, _ = heapq.heappop(events)
+            if kind == "finish":
+                wid, tid = key.split("|")
+                st = wfs[wid]
+                st.done.add(tid)
+                st.finish = max(st.finish, t)
+                self.cluster.complete_task(wid, tid)
+                for lease in leases:
+                    # model instances keep their devices (stay warm); tools
+                    # release. Instance devices are reclaimed by rebalance.
+                    impl = self.library.impls[st.plan[tid].impl]
+                    if not self._is_model(impl):
+                        self.cluster.release(lease, t)
+                # workflow-aware reclamation once demand disappears
+                for action in self.cluster.rebalance(self.library, t):
+                    if log is not None:
+                        log.append(f"[{t:8.1f}s] rebalance: {action}")
+            # start whatever is now ready and fits
+            progress = True
+            while progress:
+                progress = False
+                for wid, tid in ready_tasks():
+                    if try_start(wid, tid):
+                        progress = True
+
+        stuck = [(wid, tid) for wid, s in wfs.items()
+                 for tid in s.dag.nodes
+                 if tid not in s.done]
+        if stuck:
+            raise RuntimeError(f"deadlocked tasks (resources never fit): "
+                               f"{stuck[:8]}")
+        makespan = max((st.finish for st in wfs.values()), default=0.0)
+        # instances still holding devices release at makespan (accounted as
+        # idle power via the pool floor below).
+        for pool, p in self.cluster.pools.items():
+            spec = p.spec
+            ledger.charge_idle(spec, p.capacity, makespan)
+
+        per_wf = {wid: {"start": st.arrival, "finish": st.finish,
+                        "tasks": len(st.dag)}
+                  for wid, st in wfs.items()}
+        return SimReport(
+            makespan_s=makespan,
+            energy_wh=ledger.wh,
+            active_wh=ledger.active_joules / 3600.0,
+            idle_wh=ledger.idle_joules / 3600.0,
+            usd=ledger.usd,
+            trace=sorted(trace, key=lambda e: e.start),
+            per_workflow=per_wf,
+            pool_busy_device_s=busy,
+            preemptions=self.cluster.preemptions,
+        )
+
+
+def render_trace(report: SimReport, width: int = 72) -> str:
+    """ASCII Fig-3-style execution trace."""
+    if not report.trace:
+        return "(empty trace)"
+    span = max(report.makespan_s, 1e-9)
+    lines = [f"{'task':<28s} {'pool':<10s} {'t':>7s}  timeline"]
+    for e in report.trace:
+        a = int(e.start / span * width)
+        b = max(int(e.end / span * width), a + 1)
+        bar = " " * a + "#" * (b - a)
+        lines.append(f"{e.workflow + ':' + e.task:<28.28s} {e.pool:<10.10s} "
+                     f"{e.end - e.start:7.1f}  |{bar:<{width}s}|")
+    lines.append(f"makespan={report.makespan_s:.1f}s "
+                 f"energy={report.energy_wh:.1f}Wh "
+                 f"(active {report.active_wh:.1f} + idle {report.idle_wh:.1f})"
+                 f" cost=${report.usd:.2f}")
+    return "\n".join(lines)

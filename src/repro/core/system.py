@@ -1,0 +1,180 @@
+"""Murakkab: the integrated system facade (Fig. 2).
+
+Wires the agent library, profile store, cluster manager, planner, scheduler
+and execution engine together. One object owns both halves the paper says
+must talk: the *workflow orchestrator* (planner + scheduler) and the
+*cluster manager* — DAGs flow down, utilization stats flow up.
+
+    system = Murakkab.paper_cluster()
+    result = Job(description=..., inputs=videos,
+                 constraints=MIN_COST).execute(system)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .agents import AgentLibrary, default_library
+from .cluster import ClusterManager, Instance, Pool
+from .dag import DAG
+from .orchestrator import RulePlanner
+from .profiles import ProfileStore
+from .scheduler import ExecutionPlan, Scheduler, TaskConfig
+from .simulator import SimReport, Simulator, render_trace
+from .workflow import (COMPONENT_ALIASES, Constraint, ImperativeWorkflow,
+                       Job, VideoInput)
+
+
+@dataclass
+class JobResult:
+    makespan_s: float
+    energy_wh: float
+    usd: float
+    quality: float
+    dag: DAG
+    plan: ExecutionPlan
+    toolcalls: dict[str, str]
+    sim: SimReport
+    log: list[str] = field(default_factory=list)
+
+    def trace_str(self) -> str:
+        return render_trace(self.sim)
+
+
+class Murakkab:
+    def __init__(self, cluster: ClusterManager,
+                 library: AgentLibrary | None = None,
+                 planner=None):
+        self.library = library or default_library()
+        self.profiles = ProfileStore(self.library)
+        self.cluster = cluster
+        self.planner = planner or RulePlanner(self.library)
+        self.scheduler = Scheduler(self.library, self.profiles, self.cluster)
+
+    # -- cluster factories -------------------------------------------------------
+    @classmethod
+    def paper_cluster(cls, library: AgentLibrary | None = None,
+                      calibrated: bool = True) -> "Murakkab":
+        """The paper's testbed: 2x ND96amsr = 16x A100 + 192 EPYC vCPUs."""
+        cluster = ClusterManager([
+            Pool("gpu", "a100-80g", capacity=16),
+            Pool("cpu", "epyc-7v12-core", capacity=192),
+        ])
+        sys = cls(cluster, library)
+        if calibrated:
+            from ..configs.workflow_video import calibrate_paper_profiles
+            calibrate_paper_profiles(sys.profiles)
+        return sys
+
+    @classmethod
+    def tpu_cluster(cls, v5e: int = 256, v5p: int = 64, v4_harvest: int = 128,
+                    host_cores: int = 512,
+                    library: AgentLibrary | None = None) -> "Murakkab":
+        """Deployment target: TPU pools + CPU hosts + harvestable v4 slices."""
+        cluster = ClusterManager([
+            Pool("v5e", "tpu-v5e", capacity=v5e),
+            Pool("v5p", "tpu-v5p", capacity=v5p),
+            Pool("v4_harvest", "tpu-v4", capacity=v4_harvest,
+                 harvestable=True),
+            Pool("cpu", "host-core", capacity=host_cores),
+        ])
+        return cls(cluster, library)
+
+    def prewarm(self, impl: str, pool: str, n_devices: int, count: int = 1):
+        """Provision warm instances (PTU-style always-on capacity)."""
+        for _ in range(count):
+            lease = self.cluster.alloc(pool, n_devices, t=0.0)
+            if lease is None:
+                raise RuntimeError(f"prewarm {impl}: {pool} pool full")
+            self.cluster.add_instance(Instance(impl, pool, n_devices,
+                                               lease=lease))
+
+    # -- declarative path -----------------------------------------------------------
+    def lower(self, job: Job) -> DAG:
+        return self.planner.lower(job)
+
+    def plan(self, job: Job) -> tuple[DAG, ExecutionPlan]:
+        dag = self.lower(job)
+        plan = self.scheduler.plan(dag, job.constraint_order,
+                                   job.quality_floor)
+        return dag, plan
+
+    def execute(self, job: Job, arrival: float = 0.0) -> JobResult:
+        dag, plan = self.plan(job)
+        return self._run({"job": (dag, plan, arrival)}, dag, plan)
+
+    def execute_many(self, jobs: dict[str, tuple[Job, float]]) -> SimReport:
+        """Multi-tenant submission: {id: (job, arrival_s)}."""
+        wfs = {}
+        for wid, (job, arrival) in jobs.items():
+            dag, plan = self.plan(job)
+            wfs[wid] = (dag, plan, arrival)
+        sim = Simulator(self.cluster, self.library, self.profiles)
+        return sim.run(wfs)
+
+    # -- imperative (baseline) path ----------------------------------------------------
+    def execute_imperative(self, wf: ImperativeWorkflow,
+                           inputs=()) -> JobResult:
+        dag, plan = self.lower_imperative(wf, inputs)
+        return self._run({"baseline": (dag, plan, 0.0)}, dag, plan)
+
+    def lower_imperative(self, wf: ImperativeWorkflow, inputs=()) \
+            -> tuple[DAG, ExecutionPlan]:
+        """Listing-1 semantics: pinned impls/resources, sequential chain."""
+        from .dag import TaskNode
+        scenes = sum(v.scenes for v in inputs
+                     if isinstance(v, VideoInput)) or 1
+        fps = max((v.frames_per_scene for v in inputs
+                   if isinstance(v, VideoInput)), default=1)
+        nodes, plan = [], ExecutionPlan()
+        prev = None
+        for i, comp in enumerate(wf.components()):
+            alias = COMPONENT_ALIASES.get(comp.name.lower())
+            if alias is None:
+                raise KeyError(f"unknown component {comp.name!r}; aliases: "
+                               f"{sorted(COMPONENT_ALIASES)}")
+            iface, impl_name = alias
+            tid = f"c{i}_{iface}"
+            items = scenes * fps if iface == "summarize" else scenes
+            node = TaskNode(
+                id=tid, description=f"{comp.name} ({comp.kind})",
+                agent=iface, deps=(prev,) if prev else (),
+                args=dict(comp.params),
+                work_items=items, chunkable=False,
+                tokens_in=RulePlanner.SUMM_TOKENS_IN
+                if iface in ("summarize", "qa") else 0,
+                tokens_out=RulePlanner.SUMM_TOKENS_OUT
+                if iface in ("summarize", "qa") else 0)
+            nodes.append(node)
+            pool, n = self._resources_to_pool(comp.resources)
+            cfg = self.scheduler.pin(node, impl_name, pool, n)
+            # provisioned capacity (PTUs / pinned GPUs) is always-on => warm
+            plan.configs[tid] = cfg.with_(warm=True)
+            prev = tid
+        return DAG(nodes), plan
+
+    def _resources_to_pool(self, resources: dict) -> tuple[str, int]:
+        for key, n in resources.items():
+            k = key.lower()
+            kind = {"gpus": "gpu", "ptus": "gpu", "cpus": "cpu",
+                    "tpus": "tpu"}.get(k)
+            if kind is None:
+                continue
+            pools = self.cluster.pools_of_kind(kind)
+            if not pools:
+                raise ValueError(f"no pool of kind {kind!r} in cluster")
+            return pools[0].name, int(n)
+        raise ValueError(f"unintelligible resources {resources!r}")
+
+    # -- shared run ------------------------------------------------------------------
+    def _run(self, wfs, dag: DAG, plan: ExecutionPlan) -> JobResult:
+        log: list[str] = []
+        sim = Simulator(self.cluster, self.library, self.profiles)
+        report = sim.run(wfs, log=log)
+        toolcalls = (self.planner.toolcalls(dag)
+                     if hasattr(self.planner, "toolcalls") else {})
+        return JobResult(
+            makespan_s=report.makespan_s,
+            energy_wh=report.energy_wh,
+            usd=report.usd,
+            quality=plan.total_quality(dag),
+            dag=dag, plan=plan, toolcalls=toolcalls, sim=report, log=log)

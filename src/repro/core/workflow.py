@@ -1,0 +1,144 @@
+"""Workflow programming models: declarative (Murakkab) and imperative (baseline).
+
+Paper Listing 2 (declarative)::
+
+    result = Job(description="List objects shown/mentioned in the videos",
+                 inputs=videos, tasks=[t1, t2, t3],
+                 constraints=MIN_COST).execute(system)
+
+Paper Listing 1 (imperative, today's systems)::
+
+    frame_ext = Tool(name="OpenCV", params={"sampling_rate": 15},
+                     resources={"CPUs": 1})
+    stt       = MLModel(name="Whisper", resources={"GPUs": 1})
+    ...
+    result = Workflow(frame_ext >> stt >> obj_det >> summarize)\
+                 .execute(system, inputs=videos)
+
+The imperative path pins model/hardware per component and runs sequentially —
+it exists so the baseline of the paper's evaluation is a first-class citizen
+(the system prompt requires implementing the baseline too).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+
+class Constraint(enum.Enum):
+    MIN_COST = "min_cost"
+    MIN_ENERGY = "min_energy"
+    MIN_LATENCY = "min_latency"
+    MAX_QUALITY = "max_quality"
+
+
+MIN_COST = Constraint.MIN_COST
+MIN_ENERGY = Constraint.MIN_ENERGY
+MIN_LATENCY = Constraint.MIN_LATENCY
+MAX_QUALITY = Constraint.MAX_QUALITY
+
+
+@dataclass(frozen=True)
+class VideoInput:
+    """Synthetic stand-in for an input video file."""
+
+    name: str
+    duration_s: float = 480.0
+    scenes: int = 4                  # OmAgent-style scene segmentation
+    frames_per_scene: int = 10
+
+
+@dataclass(frozen=True)
+class Job:
+    """Declarative job spec (paper Listing 2)."""
+
+    description: str
+    inputs: Sequence[Any] = ()
+    tasks: Sequence[str] = ()        # optional NL sub-task hints
+    constraints: Constraint | Sequence[Constraint] = Constraint.MIN_COST
+    # min acceptable impl quality: one float, or per-interface dict
+    quality_floor: float | dict = 0.85
+
+    @property
+    def constraint_order(self) -> tuple[Constraint, ...]:
+        c = self.constraints
+        return (c,) if isinstance(c, Constraint) else tuple(c)
+
+    def execute(self, system, **kw):
+        """Lower -> schedule -> run on the given Murakkab system."""
+        return system.execute(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Imperative API (Listing 1) — the baseline programming model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Component:
+    """A pinned model/tool with explicit resources (today's style)."""
+
+    name: str
+    kind: str                        # tool | mlmodel | llm
+    params: dict = field(default_factory=dict)
+    resources: dict = field(default_factory=dict)   # {"GPUs": 1} / {"CPUs": 2}
+    key: str = ""                    # provider credential (unused, fidelity)
+    system_prompt: str = ""
+    user_prompt: str = ""
+    _next: "Component | None" = None
+
+    def __rshift__(self, other: "Component") -> "Component":
+        """``a >> b`` chains dataflow (stands in for the paper's ``->``)."""
+        tail = self
+        while tail._next is not None:
+            tail = tail._next
+        tail._next = other
+        return self
+
+    def chain(self) -> list["Component"]:
+        out, cur = [], self
+        while cur is not None:
+            out.append(cur)
+            cur = cur._next
+        return out
+
+
+def Tool(name: str, **kw) -> Component:
+    return Component(name=name, kind="tool", **kw)
+
+
+def MLModel(name: str, **kw) -> Component:
+    return Component(name=name, kind="mlmodel", **kw)
+
+
+def LLM(name: str, **kw) -> Component:
+    return Component(name=name, kind="llm", **kw)
+
+
+# component name -> agent (interface, impl) in the default library
+COMPONENT_ALIASES: dict[str, tuple[str, str]] = {
+    "opencv": ("frame_extract", "opencv"),
+    "whisper": ("speech_to_text", "whisper-large"),
+    "clip": ("object_detect", "clip"),
+    "llama": ("summarize", "nvlm-72b"),     # paper eval runs NVLM here
+    "nvlm": ("summarize", "nvlm-72b"),
+    "nvlm-embed": ("embed", "nvlm-embed"),
+}
+
+
+@dataclass
+class ImperativeWorkflow:
+    """Fixed execution: pinned impls/resources, sequential flow."""
+
+    flow: Component
+
+    def components(self) -> list[Component]:
+        return self.flow.chain()
+
+    def execute(self, system, inputs: Sequence[Any] = (), **kw):
+        return system.execute_imperative(self, inputs=inputs, **kw)
+
+
+def Workflow(flow: Component) -> ImperativeWorkflow:
+    return ImperativeWorkflow(flow)

@@ -1,0 +1,275 @@
+"""Production-artifact cost model: parse the optimized HLO of the *actual*
+scan-over-layers lowering and scale while-loop bodies by their trip counts.
+
+Why not depth-extrapolation from unrolled shallow variants? GSPMD can pick a
+*different partitioning strategy* at different depths (measured: deepseek-7b
+prefill shows 3 all-reduces/layer in the production scan body but 15 in the
+2-layer unrolled variant), so extrapolating the variant 29x fabricates
+collectives the real program never issues. XLA also annotates every while op
+with ``backend_config={"known_trip_count": ...}``, so scaling the production
+body is exact.
+
+Two estimators over the scaled computation graph:
+
+- ``collective_traffic``  — per-op on-link bytes (exact shapes x ring factor
+  x trip scale). This is the §Roofline collective term.
+- ``memory_traffic``      — sum of *materialized* buffer bytes x 2
+  (produce + consume) over ENTRY + while bodies, scaled. Fusion-internal
+  values are never materialized, so counting only fusion results models the
+  fused execution a TPU backend performs — unlike ``cost_analysis()`` on the
+  CPU backend, which meters every unfused intermediate. This is the
+  §Roofline memory term.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_ASSIGN = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_WHILE = re.compile(r"\bwhile\(")
+_BODY = re.compile(r"body=%([\w.\-]+)")
+_COND = re.compile(r"condition=%([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_KERNEL_META = re.compile(r'op_name="[^"]*\bpk_')
+_DUS_META = re.compile(r'op_name="[^"]*dynamic_update_slice"')
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+# ops whose result is not a (new) materialized buffer. dynamic-update-slice
+# (and fusions rooted in one) executes in place (buffer aliasing): it writes
+# only the update slice, already counted at the producing instruction.
+_FREE_OPS = ("parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "custom-call", "dynamic-update-slice",
+             "iota", "copy-start", "copy-done", "while", "conditional")
+
+
+_TUPLE_TYPE = re.compile(r"^\((?:[^()]|\([^()]*\))*\)\s*")
+
+
+def _op_name(rhs: str) -> str:
+    """The op token: last word before the '(' that opens the arguments.
+
+    Handles tuple-typed results: ``(s32[], f32[8,128]) parameter(0)``."""
+    rest = _TUPLE_TYPE.sub("", rhs) if rhs.startswith("(") else rhs
+    head = rest.split("(")[0].strip()
+    return head.split()[-1] if head.split() else ""
+
+
+def _is_free(lhs_name: str, rhs: str) -> bool:
+    op = _op_name(rhs)
+    if op in _FREE_OPS:
+        return True
+    # fusion whose root is an in-place dynamic-update-slice
+    if op == "fusion" and "dynamic-update-slice" in lhs_name:
+        return True
+    return False
+
+
+def _shape_bytes(head: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(head):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _traffic_factor(op: str, n: int) -> float:
+    """On-link bytes per device as a fraction of the result size (ring)."""
+    if n <= 1:
+        return 0.0
+    if op == "all-gather":
+        return (n - 1) / n
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op == "reduce-scatter":
+        return float(n - 1)
+    if op == "all-to-all":
+        return (n - 1) / n
+    return 1.0   # collective-permute
+
+
+def split_computations(txt: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    for raw in txt.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and raw.rstrip().endswith("{"):
+                name = m.group(2)
+                if m.group(1):
+                    name = "__ENTRY__"
+                comps[name] = []
+                cur = name
+            continue
+        if line == "}":
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps
+
+
+@dataclass
+class ScaledGraph:
+    comps: dict[str, list[str]]
+    scale: dict[str, float] = field(default_factory=dict)
+    depth: dict[str, int] = field(default_factory=dict)   # while-nesting
+
+    @classmethod
+    def parse(cls, txt: str) -> "ScaledGraph":
+        comps = split_computations(txt)
+        g = cls(comps)
+        g._compute_scales()
+        return g
+
+    def _compute_scales(self):
+        whiles: dict[str, list[tuple[str, str, int]]] = {}
+        for name, lines in self.comps.items():
+            for line in lines:
+                if _WHILE.search(line) and "body=" in line:
+                    body = _BODY.search(line)
+                    cond = _COND.search(line)
+                    trip = _TRIP.search(line)
+                    whiles.setdefault(name, []).append(
+                        (body.group(1) if body else "",
+                         cond.group(1) if cond else "",
+                         int(trip.group(1)) if trip else 1))
+        scale = {name: 0.0 for name in self.comps}
+        depth = {name: 0 for name in self.comps}
+        scale["__ENTRY__"] = 1.0
+        # propagate until fixpoint (nesting depth is tiny)
+        for _ in range(16):
+            changed = False
+            new = {name: 1.0 if name == "__ENTRY__" else 0.0
+                   for name in self.comps}
+            ndep = dict(depth)
+            for parent, ws in whiles.items():
+                for body, cond, trip in ws:
+                    if body in new:
+                        new[body] += scale[parent] * trip
+                        ndep[body] = max(ndep[body], depth[parent] + 1)
+                    if cond in new:
+                        new[cond] += scale[parent] * (trip + 1)
+                        ndep[cond] = max(ndep[cond], depth[parent] + 1)
+            for k in scale:
+                if abs(new[k] - scale[k]) > 1e-9 or ndep[k] != depth[k]:
+                    changed = True
+            scale, depth = new, ndep
+            if not changed:
+                break
+        self.scale = scale
+        self.depth = depth
+
+    # -- executed (non-fused) computations ------------------------------------
+    def _executed(self):
+        for name, lines in self.comps.items():
+            s = self.scale.get(name, 0.0)
+            if s > 0:
+                yield name, s, lines
+
+    # -- estimators -------------------------------------------------------------
+    def collective_traffic(self) -> dict:
+        out: dict[str, dict] = {op: {"count": 0.0, "bytes": 0.0,
+                                     "raw_bytes": 0.0}
+                                for op in _COLLECTIVES}
+        for name, s, lines in self._executed():
+            for line in lines:
+                m = _ASSIGN.match(line)
+                if not m:
+                    continue
+                rhs = m.group(2)
+                op_found = None
+                for op in _COLLECTIVES:
+                    if re.search(rf"\b{op}(-start)?\(", rhs):
+                        op_found = op
+                        break
+                if not op_found or f"{op_found}-done" in rhs:
+                    continue
+                head = rhs.split(op_found)[0]
+                nbytes = _shape_bytes(head)
+                gm = _GROUPS.search(rhs)
+                if gm:
+                    grp = len([x for x in gm.group(1).split(",")
+                               if x.strip()])
+                else:
+                    gi = _GROUPS_IOTA.search(rhs)
+                    grp = int(gi.group(2)) if gi else 2
+                rec = out[op_found]
+                rec["count"] += s
+                rec["raw_bytes"] += nbytes * s
+                rec["bytes"] += nbytes * _traffic_factor(op_found, grp) * s
+        out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                                 if isinstance(v, dict))
+        return out
+
+    def memory_traffic(self, max_depth: int | None = None) -> float:
+        """Materialized-buffer bytes x2 (produce+consume), trip-scaled.
+
+        ``max_depth``: ignore computations nested deeper than this many
+        while levels (depth>=2 loops are the CPU stand-ins for Pallas
+        kernel interiors, whose working set lives in VMEM on TPU —
+        the caller substitutes the kernel's true HBM IO instead).
+
+        TPU-semantics exclusions (each a CPU-backend artifact, documented
+        in EXPERIMENTS.md §Dry-run):
+        - pk_-tagged instructions: inside a Pallas-kernel boundary.
+        - entry-level ``copy``/broadcast-of-constant/convert-of-parameter:
+          buffer setup (donation aliasing, scan-ys zero-init, f32 staging
+          of bf16 inputs for CPU dots) — a TPU executable does none of it.
+        - copy/transpose fusions tagged ``dynamic_update_slice``: cache
+          maintenance layout copies; TPU updates the cache in place."""
+        total = 0.0
+        for name, s, lines in self._executed():
+            if max_depth is not None and self.depth.get(name, 0) > max_depth:
+                continue
+            entry = name == "__ENTRY__"
+            for line in lines:
+                m = _ASSIGN.match(line)
+                if not m:
+                    continue
+                lhs, rhs = m.group(1), m.group(2)
+                if _is_free(lhs, rhs):
+                    continue
+                if _KERNEL_META.search(line):
+                    continue
+                op = _op_name(rhs)
+                if _DUS_META.search(line) and op in ("fusion", "copy",
+                                                     "transpose"):
+                    continue
+                if entry:
+                    if op == "copy":
+                        continue
+                    if op == "fusion" and (
+                            "broadcast" in lhs or
+                            ("convert" in lhs and "(%param" in rhs)):
+                        continue
+                head = rhs.split("(")[0]
+                total += 2.0 * _shape_bytes(head) * s
+        return total
+
+
+def hlo_cost(compiled_text: str) -> dict:
+    """{'coll': per-op dict, 'coll_total', 'bytes', 'bytes_outer'}."""
+    g = ScaledGraph.parse(compiled_text)
+    coll = g.collective_traffic()
+    return {"coll": {op: coll[op] for op in _COLLECTIVES},
+            "coll_total": coll["total_bytes"],
+            "bytes": g.memory_traffic(),
+            "bytes_outer": g.memory_traffic(max_depth=1),
+            "scales": {k: v for k, v in g.scale.items() if v > 1.0}}

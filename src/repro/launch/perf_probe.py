@@ -1,0 +1,86 @@
+"""Perf probe: per-instruction collective/memory breakdown for one cell.
+
+    PYTHONPATH=src python -m repro.launch.perf_probe --arch X --shape Y
+
+The §Perf hillclimb loop's 'profiler': lists the top collectives (shape,
+group, trip scale, on-link bytes) and top memory contributors of the
+production lowering, so each hypothesis targets a named instruction.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+import argparse
+import re
+
+from ..configs.base import SHAPE_CELLS
+from ..configs.registry import ARCH_IDS, get_config
+from .dryrun import _lower_cell
+from .hlo_cost import (ScaledGraph, _ASSIGN, _COLLECTIVES, _GROUPS,
+                       _GROUPS_IOTA, _KERNEL_META, _is_free, _op_name,
+                       _shape_bytes, _traffic_factor)
+from .mesh import make_production_mesh
+
+
+def probe(arch: str, shape: str, multi_pod: bool = False, top: int = 12,
+          rules=None, opts_over=None):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    compiled = _lower_cell(cfg, SHAPE_CELLS[shape], mesh, rules=rules,
+                           opts_over=opts_over).compile()
+    txt = compiled.as_text()
+    g = ScaledGraph.parse(txt)
+
+    colls, mems = [], []
+    for name, lines in g.comps.items():
+        s = g.scale.get(name, 0.0)
+        if s <= 0:
+            continue
+        for line in lines:
+            m = _ASSIGN.match(line)
+            if not m:
+                continue
+            lhs, rhs = m.group(1), m.group(2)
+            base = None
+            for cop in _COLLECTIVES:   # handles variadic (tuple) results
+                if re.search(rf"\b{cop}(-start)?\(", rhs) and \
+                        f"{cop}-done" not in rhs:
+                    base = cop
+                    break
+            if base is not None:
+                nbytes = _shape_bytes(rhs.split(base)[0])
+                gm = _GROUPS.search(rhs)
+                grp = (len([x for x in gm.group(1).split(",") if x.strip()])
+                       if gm else
+                       int(_GROUPS_IOTA.search(rhs).group(2))
+                       if _GROUPS_IOTA.search(rhs) else 2)
+                onlink = nbytes * _traffic_factor(base, grp) * s
+                meta = re.search(r'op_name="([^"]+)"', line)
+                colls.append((onlink, base, grp, s,
+                              rhs.split("(")[0].strip()[:44],
+                              meta.group(1)[-60:] if meta else ""))
+            elif not _is_free(lhs, rhs) and not _KERNEL_META.search(line):
+                b = 2.0 * _shape_bytes(rhs.split("(")[0]) * s
+                if b > 1e8:
+                    mems.append((b, lhs[:40], rhs.split("(")[0].strip()[:44],
+                                 name[:24]))
+    colls.sort(reverse=True)
+    mems.sort(reverse=True)
+    print(f"== {arch} {shape} — top collectives (on-link B/dev) ==")
+    for onlink, op, grp, s, shp, meta in colls[:top]:
+        print(f"  {onlink:10.3e} {op:16s} g{grp:<4d} x{s:<5.0f} {shp:<44s} "
+              f"{meta}")
+    print(f"  TOTAL {sum(c[0] for c in colls):.3e} B/dev")
+    print(f"== top memory contributors ==")
+    for b, lhs, shp, comp in mems[:top]:
+        print(f"  {b:10.3e} {lhs:<40s} {shp:<44s} [{comp}]")
+    return colls, mems
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", choices=tuple(SHAPE_CELLS), required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+    probe(args.arch, args.shape, args.multi_pod, args.top)

@@ -1,0 +1,131 @@
+"""GQA attention block (full / sliding-window / softcap) with KV cache."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .common import ParamSpec, apply_rope, rms_norm
+
+
+def attention_specs(cfg, d_model: int | None = None) -> dict:
+    d = d_model or cfg.d_model
+    hd = cfg.head_dim_
+    spec = {
+        "wq": ParamSpec((d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((cfg.n_heads, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.use_bias:
+        spec["bq"] = ParamSpec((cfg.n_heads, hd), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = ParamSpec((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = ParamSpec((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros")
+        spec["bo"] = ParamSpec((d,), ("embed",), init="zeros")
+    if cfg.qk_norm:
+        spec["q_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+        spec["k_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+    return spec
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, n_layers: int,
+                  dtype=jnp.bfloat16, lead: tuple[int, ...] = ()):
+    """KV cache pytree: k/v of (n_layers, *lead, batch, max_len, kv_heads, hd)."""
+    hd = cfg.head_dim_
+    shape = (n_layers, *lead, batch, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _project_qkv(p, x, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.use_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def apply_attention(p, x, *, cfg, window: int = 0, positions=None,
+                    cache: dict | None = None, cache_index=None,
+                    cross_kv: tuple | None = None, causal: bool = True,
+                    mode: str = "train"):
+    """x: (B, S, d). Returns (out, new_cache_slice).
+
+    - train: no cache IO, flash attention over x.
+    - prefill: flash attention over x; k/v written into ``cache`` at 0.
+    - decode: k/v written at ``cache_index``; attention over the cache.
+    - cross-attention: cross_kv = (k, v) precomputed from encoder/vision
+      states; causal is ignored (full visibility).
+    """
+    B, S, _ = x.shape
+    scale = cfg.attn_scale or cfg.head_dim_ ** -0.5
+
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if cfg.use_bias:
+            q = q + p["bq"]
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"])
+        k, v = cross_kv
+        o = ops.flash_attention(q, k, v, causal=False, scale=scale,
+                                logit_softcap=cfg.attn_logit_softcap)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        if cfg.use_bias:
+            out = out + p["bo"]
+        return out, None
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, x, cfg)
+    q = apply_rope(q, positions, rope_pct=cfg.rope_pct, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, rope_pct=cfg.rope_pct, theta=cfg.rope_theta)
+
+    new_cache = None
+    if mode == "decode":
+        idx = cache_index
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        o = ops.decode_attention(q, ck, cv, window=window,
+                                 logit_softcap=cfg.attn_logit_softcap,
+                                 scale=scale, q_offset=idx, kv_len=idx + S)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                logit_softcap=cfg.attn_logit_softcap,
+                                scale=scale)
+        if mode == "prefill" and cache is not None:
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+            }
+
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if cfg.use_bias:
+        out = out + p["bo"]
+    return out, new_cache
+
+
+def cross_kv_specs(cfg, d_src: int) -> dict:
+    """K/V projections from a source modality (encoder states / patches)."""
+    hd = cfg.head_dim_
+    return {
+        "wk": ParamSpec((d_src, cfg.n_kv_heads, hd), ("src_embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d_src, cfg.n_kv_heads, hd), ("src_embed", "kv_heads", "head_dim")),
+    }
+
+
+def compute_cross_kv(p, src):
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    return k, v

@@ -1,0 +1,96 @@
+"""AdamW in plain JAX with sharded, optionally low-precision moments.
+
+Moments inherit the parameter shardings (ZeRO-style: they live wherever the
+FSDP/TP rules put the parameter), so optimizer state never concentrates on
+one device. ``moment_dtype``: float32 (default) | bfloat16 | int8 — int8
+moments use per-tensor absmax scaling (beyond-paper memory lever recorded in
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def _q_store(x, dtype: str):
+    if dtype == "float32":
+        return x.astype(jnp.float32)
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    if dtype == "int8":
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale.astype(jnp.float32)}
+    raise ValueError(dtype)
+
+
+def _q_load(x):
+    if isinstance(x, dict):
+        return x["q"].astype(jnp.float32) * x["scale"]
+    return x.astype(jnp.float32)
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    def zeros():
+        return jax.tree.map(
+            lambda p: _q_store(jnp.zeros(p.shape, jnp.float32),
+                               cfg.moment_dtype), params)
+
+    return {"m": zeros(), "v": zeros(), "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(params, grads, opt_state, cfg: AdamWConfig, lr=None):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    lr = cfg.lr if lr is None else lr
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else 1.0
+
+    is_q = lambda x: isinstance(x, dict) and "q" in x
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_f = _q_load(m)
+        v_f = _q_load(v)
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * jnp.square(g)
+        m_hat = m_f / (1 - cfg.b1 ** count.astype(jnp.float32))
+        v_hat = v_f / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:  # no decay on norms/biases
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, _q_store(m_f, cfg.moment_dtype), _q_store(v_f, cfg.moment_dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"], is_leaf=is_q)
+    flat_v = jax.tree.leaves(opt_state["v"], is_leaf=is_q)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_p, {"m": new_m, "v": new_v, "count": count}, metrics

@@ -1,0 +1,148 @@
+"""Serving steps: prefill, decode (KV cache / SSM state), sampling, batching.
+
+``jit_prefill_step`` / ``jit_decode_step`` are the dry-run entry points for
+the ``prefill_32k`` / ``decode_32k`` / ``long_500k`` shape cells; the
+``ServeSession`` class is the real-execution path used by the examples
+(continuous batched decoding of queued requests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.model_zoo import Model
+from ..models.moe import DistContext, LOCAL
+from . import sharding as shd
+
+
+@dataclass(frozen=True)
+class ServeOptions:
+    kv_dtype: str = "bfloat16"
+    temperature: float = 0.0      # 0 = greedy
+    fsdp_experts: bool = False    # serving default: keep experts TP-only
+    expert_tp: bool = False       # 2D expert sharding (SERVING_RULES, §Perf)
+    moe_capacity_cap: int = 0     # decode capacity cap (§Perf B2)
+    scan_unroll: int = 1
+
+
+def make_dist(mesh, opts: ServeOptions) -> DistContext:
+    if mesh is None:
+        return LOCAL
+    return DistContext(mesh=mesh, data_axes=shd.batch_axes(mesh),
+                       model_axis="model", fsdp_experts=opts.fsdp_experts,
+                       ep=True, expert_tp=opts.expert_tp,
+                       capacity_cap=opts.moe_capacity_cap)
+
+
+def cache_shardings(model: Model, cache_abstract, mesh, rules=None):
+    axes = shd.cache_logical_axes(cache_abstract)
+    return shd.tree_shardings(axes, cache_abstract, mesh, rules)
+
+
+def abstract_cache(model: Model, batch: int, max_len: int, enc_len: int = 0):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_len, enc_len=enc_len))
+
+
+def build_prefill_step(model: Model, opts: ServeOptions, mesh=None):
+    dist = make_dist(mesh, opts)
+
+    def prefill(params, inputs, cache):
+        logits, cache, _ = model.apply(params, inputs, mode="prefill",
+                                       cache=cache, cache_index=0, dist=dist,
+                                       scan_unroll=opts.scan_unroll)
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def build_decode_step(model: Model, opts: ServeOptions, mesh=None):
+    dist = make_dist(mesh, opts)
+
+    def decode(params, cache, tokens, index, key=None):
+        """tokens: (B, 1); index: scalar int32 position. -> (next, cache)."""
+        logits, cache, _ = model.apply(params, {"tokens": tokens},
+                                       mode="decode", cache=cache,
+                                       cache_index=index, dist=dist,
+                                       scan_unroll=opts.scan_unroll)
+        last = logits[:, -1]
+        if opts.temperature > 0 and key is not None:
+            nxt = jax.random.categorical(key, last / opts.temperature, -1)
+        else:
+            nxt = jnp.argmax(last, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], last, cache
+
+    return decode
+
+
+def jit_decode_step(model: Model, opts: ServeOptions, mesh, batch: int,
+                    max_len: int, enc_len: int = 0, rules=None):
+    """pjit'd single-token decode over a sharded cache (dry-run entry)."""
+    decode = build_decode_step(model, opts, mesh)
+    cache_abs = abstract_cache(model, batch, max_len, enc_len=enc_len)
+    c_sh = cache_shardings(model, cache_abs, mesh, rules)
+    p_abs = model.abstract()
+    p_sh = shd.tree_shardings(model.axes(), p_abs, mesh, rules)
+    tok_sh = NamedSharding(mesh, shd.data_spec((batch, 1), mesh))
+    repl = NamedSharding(mesh, P())
+    fn = jax.jit(lambda params, cache, tokens, index:
+                 decode(params, cache, tokens, index),
+                 in_shardings=(p_sh, c_sh, tok_sh, repl),
+                 out_shardings=(tok_sh, None, c_sh),
+                 donate_argnums=(1,))
+    return fn, (p_abs, cache_abs)
+
+
+def jit_prefill_step(model: Model, opts: ServeOptions, mesh, batch: int,
+                     seq_len: int, rules=None):
+    prefill = build_prefill_step(model, opts, mesh)
+    enc_len = model.enc_len_for(seq_len)
+    cache_abs = abstract_cache(model, batch, seq_len, enc_len=enc_len)
+    c_sh = cache_shardings(model, cache_abs, mesh, rules)
+    p_abs = model.abstract()
+    p_sh = shd.tree_shardings(model.axes(), p_abs, mesh, rules)
+    tok_abs = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+    in_abs = {"tokens": tok_abs,
+              **model.extra_inputs(batch, seq_len, abstract=True)}
+    in_sh = jax.tree.map(
+        lambda a: NamedSharding(mesh, shd.data_spec(a.shape, mesh)), in_abs)
+    fn = jax.jit(prefill,
+                 in_shardings=(p_sh, in_sh, c_sh),
+                 out_shardings=(None, c_sh),
+                 donate_argnums=(2,))
+    return fn, (p_abs, in_abs, cache_abs)
+
+
+# ---------------------------------------------------------------------------
+# Real-execution serving session (examples / core.executor)
+# ---------------------------------------------------------------------------
+
+
+class ServeSession:
+    """Batched request serving against a locally-materialized model."""
+
+    def __init__(self, model: Model, params, max_len: int = 256,
+                 opts: ServeOptions = ServeOptions()):
+        self.model, self.params, self.opts = model, params, opts
+        self.max_len = max_len
+        self._prefill = jax.jit(build_prefill_step(model, opts))
+        self._decode = jax.jit(build_decode_step(model, opts))
+
+    def generate(self, prompts, max_new_tokens: int = 32, extras=None):
+        """prompts: (B, S) int32 array -> (B, max_new_tokens) int32."""
+        B, S = prompts.shape
+        enc_len = self.model.enc_len_for(S)
+        cache = self.model.init_cache(B, S + max_new_tokens, enc_len=enc_len)
+        inputs = {"tokens": prompts, **(extras or {})}
+        last_logits, cache = self._prefill(self.params, inputs, cache)
+        tok = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
+        out = [tok]
+        idx = jnp.asarray(S, jnp.int32)
+        for _ in range(max_new_tokens - 1):
+            tok, _, cache = self._decode(self.params, cache, tok, idx)
+            out.append(tok)
+            idx = idx + 1
+        return jnp.concatenate(out, axis=1)

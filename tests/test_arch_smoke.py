@@ -1,0 +1,114 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs (deliverable (f))."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPE_CELLS, cell_applicable
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.pipeline import DataConfig, batch_for_step
+from repro.models.model_zoo import build_model
+from repro.runtime import serve as serve_rt
+from repro.runtime import train as train_rt
+
+B, S = 2, 32
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_finite(arch):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    inputs = {"tokens": jnp.ones((B, S), jnp.int32),
+              **model.extra_inputs(B, S)}
+    logits, _, aux = model.apply(params, inputs, mode="train")
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    opts = train_rt.TrainOptions(remat_policy=None, total_steps=10,
+                                 warmup_steps=1)
+    state = train_rt.init_train_state(model, jax.random.PRNGKey(0), opts)
+    step = jax.jit(train_rt.build_train_step(model, opts))
+    batch = batch_for_step(DataConfig(cfg.vocab_size, S, B), 0, cfg)
+    state, metrics = step(state, batch)
+    assert int(state["step"]) == 1
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    """One decode step over a cache (the serve_step of decode shape cells)."""
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    enc_len = model.enc_len_for(S)
+    cache = model.init_cache(B, S + 4, enc_len=enc_len)
+    prefill = serve_rt.build_prefill_step(model, serve_rt.ServeOptions())
+    inputs = {"tokens": jnp.ones((B, S), jnp.int32),
+              **model.extra_inputs(B, S)}
+    last, cache = prefill(params, inputs, cache)
+    assert last.shape == (B, cfg.vocab_size)
+    decode = serve_rt.build_decode_step(model, serve_rt.ServeOptions())
+    tok = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
+    nxt, logits, cache = decode(params, cache, tok, jnp.asarray(S, jnp.int32))
+    assert nxt.shape == (B, 1)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_shape_cell_applicability():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §4)."""
+    runnable = {a for a in ARCH_IDS
+                if cell_applicable(get_config(a), SHAPE_CELLS["long_500k"])}
+    assert runnable == {"mamba2-370m", "zamba2-7b"}
+    for a in ARCH_IDS:  # every other cell applies everywhere
+        for cell in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cell_applicable(get_config(a), SHAPE_CELLS[cell])
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the assigned hyperparameters (no reduced overrides)."""
+    c = get_config("deepseek-7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (30, 4096, 32, 32, 11008, 102400)
+    c = get_config("gemma2-9b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+            c.vocab_size) == (42, 3584, 16, 8, 256000)
+    assert c.alt_local_global and c.attn_logit_softcap > 0
+    c = get_config("kimi-k2-1t-a32b")
+    assert (c.n_layers, c.d_model, c.moe.num_experts, c.moe.top_k) == \
+        (61, 7168, 384, 8)
+    c = get_config("command-r-plus-104b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff) == \
+        (64, 12288, 96, 33792)
+    c = get_config("mamba2-370m")
+    assert (c.n_layers, c.d_model, c.ssm.d_state) == (48, 1024, 128)
+    c = get_config("zamba2-7b")
+    assert (c.n_layers, c.d_model, c.ssm.d_state) == (81, 3584, 64)
+    c = get_config("llama-3.2-vision-90b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == \
+        (100, 8192, 64, 8)
+    c = get_config("seamless-m4t-large-v2")
+    assert c.family == "encdec" and c.vocab_size == 256206
+    c = get_config("stablelm-12b")
+    assert (c.n_layers, c.d_model, c.n_kv_heads) == (40, 5120, 8)
+    c = get_config("deepseek-moe-16b")
+    assert (c.moe.num_experts, c.moe.top_k, c.moe.num_shared) == (64, 6, 2)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "kimi-k2-1t-a32b",
+                                  "mamba2-370m"])
+def test_param_count_sanity(arch):
+    """Full-config param counts are in the advertised ballpark."""
+    model = build_model(get_config(arch))
+    n = model.param_count()
+    lo, hi = {"deepseek-7b": (6e9, 8e9),
+              "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+              "mamba2-370m": (3.0e8, 4.5e8)}[arch]
+    assert lo <= n <= hi, f"{arch}: {n:.3e}"

@@ -1,0 +1,83 @@
+"""Cluster manager invariants: allocation safety, workflow awareness,
+harvest preemption (+ hypothesis: never oversubscribe, never double-book)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.agents import default_library
+from repro.core.cluster import ClusterManager, Instance, Pool
+from repro.core.dag import DAG, TaskNode
+
+
+def _cm(cap=16, harvest=0):
+    pools = [Pool("gpu", "a100-80g", capacity=cap)]
+    if harvest:
+        pools.append(Pool("spot", "tpu-v4", capacity=harvest,
+                          harvestable=True))
+    return ClusterManager(pools)
+
+
+def test_alloc_release_roundtrip():
+    cm = _cm()
+    lease = cm.alloc("gpu", 8, t=0.0)
+    assert lease is not None and cm.free("gpu") == 8
+    assert cm.alloc("gpu", 9, t=0.0) is None     # over capacity
+    cm.release(lease, t=1.0)
+    assert cm.free("gpu") == 16
+    with pytest.raises(KeyError):
+        cm.release(lease, t=2.0)                  # double release
+
+
+def test_harvest_preemption():
+    cm = _cm(harvest=8)
+    spot = cm.alloc("spot", 8, t=0.0, harvest=True)
+    assert cm.free("spot") == 0
+    victims = cm.preempt_harvest("spot", 4, t=1.0)
+    assert victims == [spot]
+    assert cm.free("spot") == 8 and cm.preemptions == 1
+
+
+def test_workflow_awareness_and_rebalance():
+    lib = default_library()
+    cm = _cm(cap=16)
+    dag = DAG([TaskNode(id="s", description="", agent="speech_to_text"),
+               TaskNode(id="m", description="", agent="summarize",
+                        deps=("s",))])
+    cm.register_workflow("wf", dag)
+    assert cm.upcoming_demand() == {"speech_to_text": 1, "summarize": 1}
+
+    cm.add_instance(Instance("whisper-large", "gpu", 1))
+    cm.add_instance(Instance("nvlm-72b", "gpu", 8))
+    # both interfaces still demanded: nothing reclaimed
+    assert cm.rebalance(lib, t=0.0) == []
+    cm.complete_task("wf", "s")
+    actions = cm.rebalance(lib, t=1.0)           # whisper now undemanded
+    assert len(actions) == 1 and "whisper-large" in actions[0]
+    assert [i.impl for i in cm.instances] == ["nvlm-72b"]
+    cm.complete_task("wf", "m")
+    assert cm.upcoming_demand() == {}            # workflow retired
+
+
+def test_stats_shape():
+    cm = _cm(harvest=8)
+    st_ = cm.stats()
+    assert st_["gpu"]["kind"] == "gpu" and st_["gpu"]["free"] == 16
+    assert st_["spot"]["harvestable"] == 8
+
+
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 8)), min_size=1,
+                max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_never_oversubscribed_property(ops):
+    """Arbitrary alloc/release interleavings keep 0 <= used <= capacity."""
+    cm = _cm(cap=16)
+    live = []
+    for is_alloc, n in ops:
+        if is_alloc:
+            lease = cm.alloc("gpu", n, t=0.0)
+            if lease is not None:
+                live.append(lease)
+        elif live:
+            cm.release(live.pop(), t=0.0)
+        used = cm.pools["gpu"].capacity - cm.free("gpu")
+        assert 0 <= used <= 16
+        assert used == sum(l.n_devices for l in live)

@@ -1,0 +1,88 @@
+"""DAG IR: validation, topological order, critical path (+ hypothesis)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dag import DAG, TaskNode
+
+
+def _node(i, deps=(), agent="summarize"):
+    return TaskNode(id=f"t{i}", description=f"task {i}", agent=agent,
+                    deps=tuple(deps))
+
+
+def test_duplicate_id_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        DAG([_node(0), _node(0)])
+
+
+def test_unknown_dep_rejected():
+    with pytest.raises(ValueError, match="unknown"):
+        DAG([_node(0, deps=("t9",))])
+
+
+def test_cycle_rejected():
+    a = TaskNode(id="a", description="", agent="x", deps=("b",))
+    b = TaskNode(id="b", description="", agent="x", deps=("a",))
+    with pytest.raises(ValueError, match="cycle"):
+        DAG([a, b])
+
+
+def test_topo_and_structure():
+    d = DAG([_node(0), _node(1, ["t0"]), _node(2, ["t0"]),
+             _node(3, ["t1", "t2"])])
+    order = d.topo_order
+    assert order.index("t0") < order.index("t1") < order.index("t3")
+    assert d.roots() == ["t0"]
+    assert d.leaves() == ["t3"]
+    assert d.successors("t0") == ["t1", "t2"]
+    assert d.levels() == [["t0"], ["t1", "t2"], ["t3"]]
+
+
+def test_critical_path():
+    d = DAG([_node(0), _node(1, ["t0"]), _node(2, ["t0"]),
+             _node(3, ["t1", "t2"])])
+    dur = {"t0": 1.0, "t1": 5.0, "t2": 2.0, "t3": 1.0}
+    total, path = d.critical_path(dur)
+    assert total == 7.0
+    assert path == ("t0", "t1", "t3")
+
+
+@st.composite
+def random_dag_edges(draw):
+    n = draw(st.integers(2, 12))
+    edges = []
+    for j in range(1, n):
+        for i in range(j):
+            if draw(st.booleans()):
+                edges.append((i, j))
+    return n, edges
+
+
+@given(random_dag_edges())
+@settings(max_examples=50, deadline=None)
+def test_topo_order_property(ne):
+    """Every forward-edge layered graph is a valid DAG; topo respects deps."""
+    n, edges = ne
+    deps = {j: [f"t{i}" for i, jj in edges if jj == j] for j in range(n)}
+    d = DAG([_node(i, deps.get(i, [])) for i in range(n)])
+    pos = {t: k for k, t in enumerate(d.topo_order)}
+    assert len(pos) == n
+    for i, j in edges:
+        assert pos[f"t{i}"] < pos[f"t{j}"]
+
+
+@given(random_dag_edges(), st.lists(st.floats(0.1, 100), min_size=12,
+                                    max_size=12))
+@settings(max_examples=50, deadline=None)
+def test_critical_path_bounds_property(ne, durs):
+    """cp <= sum(durations) and cp >= max(single duration)."""
+    n, edges = ne
+    deps = {j: [f"t{i}" for i, jj in edges if jj == j] for j in range(n)}
+    d = DAG([_node(i, deps.get(i, [])) for i in range(n)])
+    dur = {f"t{i}": durs[i] for i in range(n)}
+    cp, path = d.critical_path(dur)
+    assert cp <= sum(dur[f"t{i}"] for i in range(n)) + 1e-9
+    assert cp >= max(dur[f"t{i}"] for i in range(n)) - 1e-9
+    # path is a real dependency chain
+    for a, b in zip(path, path[1:]):
+        assert a in d.nodes[b].deps

@@ -1,0 +1,91 @@
+"""Planner: job decomposition, dataflow wiring, toolcalls, LLM protocol."""
+import json
+
+import pytest
+
+from repro.core import Job, LLMPlanner, Murakkab, RulePlanner, VideoInput
+from repro.core.agents import default_library
+from repro.core.orchestrator import dag_creation_overhead
+from repro.configs.workflow_video import PAPER_VIDEOS, make_declarative_job
+
+
+@pytest.fixture(scope="module")
+def lib():
+    return default_library()
+
+
+def test_paper_job_lowers_to_expected_dag(lib):
+    dag = RulePlanner(lib).lower(make_declarative_job())
+    agents = [dag.nodes[t].agent for t in dag.topo_order]
+    assert agents == ["frame_extract", "speech_to_text", "object_detect",
+                      "summarize", "embed"]
+    nodes = {n.agent: n for n in dag.nodes.values()}
+    # dataflow: summarize needs frames + objects + transcript
+    summ_deps = {dag.nodes[d].agent for d in nodes["summarize"].deps}
+    assert summ_deps == {"frame_extract", "object_detect", "speech_to_text"}
+    assert {dag.nodes[d].agent for d in nodes["embed"].deps} == {"summarize"}
+    assert nodes["object_detect"].deps == (nodes["frame_extract"].id,)
+    # work granularity: 8 scenes, 80 frames
+    assert nodes["speech_to_text"].work_items == 8
+    assert nodes["summarize"].work_items == 80
+
+
+def test_decomposition_without_hints(lib):
+    job = Job(description="Describe what happens in the video",
+              inputs=PAPER_VIDEOS)
+    dag = RulePlanner(lib).lower(job)
+    assert len(dag) == 5          # default template + aggregation
+
+
+def test_toolcall_format(lib):
+    planner = RulePlanner(lib)
+    dag = planner.lower(make_declarative_job())
+    calls = planner.toolcalls(dag)
+    fe = [c for c in calls.values() if c.startswith("FrameExtractor")][0]
+    # paper §3.2: FrameExtractor(start_time=0, end_time=60s, num_frames=10,
+    #                            file="cats.mov")
+    assert "file='cats.mov'" in fe
+    assert "num_frames=10" in fe and "start_time=0" in fe
+
+
+def test_unmatchable_task_raises(lib):
+    job = Job(description="x", tasks=("Translate sanskrit poetry",),
+              inputs=PAPER_VIDEOS)
+    with pytest.raises(ValueError, match="no agent"):
+        RulePlanner(lib).lower(job)
+
+
+def test_llm_planner_protocol(lib):
+    """LLMPlanner consumes any llm_fn; validates agents; builds the DAG."""
+    def fake_llm(system_prompt, user_prompt):
+        assert "frame_extract" in system_prompt    # library advertised
+        assert "speech-to-text" in user_prompt
+        return json.dumps({"tasks": [
+            {"id": "a", "agent": "frame_extract", "deps": []},
+            {"id": "b", "agent": "speech_to_text", "deps": []},
+            {"id": "c", "agent": "summarize", "deps": ["a", "b"]},
+        ]})
+
+    dag = LLMPlanner(lib, fake_llm).lower(make_declarative_job())
+    assert list(dag.topo_order) == ["a", "b", "c"]
+    assert dag.nodes["c"].work_items == 80
+
+    def bad_llm(s, u):
+        return json.dumps({"tasks": [{"id": "a", "agent": "nonsense"}]})
+    with pytest.raises(ValueError, match="unknown agent"):
+        LLMPlanner(lib, bad_llm).lower(make_declarative_job())
+
+
+def test_dag_creation_overhead_under_1pct(lib):
+    dag = RulePlanner(lib).lower(make_declarative_job())
+    assert dag_creation_overhead(dag, makespan_s=83.0) < 0.01
+
+
+def test_interface_matching(lib):
+    assert lib.match_interface("Run speech-to-text on all scenes") == \
+        "speech_to_text"
+    assert lib.match_interface("Detect objects in the frames") == \
+        "object_detect"
+    assert lib.match_interface("Summarize each scene") == "summarize"
+    assert lib.match_interface("Extract frames from each video") == \
+        "frame_extract"

@@ -1,0 +1,130 @@
+"""Simulator invariants: dependency order, capacity safety, energy/time
+accounting consistency, warm-instance reuse (+ hypothesis over random DAGs)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MIN_COST, MIN_LATENCY, Murakkab
+from repro.core.dag import DAG, TaskNode
+from repro.core.simulator import Simulator
+from repro.core.workflow import Job, VideoInput
+from repro.configs.workflow_video import make_declarative_job
+
+
+def _run(system, job):
+    dag, plan = system.plan(job)
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    return dag, plan, sim.run({"wf": (dag, plan, 0.0)})
+
+
+@pytest.fixture()
+def system():
+    return Murakkab.tpu_cluster(v5e=32, v5p=0, v4_harvest=0, host_cores=64)
+
+
+def test_dependency_order(system):
+    dag, plan, rep = _run(system, make_declarative_job())
+    start = {e.task: e.start for e in rep.trace}
+    end = {e.task: e.end for e in rep.trace}
+    for tid, node in dag.nodes.items():
+        for d in node.deps:
+            assert start[tid] >= end[d] - 1e-9, (tid, d)
+
+
+def test_capacity_never_exceeded(system):
+    """At every trace instant, per-pool device usage <= capacity."""
+    dag, plan, rep = _run(system, make_declarative_job())
+    events = []
+    for e in rep.trace:
+        events.append((e.start, e.pool, e.devices))
+        events.append((e.end, e.pool, -e.devices))
+    for pool in system.cluster.pools.values():
+        level, peak = 0, 0
+        # at equal timestamps the engine releases before it starts
+        for t, p, d in sorted(events, key=lambda x: (x[0], x[2])):
+            if p == pool.name:
+                level += d
+                peak = max(peak, level)
+        assert peak <= pool.capacity, pool.name
+
+
+def test_energy_accounting_consistent(system):
+    _, _, rep = _run(system, make_declarative_job())
+    assert math.isclose(rep.energy_wh, rep.active_wh + rep.idle_wh,
+                        rel_tol=1e-9)
+    # idle floor = sum over metered pools of capacity * idle_w * makespan
+    expect_idle = sum(p.capacity * p.spec.idle_w * rep.makespan_s / 3600.0
+                      for p in system.cluster.pools.values()
+                      if p.spec.metered)
+    assert math.isclose(rep.idle_wh, expect_idle, rel_tol=1e-9)
+    assert rep.makespan_s >= max(e.end for e in rep.trace) - 1e-9
+
+
+def test_warm_instance_reuse(system):
+    """Second identical job hits warm instances (no cold notes)."""
+    job = make_declarative_job()
+    dag, plan = system.plan(job)
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    rep = sim.run({"a": (dag, plan, 0.0), "b": (dag, plan, 500.0)})
+    notes = {}
+    for e in rep.trace:
+        if e.impl.startswith(("opencv", "clip")):
+            continue
+        notes.setdefault(e.workflow, []).append(e.note)
+    assert "cold" in notes["a"]
+    assert all(n == "warm" for n in notes["b"]), notes["b"]
+
+
+def test_degradation_under_scarcity():
+    """Plan asks for fan-out; a tiny cluster degrades to fewer instances
+    instead of deadlocking."""
+    big = Murakkab.tpu_cluster(v5e=64, v5p=0, v4_harvest=0, host_cores=64)
+    job = Job(description="Describe the video",
+              inputs=(VideoInput("x.mov", scenes=8),),
+              constraints=MIN_LATENCY, quality_floor=0.8)
+    dag, plan = big.plan(job)
+    small = Murakkab.tpu_cluster(v5e=2, v5p=0, v4_harvest=0, host_cores=8)
+    sim = Simulator(small.cluster, small.library, small.profiles)
+    rep = sim.run({"wf": (dag, plan, 0.0)})
+    assert {e.task for e in rep.trace} == set(dag.nodes)   # all ran
+
+
+def test_multitenant_arrivals(system):
+    jobs = {f"w{i}": (make_declarative_job(), 5.0 * i) for i in range(3)}
+    wfs = {}
+    for wid, (job, arr) in jobs.items():
+        dag, plan = system.plan(job)
+        wfs[wid] = (dag, plan, arr)
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    rep = sim.run(wfs)
+    for i in range(3):
+        assert rep.per_workflow[f"w{i}"]["finish"] >= 5.0 * i
+    assert rep.makespan_s == max(v["finish"] for v in
+                                 rep.per_workflow.values())
+
+
+@given(st.integers(1, 6), st.integers(0, 3))
+@settings(max_examples=15, deadline=None)
+def test_chain_makespan_additivity(n_chain, n_par):
+    """A chain's makespan >= sum of its stage durations; independent tasks
+    overlap (makespan < sum)."""
+    system = Murakkab.tpu_cluster(v5e=32, v5p=0, v4_harvest=0, host_cores=64)
+    nodes = []
+    for i in range(n_chain):
+        nodes.append(TaskNode(id=f"c{i}", description="", agent="summarize",
+                              deps=(f"c{i-1}",) if i else (),
+                              work_items=2, tokens_in=400, tokens_out=60))
+    for j in range(n_par):
+        nodes.append(TaskNode(id=f"p{j}", description="",
+                              agent="speech_to_text", work_items=2))
+    dag = DAG(nodes)
+    plan = system.scheduler.plan(dag, (MIN_COST,), 0.0)
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    rep = sim.run({"wf": (dag, plan, 0.0)})
+    chain_time = sum(e.end - e.start for e in rep.trace
+                     if e.task.startswith("c"))
+    assert rep.makespan_s >= chain_time - 1e-6
+    total = sum(e.end - e.start for e in rep.trace)
+    if n_par:
+        assert rep.makespan_s < total + 1e-6

@@ -1,0 +1,75 @@
+"""Real executor: dataflow wiring, determinism, output-equality across
+plans (the paper's 'same output in all configurations')."""
+import numpy as np
+import pytest
+
+from repro.core import MIN_COST, MIN_LATENCY, Murakkab
+from repro.core.executor import Media, RealExecutor
+from repro.configs.workflow_video import (PAPER_VIDEOS,
+                                          make_baseline_workflow,
+                                          make_declarative_job)
+
+
+@pytest.fixture(scope="module")
+def media():
+    return [Media.synthesize(v.name, scenes=2, fps=4, seed=i)
+            for i, v in enumerate(PAPER_VIDEOS[:1])]
+
+
+@pytest.fixture(scope="module")
+def outputs(media):
+    system = Murakkab.paper_cluster()
+    dag, plan = system.plan(make_declarative_job(MIN_COST))
+    return RealExecutor(system.library).run(dag, plan, media), dag
+
+
+def test_shapes_and_dataflow(outputs, media):
+    out, dag = outputs
+    scenes = media[0].frames.shape[0]
+    frames = [v for k, v in out.items() if "frame_extract" in k][0]
+    transcript = [v for k, v in out.items() if "speech" in k][0]
+    objects = [v for k, v in out.items() if "object" in k][0]
+    summary = [v for k, v in out.items() if "summar" in k][0]
+    vectors = [v for k, v in out.items() if "embed" in k][0]
+    assert frames.shape[0] == scenes
+    assert transcript.shape == (scenes, 8)
+    assert objects.shape[:1] == (scenes,)
+    assert summary.shape == (scenes, 8)
+    assert vectors.shape[0] == scenes
+
+
+def test_deterministic(media):
+    system = Murakkab.paper_cluster()
+    dag, plan = system.plan(make_declarative_job(MIN_COST))
+    o1 = RealExecutor(system.library, seed=0).run(dag, plan, media)
+    o2 = RealExecutor(system.library, seed=0).run(dag, plan, media)
+    for k in o1:
+        if k == "_timings":
+            continue
+        np.testing.assert_array_equal(np.asarray(o1[k]), np.asarray(o2[k]))
+
+
+def test_same_outputs_across_plans(media):
+    """Baseline plan and MIN_LATENCY plan compute identical summaries when
+    the underlying impls match (the paper's quality-preservation claim)."""
+    sys_a = Murakkab.paper_cluster()
+    dag_a, plan_a = sys_a.plan(make_declarative_job(MIN_COST))
+    out_a = RealExecutor(sys_a.library).run(dag_a, plan_a, media)
+
+    sys_b = Murakkab.paper_cluster()
+    dag_b, plan_b = sys_b.lower_imperative(make_baseline_workflow(),
+                                           PAPER_VIDEOS[:1])
+    out_b = RealExecutor(sys_b.library).run(dag_b, plan_b, media)
+
+    summ_a = [v for k, v in out_a.items() if "summar" in k][0]
+    summ_b = [v for k, v in out_b.items() if "summar" in k][0]
+    np.testing.assert_array_equal(np.asarray(summ_a), np.asarray(summ_b))
+
+
+def test_qa_agent(media):
+    system = Murakkab.paper_cluster()
+    dag, plan = system.plan(make_declarative_job(MIN_COST))
+    ex = RealExecutor(system.library)
+    ex.run(dag, plan, media)
+    ans = ex.qa(None, "what objects appear?", None)
+    assert ans.shape == (1, 8)

@@ -1,0 +1,122 @@
+"""Fault tolerance: restart driver, stragglers, elastic remesh
+(+ hypothesis on remesh-plan validity)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpointing.manager import CheckpointManager
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, DataIterator
+from repro.models.model_zoo import build_model
+from repro.runtime import train as train_rt
+from repro.runtime.fault_tolerance import (RestartPolicy, StragglerMonitor,
+                                           plan_remesh, run_with_restarts)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("deepseek-7b", reduced=True)
+    model = build_model(cfg)
+    opts = train_rt.TrainOptions(remat_policy=None, warmup_steps=1,
+                                 total_steps=30)
+    step = jax.jit(train_rt.build_train_step(model, opts))
+    return cfg, model, opts, step
+
+
+def test_restart_replays_to_identical_state(setup, tmp_path):
+    """A failure-riddled run ends bit-identical to a clean run (determinism
+    of the data pipeline + checkpoint restore)."""
+    cfg, model, opts, step = setup
+
+    def run(inject):
+        mgr = CheckpointManager(str(tmp_path / f"ck{inject}"),
+                                async_save=False)
+        state = train_rt.init_train_state(model, jax.random.PRNGKey(0), opts)
+        data = DataIterator(DataConfig(cfg.vocab_size, 16, 4), model_cfg=cfg)
+        injected = {6, 11} if inject else set()
+
+        def hook(s):
+            if s in injected:
+                injected.discard(s)
+                raise RuntimeError("boom")
+
+        state, hist, fails = run_with_restarts(
+            num_steps=15, state=state, data_iter=data, step_fn=step,
+            ckpt_manager=mgr, save_every=5,
+            policy=RestartPolicy(max_failures=4), fail_hook=hook)
+        return state, fails
+
+    clean, f0 = run(False)
+    faulty, f1 = run(True)
+    assert f0 == 0 and f1 == 2
+    import numpy as np
+    for a, b in zip(jax.tree.leaves(clean["params"]),
+                    jax.tree.leaves(faulty["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restart_gives_up_after_policy(setup, tmp_path):
+    cfg, model, opts, step = setup
+    mgr = CheckpointManager(str(tmp_path / "give_up"), async_save=False)
+    state = train_rt.init_train_state(model, jax.random.PRNGKey(0), opts)
+    data = DataIterator(DataConfig(cfg.vocab_size, 16, 4), model_cfg=cfg)
+
+    def always_fail(s):
+        if s >= 3:
+            raise RuntimeError("persistent failure")
+
+    with pytest.raises(RuntimeError, match="persistent"):
+        run_with_restarts(num_steps=10, state=state, data_iter=data,
+                          step_fn=step, ckpt_manager=mgr, save_every=2,
+                          policy=RestartPolicy(max_failures=2),
+                          fail_hook=always_fail)
+
+
+class TestStragglers:
+    def test_flags_slow_worker(self):
+        mon = StragglerMonitor(threshold=1.5)
+        for _ in range(10):
+            for w, d in [("a", 1.0), ("b", 1.1), ("c", 0.9), ("d", 3.0)]:
+                mon.record(w, d)
+        assert mon.stragglers() == ["d"]
+        assert mon.action("d") == "exclude"
+
+    def test_no_flag_on_uniform(self):
+        mon = StragglerMonitor()
+        for _ in range(5):
+            for w in "abcd":
+                mon.record(w, 1.0)
+        assert mon.stragglers() == []
+
+    def test_single_worker_never_flagged(self):
+        mon = StragglerMonitor()
+        mon.record("solo", 99.0)
+        assert mon.stragglers() == []
+
+
+class TestRemesh:
+    def test_prefers_shrinking_data_axes(self):
+        plan = plan_remesh((2, 16, 16), ("pod", "data", "model"), 256)
+        assert plan.new_shape == (1, 16, 16)
+        assert plan.resharded_axes == ("pod",)
+        assert plan.batch_scale == 2.0
+
+    def test_halves_model_only_when_forced(self):
+        plan = plan_remesh((1, 2, 16), ("pod", "data", "model"), 16)
+        assert plan.devices_used == 16
+        # either (1,1,16) keeping model, or fallback; model kept if possible
+        assert plan.new_shape[2] == 16
+
+    @given(st.integers(1, 512))
+    @settings(max_examples=80, deadline=None)
+    def test_plan_validity_property(self, avail):
+        plan = plan_remesh((2, 16, 16), ("pod", "data", "model"), avail)
+        used = 1
+        for s in plan.new_shape:
+            used *= s
+        assert used == plan.devices_used <= max(avail, 1)
+        assert all(s >= 1 for s in plan.new_shape)
+        assert plan.devices_lost == 512 - avail
+        # batch scale keeps global batch constant
+        assert abs(plan.batch_scale * plan.devices_used - 512) < 1e-6

@@ -1,0 +1,97 @@
+"""hlo_cost: the production-artifact cost model (§Roofline v2)."""
+import textwrap
+
+from repro.launch.hlo_cost import ScaledGraph, hlo_cost
+
+_HLO = textwrap.dedent("""\
+    HloModule test
+
+    %body.1 (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+      %p = (s32[], f32[8,128]) parameter(0)
+      %g = f32[8,128]{1,0} get-tuple-element(%p), index=1
+      %ar = f32[8,128]{1,0} all-reduce(%g), replica_groups=[16,16]<=[256], to_apply=%add
+      %d = f32[8,128]{1,0} add(%ar, %ar)
+      ROOT %t = (s32[], f32[8,128]) tuple(%c, %d)
+    }
+
+    %cond.1 (p2: (s32[], f32[8,128])) -> pred[] {
+      %p2 = (s32[], f32[8,128]) parameter(0)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+      %a = f32[8,128]{1,0} parameter(0)
+      %big = f32[1024,1024]{1,0} dot(%a, %a)
+      %w = (s32[], f32[8,128]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"30"},"other":1}
+      %ag = f32[64,128]{1,0} all-gather(%a), replica_groups={{0,1,2,3}}, dimensions={0}
+      ROOT %out = f32[8,128]{1,0} get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_trip_count_scaling():
+    g = ScaledGraph.parse(_HLO)
+    assert g.scale["__ENTRY__"] == 1.0
+    assert g.scale["body.1"] == 30.0
+    assert g.scale["cond.1"] == 31.0
+    assert g.depth["body.1"] == 1
+
+
+def test_collective_scaling():
+    c = hlo_cost(_HLO)
+    ar = c["coll"]["all-reduce"]
+    assert ar["count"] == 30.0
+    # 8*128*4 bytes * 2*(15/16) ring factor * 30 trips
+    assert abs(ar["bytes"] - 8 * 128 * 4 * 2 * 15 / 16 * 30) < 1e-6
+    ag = c["coll"]["all-gather"]
+    assert ag["count"] == 1.0
+    assert abs(ag["bytes"] - 64 * 128 * 4 * 3 / 4) < 1e-6
+
+
+def test_memory_counts_materialized_only():
+    g = ScaledGraph.parse(_HLO)
+    m = g.memory_traffic()
+    # body: (ar + add) x30; cond: compare x31; entry: dot + all-gather
+    # (parameters/GTE/tuple/while free)
+    expect = ((8 * 128 * 4 * 2) * 30 * 2      # ar + add
+              + 1 * 31 * 2                     # pred compare
+              + 1024 * 1024 * 4 * 2            # dot
+              + 64 * 128 * 4 * 2)              # all-gather result
+    assert abs(m - expect) < 1e-6
+
+
+def test_variadic_collective_bytes():
+    hlo = ("ENTRY %m (x: f32[4]) -> f32[4] {\n"
+           "  %ar = (f32[256,128]{1,0}, f32[256,128]{1,0}) all-reduce("
+           "%a, %b), replica_groups=[2,8]<=[16], to_apply=%add\n"
+           "  ROOT %r = f32[4]{0} parameter(0)\n}\n")
+    c = hlo_cost(hlo)
+    assert c["coll"]["all-reduce"]["raw_bytes"] == 2 * 256 * 128 * 4
+
+
+def test_kernel_boundary_excluded():
+    hlo = ('ENTRY %m (x: f32[4]) -> f32[4] {\n'
+           '  %k = f32[1024,1024]{1,0} dot(%x, %x), metadata={op_name='
+           '"jit(f)/pk_flash_attention/dot_general"}\n'
+           '  %d = f32[512,512]{1,0} dot(%x, %x), metadata={op_name='
+           '"jit(f)/other/dot_general"}\n'
+           '  ROOT %r = f32[4]{0} parameter(0)\n}\n')
+    g = ScaledGraph.parse(hlo)
+    assert g.memory_traffic() == 512 * 512 * 4 * 2
+
+
+def test_serving_rules_replicate_weights():
+    import types
+    import numpy as np
+    from repro.runtime import sharding as shd
+    fake = types.SimpleNamespace(axis_names=("data", "model"),
+                                 devices=np.zeros((16, 16)))
+    # dense weight: default FSDP on embed vs serving replication
+    d = shd.spec_for_axes(("embed", "mlp"), (4096, 11008), fake)
+    s = shd.spec_for_axes(("embed", "mlp"), (4096, 11008), fake,
+                          rules=shd.SERVING_RULES)
+    assert d[0] == "data" and s[0] is None
+    # expert weight 2D: experts->model, f->data once embed is replicated
+    e = shd.spec_for_axes(("experts", "embed", "expert_mlp"),
+                          (384, 7168, 2048), fake, rules=shd.SERVING_RULES)
+    assert e[0] == "model" and e[1] is None and e[2] == "data"

@@ -1,0 +1,163 @@
+"""Model-level correctness: KV-cache decode == full forward, RoPE/norm
+properties, MoE routing invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import moe as moe_mod
+from repro.models.common import apply_rope, rms_norm, softcap
+from repro.models.model_zoo import build_model
+from repro.runtime import serve as serve_rt
+
+# bf16 params + bf16 P in the decode GEMV (§Perf A1: avoids the hoisted
+# fp32 full-cache copy). Max observed logit delta ~0.04 on ~10-magnitude
+# logits; greedy argmax is unaffected (asserted in serve smoke tests).
+DECODE_TOL = 6e-2
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_equals_forward(arch):
+    """Prefill(S-1) + decode(1) logits == full forward at the last position.
+
+    This is the KV-cache/SSM-state correctness proof per architecture."""
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 17
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    extras = model.extra_inputs(B, S - 1)
+    logits_full, _, _ = model.apply(
+        params, {"tokens": toks, **model.extra_inputs(B, S)}, mode="train")
+
+    enc_len = model.enc_len_for(S - 1)
+    cache = model.init_cache(B, S + 2, enc_len=enc_len)
+    prefill = serve_rt.build_prefill_step(model, serve_rt.ServeOptions())
+    _, cache = prefill(params, {"tokens": toks[:, :S - 1], **extras}, cache)
+    decode = serve_rt.build_decode_step(model, serve_rt.ServeOptions())
+    _, last, _ = decode(params, cache, toks[:, S - 1:S],
+                        jnp.asarray(S - 1, jnp.int32))
+    if cfg.family == "encdec":
+        # decode sees the encoder KV of the S-1 prefill; compare against a
+        # full forward with the same encoder inputs
+        logits_full, _, _ = model.apply(
+            params, {"tokens": toks, **model.extra_inputs(B, S - 1)},
+            mode="train")
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(logits_full[:, -1]),
+                               atol=DECODE_TOL, rtol=DECODE_TOL)
+
+
+def test_rope_relative_property():
+    """RoPE: <q_i, k_j> depends only on i - j (orthogonal rotation)."""
+    D = 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([[i]]))
+        kj = apply_rope(k, jnp.array([[j]]))
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3
+    assert abs(dot_at(0, 0) - float(jnp.sum(q * k))) < 1e-4
+
+
+def test_rope_partial_rotation():
+    """stablelm-style rope_pct rotates only a prefix of head_dim."""
+    D = 64
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 2, D))
+    y = apply_rope(x, jnp.arange(4)[None], rope_pct=0.25)
+    rot = int(D * 0.25)
+    np.testing.assert_array_equal(np.asarray(y[..., rot:]),
+                                  np.asarray(x[..., rot:]))
+    assert not np.allclose(np.asarray(y[..., 1, :, :rot]),
+                           np.asarray(x[..., 1, :, :rot]))
+
+
+def test_rms_norm_scale_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 32))
+    y1 = rms_norm(x, jnp.ones(32))
+    y2 = rms_norm(x * 100.0, jnp.ones(32))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    # unit RMS out
+    rms = jnp.sqrt(jnp.mean(jnp.square(y1), -1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
+
+
+@given(st.floats(1.0, 100.0), st.floats(-1e4, 1e4))
+@settings(max_examples=50, deadline=None)
+def test_softcap_bounds(cap, v):
+    out = float(softcap(jnp.asarray(v), cap))
+    assert abs(out) <= cap * 1.0001
+    if abs(v) < cap / 10:           # ~identity in the linear region
+        assert abs(out - v) < abs(v) * 0.05 + 1e-6
+
+
+class TestMoE:
+    def _setup(self, T=64):
+        cfg = get_config("deepseek-moe-16b", reduced=True)
+        key = jax.random.PRNGKey(0)
+        from repro.models.moe import moe_specs
+        from repro.models.common import init_params
+        p = init_params(moe_specs(cfg), key, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (T, cfg.d_model),
+                              jnp.float32)
+        return cfg, p, x
+
+    def test_router_topk_weights_normalized(self):
+        cfg, p, x = self._setup()
+        idx, w, aux = moe_mod._route(x, p["router"], cfg)
+        assert idx.shape == (64, cfg.moe.top_k)
+        np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-3)
+        assert float(aux) > 0
+
+    def test_dispatch_preserves_tokens(self):
+        """Sort-based dispatch: every kept assignment lands in exactly one
+        slot, dropped slots point at the padding token."""
+        cfg, p, x = self._setup()
+        T = x.shape[0]
+        E, k = cfg.moe.num_experts, cfg.moe.top_k
+        C = moe_mod._capacity(T, cfg)
+        idx, w, _ = moe_mod._route(x, p["router"], cfg)
+        gather_idx, inv = moe_mod._dispatch_indices(idx, E, C)
+        assert gather_idx.shape == (E, C)
+        assert bool(jnp.all((gather_idx >= 0) & (gather_idx <= T)))
+        # every token index in a slot belongs to a real routed assignment
+        flat = np.asarray(gather_idx).reshape(-1)
+        routed = set()
+        idx_np = np.asarray(idx)
+        for t in range(T):
+            for e in idx_np[t]:
+                routed.add((int(e), t))
+        for e in range(E):
+            for c in range(C):
+                tok = int(np.asarray(gather_idx)[e, c])
+                if tok < T:
+                    assert (e, tok) in routed
+
+    def test_local_moe_finite_and_shaped(self):
+        cfg, p, x = self._setup()
+        out, aux = moe_mod._moe_local(x, p, cfg)
+        assert out.shape == x.shape
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_high_capacity_matches_dense_compute(self):
+        """With capacity >> needed, MoE == explicit per-token expert sum."""
+        cfg, p, x = self._setup(T=16)
+        cfg = cfg.replace(moe=cfg.moe.__class__(
+            **{**cfg.moe.__dict__, "capacity_factor": 64.0}))
+        out, _ = moe_mod._moe_local(x, p, cfg)
+        idx, w, _ = moe_mod._route(x, p["router"], cfg)
+        act = jax.nn.silu
+        want = jnp.zeros_like(x)
+        for t in range(16):
+            acc = jnp.zeros((cfg.d_model,), jnp.float32)
+            for j in range(cfg.moe.top_k):
+                e = int(idx[t, j])
+                h = act(x[t] @ p["w_gate"][e]) * (x[t] @ p["w_up"][e])
+                acc += float(w[t, j]) * (h @ p["w_down"][e])
+            want = want.at[t].set(acc)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=5e-3, rtol=5e-3)

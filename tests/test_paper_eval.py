@@ -1,0 +1,58 @@
+"""The paper's evaluation endpoints (§4, Fig. 3, Table 2) as assertions."""
+import numpy as np
+import pytest
+
+from benchmarks.paper_eval import PAPER_TARGETS, run_all, prewarm
+from repro.core import MIN_COST, Murakkab
+from repro.configs.workflow_video import make_declarative_job
+
+
+@pytest.fixture(scope="module")
+def results():
+    return run_all()
+
+
+def test_baseline_matches_paper(results):
+    mk, wh, _ = results["baseline"]
+    assert abs(mk / PAPER_TARGETS["baseline"][0] - 1) < 0.10
+    assert abs(wh / PAPER_TARGETS["baseline"][1] - 1) < 0.15
+
+
+def test_murakkab_cpu_matches_paper(results):
+    mk, wh, _ = results["cpu"]
+    assert abs(mk / PAPER_TARGETS["cpu"][0] - 1) < 0.05
+    assert abs(wh / PAPER_TARGETS["cpu"][1] - 1) < 0.05
+
+
+def test_murakkab_gpu_rows_close(results):
+    for row in ("gpu", "gpu+cpu"):
+        mk, wh, _ = results[row]
+        assert abs(mk / PAPER_TARGETS[row][0] - 1) < 0.10, row
+        assert abs(wh / PAPER_TARGETS[row][1] - 1) < 0.20, row
+
+
+def test_headline_speedup(results):
+    speed = results["baseline"][0] / results["cpu"][0]
+    assert 3.2 <= speed <= 3.9        # paper ~3.4x
+
+
+def test_headline_energy_efficiency(results):
+    eff = results["baseline"][1] / results["cpu"][1]
+    assert 4.2 <= eff <= 5.3          # paper ~4.5x
+
+
+def test_min_cost_selects_cpu_config():
+    system = Murakkab.paper_cluster()
+    prewarm(system)
+    dag, plan = system.plan(make_declarative_job(MIN_COST))
+    stt = next(c for t, c in plan.configs.items() if "speech" in t)
+    assert stt.impl == "whisper-large" and stt.pool == "cpu"
+    assert stt.n_devices == 64        # the profiled 64-core configuration
+
+
+def test_murakkab_configs_all_beat_baseline(results):
+    base_mk, base_wh, _ = results["baseline"]
+    for row in ("cpu", "gpu", "gpu+cpu"):
+        mk, wh, _ = results[row]
+        assert mk < base_mk / 3.0     # >=3x faster
+        assert wh < base_wh / 3.5     # >=3.5x less energy
