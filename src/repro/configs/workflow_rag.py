@@ -1,0 +1,68 @@
+"""Agentic-RAG workflow: retrieve -> rerank -> synthesize -> index.
+
+Built purely on the declarative API (DESIGN.md §2): the scenario registers
+its default decomposition and toolcall-arg builders; cardinality and token
+models come from the producing interfaces. Nothing in core knows RAG exists.
+
+The headline lever is *retrieval routing* (beyond-vector-search): the
+``retrieve`` interface has a keyword (BM25), a dense (vector) and a hybrid
+implementation on the same quality ladder, so constraint choice routes the
+query — ``MIN_COST`` runs lexical retrieval on CPU cores, ``MAX_QUALITY``
+pays for hybrid retrieval — with no change to the workflow definition.
+"""
+from __future__ import annotations
+
+from ..core.spec import SCENARIOS, Scenario
+from ..core.workflow import QueryInput
+
+# a small analyst query mix over an indexed filings corpus
+RAG_QUERIES = (
+    QueryInput("What supply-chain risks does the 2024 10-K disclose?",
+               top_k=5, candidates=20),
+    QueryInput("Summarize the segment revenue trends year over year",
+               top_k=5, candidates=20),
+    QueryInput("Which acquisitions closed during the fiscal year?",
+               top_k=5, candidates=20),
+    QueryInput("What litigation contingencies are reserved for?",
+               top_k=5, candidates=20),
+)
+
+
+def _first_query(job) -> QueryInput:
+    qs = [q for q in job.inputs if isinstance(q, QueryInput)]
+    return qs[0] if qs else QueryInput("input")
+
+
+RAG_SCENARIO = SCENARIOS.register(Scenario(
+    name="agentic_rag",
+    input_artifacts=("query",),
+    default_tasks=(
+        "Retrieve candidate passages from the corpus for the query",
+        "Rerank the retrieved passages by relevance",
+        "Synthesize a grounded answer from the top passages",
+    ),
+    aggregate_tasks=(
+        "Index the answer embedding into the semantic cache",
+    ),
+    arg_builders={
+        "retrieve": lambda job: {"query": _first_query(job).text,
+                                 "k": _first_query(job).candidates},
+        "rerank": lambda job: {"passages": "$passages",
+                               "top_k": _first_query(job).top_k},
+        "synthesize": lambda job: {"query": _first_query(job).text,
+                                   "max_tokens": 200},
+        "embed": lambda job: {"texts": "$grounded_answer"},
+    }))
+
+
+def make_rag_job(constraints=None, queries=RAG_QUERIES):
+    """Declarative agentic-RAG job over the default query mix."""
+    from ..core.workflow import MIN_COST, Job
+    return Job(
+        description="Answer analyst questions over the filings corpus",
+        inputs=queries,
+        constraints=MIN_COST if constraints is None else constraints,
+        # floors admit the keyword route (0.82) but gate junk impls; raise
+        # the retrieve floor to force the dense/hybrid route.
+        quality_floor={"retrieve": 0.8, "rerank": 0.85, "synthesize": 0.85,
+                       "embed": 0.85})

@@ -19,6 +19,7 @@ input; the scene/frame granularity is OmAgent's segmentation).
 from __future__ import annotations
 
 from ..core.profiles import ProfileStore
+from ..core.spec import SCENARIOS, Scenario
 from ..core.workflow import VideoInput
 
 # the two input videos of paper Listing 1/2
@@ -52,6 +53,50 @@ PAPER_PROFILES: dict[tuple[str, str, int], tuple[float, float]] = {
 def calibrate_paper_profiles(store: ProfileStore):
     for (impl, dev, n), (lat, pf) in PAPER_PROFILES.items():
         store.pin(impl, dev, n, lat, power_frac=pf)
+
+
+# ---------------------------------------------------------------------------
+# Scenario registration: the video pipeline as one workload among peers
+# ---------------------------------------------------------------------------
+
+
+def _first_video(job) -> VideoInput:
+    vids = [v for v in job.inputs if isinstance(v, VideoInput)]
+    return vids[0] if vids else VideoInput("input")
+
+
+def _frame_extract_args(job) -> dict:
+    first = _first_video(job)
+    return {"file": first.name, "start_time": 0,
+            "end_time": int(first.duration_s),
+            "num_frames": first.frames_per_scene}
+
+
+VIDEO_SCENARIO = SCENARIOS.register(Scenario(
+    name="video_understanding",
+    input_artifacts=("video",),
+    # paper Listing 2's t1..t3 (RulePlanner fallback when the job gives no
+    # sub-task hints) ...
+    default_tasks=(
+        "Extract frames from each video",
+        "Run speech-to-text on all scenes",
+        "Detect objects in the frames",
+    ),
+    # ... plus the aggregation stages of the evaluated workflow
+    aggregate_tasks=(
+        "Summarize each scene using the gathered context",
+        "Embed the summaries into the vector database",
+    ),
+    arg_builders={
+        "frame_extract": _frame_extract_args,
+        "speech_to_text": lambda job: {"file": _first_video(job).name,
+                                       "language": "en"},
+        "object_detect": lambda job: {"frames": "$frames", "labels": "auto"},
+        "summarize": lambda job: {"context": "$frames+$objects+$transcript",
+                                  "max_tokens": 120},
+        "embed": lambda job: {"texts": "$summary"},
+        "qa": lambda job: {"question": job.description, "top_k": 5},
+    }))
 
 
 def make_baseline_workflow():

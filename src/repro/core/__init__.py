@@ -4,7 +4,8 @@ Public API::
 
     from repro.core import (Job, Workflow, Tool, MLModel, LLM,
                             MIN_COST, MIN_ENERGY, MIN_LATENCY, MAX_QUALITY,
-                            Murakkab, VideoInput)
+                            Deadline, Budget, Weighted, Lexicographic,
+                            Murakkab, VideoInput, DocumentInput, QueryInput)
 
     system = Murakkab.paper_cluster()
     result = Job("List objects shown/mentioned in the videos",
@@ -13,16 +14,23 @@ Public API::
 from .agents import (AgentImpl, AgentInterface, AgentLibrary, Work,
                      default_library)
 from .cluster import ClusterManager, Instance, Pool
+from .constraints import (Budget, Constraint, ConstraintSpec, Deadline,
+                          Lexicographic, MaxQuality, MinCost, MinEnergy,
+                          MinLatency, Objective, Weighted, as_spec)
 from .dag import DAG, TaskNode
 from .energy import CATALOG, DeviceSpec, EnergyLedger, roofline_latency
 from .orchestrator import LLMPlanner, RulePlanner, dag_creation_overhead
 from .profiles import Profile, ProfileStore
 from .scheduler import ExecutionPlan, Scheduler, TaskConfig
 from .simulator import SimReport, Simulator, TraceEntry, render_trace
+from .spec import (ARTIFACTS, SCENARIOS, Artifact, ArtifactRegistry,
+                   CardinalityModel, InputSet, Scenario, ScenarioRegistry,
+                   TaskSpec, TokenModel, build_node, input_artifacts,
+                   input_units)
 from .system import JobResult, Murakkab
 from .workflow import (LLM, MAX_QUALITY, MIN_COST, MIN_ENERGY, MIN_LATENCY,
-                       Constraint, ImperativeWorkflow, Job, MLModel, Tool,
-                       VideoInput, Workflow)
+                       DocumentInput, ImperativeWorkflow, Job, MLModel,
+                       QueryInput, Tool, VideoInput, Workflow)
 
 __all__ = [
     "AgentImpl", "AgentInterface", "AgentLibrary", "Work", "default_library",
@@ -32,7 +40,13 @@ __all__ = [
     "Profile", "ProfileStore", "ExecutionPlan", "Scheduler", "TaskConfig",
     "SimReport", "Simulator", "TraceEntry", "render_trace",
     "JobResult", "Murakkab",
+    "ARTIFACTS", "SCENARIOS", "Artifact", "ArtifactRegistry",
+    "CardinalityModel", "InputSet", "Scenario", "ScenarioRegistry",
+    "TaskSpec", "TokenModel", "build_node", "input_artifacts", "input_units",
+    "Budget", "Constraint", "ConstraintSpec", "Deadline", "Lexicographic",
+    "MaxQuality", "MinCost", "MinEnergy", "MinLatency", "Objective",
+    "Weighted", "as_spec",
     "LLM", "MAX_QUALITY", "MIN_COST", "MIN_ENERGY", "MIN_LATENCY",
-    "Constraint", "ImperativeWorkflow", "Job", "MLModel", "Tool",
-    "VideoInput", "Workflow",
+    "DocumentInput", "ImperativeWorkflow", "Job", "MLModel", "QueryInput",
+    "Tool", "VideoInput", "Workflow",
 ]

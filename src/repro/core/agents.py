@@ -13,11 +13,13 @@ CPU end-to-end.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Callable
 
 from ..configs.registry import get_config
 from ..models.model_zoo import build_model
+from .spec import ARTIFACTS, CardinalityModel, TokenModel
 
 
 @dataclass(frozen=True)
@@ -40,14 +42,22 @@ class Work:
 
 @dataclass(frozen=True)
 class AgentInterface:
-    """A capability tasks can bind to, with a toolcall schema."""
+    """A capability tasks can bind to, with a toolcall schema.
+
+    The interface *declares* its workload shape (DESIGN.md §2): how one
+    invocation fans out over the job's input units (``cardinality``) and its
+    per-item token footprint (``tokens``). Planners read these; no lowering
+    path carries per-interface constants.
+    """
 
     name: str
     description: str
     schema: dict[str, str]            # arg name -> type (toolcall schema)
     keywords: tuple[str, ...]         # rule-planner matching terms
-    produces: str                     # dataflow type: frames|transcript|...
+    produces: str                     # artifact type: frames|transcript|...
     consumes: tuple[str, ...] = ()
+    cardinality: CardinalityModel = CardinalityModel()
+    tokens: TokenModel = TokenModel()
 
 
 @dataclass(frozen=True)
@@ -76,6 +86,7 @@ class AgentImpl:
     batch_alpha: float = 1.0
 
 
+@functools.lru_cache(maxsize=None)
 def _lm_work(arch: str) -> tuple[Callable[[int, int], Work], float]:
     """LLM workload model from a zoo config: prefill FLOPs + decode bytes.
 
@@ -111,6 +122,9 @@ class AgentLibrary:
         self.impls: dict[str, AgentImpl] = {}
 
     def register_interface(self, iface: AgentInterface):
+        ARTIFACTS[iface.produces]             # typo -> registration error
+        for c in iface.consumes:
+            ARTIFACTS[c]
         self.interfaces[iface.name] = iface
 
     def register_impl(self, impl: AgentImpl):
@@ -162,32 +176,79 @@ def default_library() -> AgentLibrary:
         schema={"file": "str", "start_time": "float", "end_time": "float",
                 "num_frames": "int"},
         keywords=("frame", "extract", "sample", "video"),
-        produces="frames", consumes=("video",)))
+        produces="frames", consumes=("video",),
+        cardinality=CardinalityModel(("scenes",))))
     lib.register_interface(AgentInterface(
         "speech_to_text", "Transcribe speech audio to text",
         schema={"file": "str", "language": "str"},
         keywords=("speech", "transcri", "audio", "text", "stt"),
-        produces="transcript", consumes=("video",)))
+        produces="transcript", consumes=("video",),
+        cardinality=CardinalityModel(("scenes",))))
     lib.register_interface(AgentInterface(
         "object_detect", "Detect/classify objects in images",
         schema={"frames": "list", "labels": "list"},
         keywords=("object", "detect", "classif", "recogni"),
-        produces="objects", consumes=("frames",)))
+        produces="objects", consumes=("frames",),
+        cardinality=CardinalityModel(("scenes",))))
     lib.register_interface(AgentInterface(
         "summarize", "Summarize scenes from frames, objects and transcripts",
         schema={"context": "str", "max_tokens": "int"},
         keywords=("summar", "describe", "caption"),
-        produces="summary", consumes=("frames", "objects", "transcript")))
+        produces="summary", consumes=("frames", "objects", "transcript"),
+        cardinality=CardinalityModel(("frames",)),
+        tokens=TokenModel(tokens_in=900, tokens_out=120)))
     lib.register_interface(AgentInterface(
         "embed", "Embed text into a vector DB for retrieval",
         schema={"texts": "list"},
         keywords=("embed", "vector", "index", "insert"),
-        produces="vectors", consumes=("summary",)))
+        produces="vectors",
+        consumes=("summary", "grounded_answer", "chunk_summaries"),
+        cardinality=CardinalityModel(("scenes", "chunks", "queries"))))
     lib.register_interface(AgentInterface(
         "qa", "Answer questions over retrieved context",
         schema={"question": "str", "top_k": "int"},
-        keywords=("answer", "question", "qa", "query"),
-        produces="answer", consumes=("vectors",)))
+        keywords=("answer", "question", "qa"),
+        produces="answer", consumes=("vectors",),
+        cardinality=CardinalityModel(("queries", "scenes")),
+        tokens=TokenModel(tokens_in=900, tokens_out=120)))
+
+    # ---- retrieval-augmented generation interfaces ----
+    lib.register_interface(AgentInterface(
+        "retrieve", "Retrieve candidate passages for a query from a corpus",
+        schema={"query": "str", "k": "int"},
+        keywords=("retriev", "corpus", "search"),
+        produces="passages", consumes=("query", "vectors"),
+        cardinality=CardinalityModel(("queries",)),
+        tokens=TokenModel(tokens_in=64, tokens_out=0)))
+    lib.register_interface(AgentInterface(
+        "rerank", "Rerank retrieved passages by relevance to the query",
+        schema={"passages": "list", "top_k": "int"},
+        keywords=("rerank", "relevance"),
+        produces="ranked_passages", consumes=("passages",),
+        cardinality=CardinalityModel(("passages",)),
+        tokens=TokenModel(tokens_in=256, tokens_out=8)))
+    lib.register_interface(AgentInterface(
+        "synthesize", "Synthesize a grounded answer from ranked passages",
+        schema={"query": "str", "max_tokens": "int"},
+        keywords=("synthes", "grounded", "compose"),
+        produces="grounded_answer", consumes=("ranked_passages", "query"),
+        cardinality=CardinalityModel(("queries",)),
+        tokens=TokenModel(tokens_in=1200, tokens_out=200)))
+
+    # ---- document-ingest interfaces ----
+    lib.register_interface(AgentInterface(
+        "parse_doc", "Parse a document and split it into text chunks",
+        schema={"file": "str", "chunk_tokens": "int"},
+        keywords=("parse", "ingest", "ocr", "pdf", "chunk"),
+        produces="text_chunks", consumes=("document",),
+        cardinality=CardinalityModel(("pages", "documents"))))
+    lib.register_interface(AgentInterface(
+        "digest", "Write a digest of each document chunk",
+        schema={"chunks": "list", "max_tokens": "int"},
+        keywords=("digest", "condense"),
+        produces="chunk_summaries", consumes=("text_chunks",),
+        cardinality=CardinalityModel(("chunks",)),
+        tokens=TokenModel(tokens_in=700, tokens_out=90)))
 
     # ---- tools ----
     lib.register_impl(AgentImpl(
@@ -297,4 +358,84 @@ def default_library() -> AgentLibrary:
         max_devices={"cpu": 16, "gpu": 1, "tpu": 1}, power_frac=0.4,
         load_time_s=1.0, arch="mamba2-370m", params_bytes=mbytes,
         overhead_s=0.2))
+
+    # ---- retrieval tiers: the keyword-vs-vector routing lever ----
+    # (beyond-vector-search: lexical BM25 is orders of magnitude cheaper and
+    #  often good enough; dense/hybrid retrieval buys recall with compute)
+    lib.register_impl(AgentImpl(
+        "bm25-keyword", "retrieve", quality=0.82, hw_kinds=("cpu",),
+        work_fn=_fixed_work(flops=5.0e9, bytes_=2.0e9),
+        max_devices={"cpu": 8}, power_frac=0.9, overhead_s=0.1))
+    lib.register_impl(AgentImpl(
+        "dense-retrieval", "retrieve", quality=0.92,
+        hw_kinds=("cpu", "gpu", "tpu"),
+        work_fn=_fixed_work(flops=2.0e11, bytes_=2.0e10),
+        max_devices={"cpu": 16, "gpu": 1, "tpu": 1}, power_frac=0.5,
+        load_time_s=2.0, params_bytes=4.0e8, max_batch=16, batch_alpha=0.4,
+        overhead_s=0.2))
+    lib.register_impl(AgentImpl(
+        "hybrid-retrieval", "retrieve", quality=0.97,
+        hw_kinds=("cpu", "gpu", "tpu"),
+        work_fn=_fixed_work(flops=3.0e11, bytes_=3.2e10),
+        max_devices={"cpu": 16, "gpu": 1, "tpu": 1}, power_frac=0.55,
+        load_time_s=2.0, params_bytes=4.0e8, max_batch=16, batch_alpha=0.4,
+        overhead_s=0.3))
+
+    # ---- rerank tiers ----
+    lib.register_impl(AgentImpl(
+        "minilm-cross-encoder", "rerank", quality=0.90,
+        hw_kinds=("cpu", "gpu", "tpu"),
+        work_fn=_fixed_work(flops=4.0e10, bytes_=4.0e9),
+        max_devices={"cpu": 16, "gpu": 1, "tpu": 1}, power_frac=0.6,
+        load_time_s=1.0, params_bytes=1.3e8, max_batch=32, batch_alpha=0.3,
+        overhead_s=0.1))
+    rr_work, rr_bytes = _lm_work("gemma2-9b")
+    lib.register_impl(AgentImpl(
+        "gemma2-9b-rerank", "rerank", quality=0.97, hw_kinds=("gpu", "tpu"),
+        work_fn=rr_work, max_devices={"gpu": 8, "tpu": 8}, power_frac=0.65,
+        load_time_s=8.0, arch="gemma2-9b", params_bytes=rr_bytes,
+        max_batch=64, batch_alpha=0.2, overhead_s=0.2))
+
+    # ---- synthesis tiers (zoo ladder over the synthesize interface) ----
+    for arch, quality, hw in [
+        ("deepseek-7b", 0.86, ("gpu", "tpu")),
+        ("gemma2-9b", 0.90, ("gpu", "tpu")),
+        ("command-r-plus-104b", 0.97, ("tpu",)),
+    ]:
+        wfn, pbytes = _lm_work(arch)
+        big = pbytes > 60e9
+        lib.register_impl(AgentImpl(
+            f"{arch}-synth", "synthesize", quality=quality, hw_kinds=hw,
+            work_fn=wfn,
+            min_devices={"tpu": 8 if big else 1, "gpu": 8 if big else 1},
+            max_devices={"tpu": 64, "gpu": 8}, power_frac=0.65,
+            load_time_s=45.0 if big else 8.0, arch=arch, params_bytes=pbytes,
+            max_batch=32, batch_alpha=0.15, overhead_s=0.3))
+
+    # ---- document parsing tiers ----
+    lib.register_impl(AgentImpl(
+        "pypdf-parse", "parse_doc", quality=0.90, hw_kinds=("cpu",),
+        work_fn=_fixed_work(flops=1.0e9, bytes_=5.0e8),    # per page
+        max_devices={"cpu": 16}, power_frac=1.0, overhead_s=0.2))
+    lib.register_impl(AgentImpl(
+        "layout-ocr", "parse_doc", quality=0.98,
+        hw_kinds=("cpu", "gpu", "tpu"),
+        work_fn=_fixed_work(flops=8.0e11, bytes_=6.0e10),
+        max_devices={"cpu": 16, "gpu": 1, "tpu": 1}, power_frac=0.55,
+        load_time_s=3.0, params_bytes=9.0e8, max_batch=8, batch_alpha=0.4,
+        overhead_s=0.3))
+
+    # ---- digest tiers (batch summarization over chunks) ----
+    for arch, quality in [("deepseek-7b", 0.87), ("gemma2-9b", 0.90),
+                          ("stablelm-12b", 0.88),
+                          ("command-r-plus-104b", 0.97)]:
+        wfn, pbytes = _lm_work(arch)
+        big = pbytes > 60e9
+        lib.register_impl(AgentImpl(
+            f"{arch}-digest", "digest", quality=quality,
+            hw_kinds=("tpu",) if big else ("gpu", "tpu"), work_fn=wfn,
+            min_devices={"tpu": 8 if big else 1, "gpu": 8 if big else 1},
+            max_devices={"tpu": 64, "gpu": 8}, power_frac=0.65,
+            load_time_s=45.0 if big else 8.0, arch=arch, params_bytes=pbytes,
+            max_batch=64, batch_alpha=0.15, overhead_s=0.3))
     return lib

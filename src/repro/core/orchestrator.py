@@ -3,16 +3,20 @@
 Two planners behind one interface:
 
 - ``RulePlanner`` — deterministic: keyword/schema matching over the agent
-  library, dataflow edges derived from interface produces/consumes types.
-  This is the offline stand-in for the paper's orchestrator LLM (DESIGN.md
-  §5.3 records the substitution; the paper itself measures DAG creation at
-  <1% of workflow time, so the swap does not distort the evaluation).
+  library, dataflow edges derived from interface produces/consumes artifact
+  types. This is the offline stand-in for the paper's orchestrator LLM
+  (DESIGN.md §5.3 records the substitution; the paper itself measures DAG
+  creation at <1% of workflow time, so the swap does not distort the
+  evaluation).
 - ``LLMPlanner`` — the paper's NVLM/ReAct protocol: agent library via system
   prompt, task descriptions via user prompt, JSON DAG back. Takes any
   ``llm_fn(system, user) -> str`` (tests inject a fake; production would bind
   a served model from the zoo).
 
-Both emit toolcalls in the paper's format, e.g.
+Both are scenario-agnostic: work-item cardinality and token footprints come
+from the producing interface's declared ``CardinalityModel``/``TokenModel``,
+default decompositions and toolcall args from the matched registered
+``Scenario`` (DESIGN.md §2). Both emit toolcalls in the paper's format, e.g.
 ``FrameExtractor(end_time=60, file='cats.mov', num_frames=10, start_time=0)``.
 """
 from __future__ import annotations
@@ -20,103 +24,67 @@ from __future__ import annotations
 import json
 import math
 from dataclasses import dataclass
-from typing import Callable, Sequence
+from typing import Callable
 
 from .agents import AgentLibrary
 from .dag import DAG, TaskNode
-from .workflow import Job, VideoInput
-
-# Default NL decomposition templates per job genre (RulePlanner fallback when
-# the job gives no sub-task hints). Mirrors paper Listing 2's t1..t3 plus the
-# aggregation stages of the evaluated workflow (summarize + embed).
-_VIDEO_TASKS = (
-    "Extract frames from each video",
-    "Run speech-to-text on all scenes",
-    "Detect objects in the frames",
-)
-_AGGREGATE_TASKS = (
-    "Summarize each scene using the gathered context",
-    "Embed the summaries into the vector database",
-)
-
-
-def _scenes(inputs: Sequence) -> tuple[int, int]:
-    """(total scenes, frames per scene) across the job's video inputs."""
-    vids = [v for v in inputs if isinstance(v, VideoInput)]
-    if not vids:
-        return 1, 1
-    return (sum(v.scenes for v in vids),
-            max(v.frames_per_scene for v in vids))
+from .spec import SCENARIOS, TaskSpec, build_node, input_units
+from .workflow import Job
 
 
 class RulePlanner:
     """Deterministic job -> DAG lowering via the agent library."""
 
-    # per-frame summarize context: frame caption + objects + transcript chunk
-    SUMM_TOKENS_IN = 900
-    SUMM_TOKENS_OUT = 120
-
     def __init__(self, library: AgentLibrary):
         self.library = library
 
-    def decompose(self, job: Job) -> list[str]:
-        """Job description -> NL sub-tasks (hints kept if sufficient)."""
-        tasks = list(job.tasks)
-        if not tasks:
-            tasks = list(_VIDEO_TASKS)
+    def decompose(self, job: Job) -> list[TaskSpec]:
+        """Job description -> typed task specs (hints kept if sufficient)."""
+        scenario = SCENARIOS.match(job.inputs)
+        if scenario is not None:
+            unknown = set(scenario.arg_builders) - set(self.library.interfaces)
+            if unknown:
+                raise ValueError(
+                    f"scenario {scenario.name!r} has arg_builders for "
+                    f"interfaces unknown to this library: {sorted(unknown)}")
+        texts = list(job.tasks)
+        if not texts:
+            if scenario is None:
+                raise ValueError(
+                    "job has no sub-task hints and no registered scenario "
+                    f"matches its inputs; scenarios: {SCENARIOS.names()}")
+            texts = list(scenario.default_tasks)
         # ensure the job's deliverable is produced: aggregation stages
-        mapped = {self.library.match_interface(t) for t in tasks}
-        for extra in _AGGREGATE_TASKS:
-            if self.library.match_interface(extra) not in mapped:
-                tasks.append(extra)
-                mapped.add(self.library.match_interface(extra))
-        return tasks
-
-    def lower(self, job: Job) -> DAG:
-        tasks = self.decompose(job)
-        scenes, fps = _scenes(job.inputs)
-        nodes: list[TaskNode] = []
-        produced: dict[str, str] = {}         # dataflow type -> producer id
-        for i, text in enumerate(tasks):
+        mapped = {self.library.match_interface(t) for t in texts}
+        for extra in (scenario.aggregate_tasks if scenario else ()):
+            m = self.library.match_interface(extra)
+            if m not in mapped:
+                texts.append(extra)
+                mapped.add(m)
+        specs: list[TaskSpec] = []
+        for text in texts:
             iface_name = self.library.match_interface(text)
             if iface_name is None:
                 raise ValueError(
                     f"no agent in the library matches task {text!r}")
-            iface = self.library.interfaces[iface_name]
+            args = scenario.args_for(iface_name, job) if scenario else {}
+            specs.append(TaskSpec(description=text, interface=iface_name,
+                                  args=args))
+        return specs
+
+    def lower(self, job: Job) -> DAG:
+        specs = self.decompose(job)
+        units = input_units(job.inputs)
+        nodes: list[TaskNode] = []
+        produced: dict[str, str] = {}         # artifact type -> producer id
+        for i, ts in enumerate(specs):
+            iface = self.library.interfaces[ts.interface]
             deps = tuple(produced[c] for c in iface.consumes if c in produced)
-            tid = f"t{i}_{iface_name}"
-            work_items = scenes * fps if iface_name == "summarize" else scenes
-            tok_in = self.SUMM_TOKENS_IN if iface_name in ("summarize", "qa") \
-                else 0
-            tok_out = self.SUMM_TOKENS_OUT if iface_name in ("summarize", "qa") \
-                else 0
-            nodes.append(TaskNode(
-                id=tid, description=text, agent=iface_name, deps=deps,
-                args=self.toolcall_args(iface_name, job),
-                work_items=work_items, chunkable=True,
-                tokens_in=tok_in, tokens_out=tok_out))
+            tid = f"t{i}_{iface.name}"
+            nodes.append(build_node(tid, ts.description, iface, deps,
+                                    ts.args, units))
             produced[iface.produces] = tid
         return DAG(nodes)
-
-    def toolcall_args(self, iface: str, job: Job) -> dict:
-        vids = [v for v in job.inputs if isinstance(v, VideoInput)]
-        first = vids[0] if vids else VideoInput("input")
-        if iface == "frame_extract":
-            return {"file": first.name, "start_time": 0,
-                    "end_time": int(first.duration_s),
-                    "num_frames": first.frames_per_scene}
-        if iface == "speech_to_text":
-            return {"file": first.name, "language": "en"}
-        if iface == "object_detect":
-            return {"frames": "$frames", "labels": "auto"}
-        if iface == "summarize":
-            return {"context": "$frames+$objects+$transcript",
-                    "max_tokens": self.SUMM_TOKENS_OUT}
-        if iface == "embed":
-            return {"texts": "$summary"}
-        if iface == "qa":
-            return {"question": job.description, "top_k": 5}
-        return {}
 
     def toolcalls(self, dag: DAG) -> dict[str, str]:
         return {tid: self.library.toolcall(dag.nodes[tid].agent,
@@ -161,20 +129,15 @@ class LLMPlanner:
             user += "\nSub-tasks: " + "; ".join(job.tasks)
         raw = self.llm_fn(self.system_prompt(), user)
         spec = json.loads(raw)
-        scenes, fps = _scenes(job.inputs)
+        units = input_units(job.inputs)
         nodes = []
         for t in spec["tasks"]:
             if t["agent"] not in self.library.interfaces:
                 raise ValueError(f"LLM mapped to unknown agent {t['agent']!r}")
-            items = scenes * fps if t["agent"] == "summarize" else scenes
-            nodes.append(TaskNode(
-                id=t["id"], description=t.get("description", ""),
-                agent=t["agent"], deps=tuple(t.get("deps", ())),
-                args=t.get("args", {}), work_items=items, chunkable=True,
-                tokens_in=RulePlanner.SUMM_TOKENS_IN
-                if t["agent"] in ("summarize", "qa") else 0,
-                tokens_out=RulePlanner.SUMM_TOKENS_OUT
-                if t["agent"] in ("summarize", "qa") else 0))
+            iface = self.library.interfaces[t["agent"]]
+            nodes.append(build_node(
+                t["id"], t.get("description", ""), iface,
+                tuple(t.get("deps", ())), t.get("args", {}), units))
         return DAG(nodes)
 
 

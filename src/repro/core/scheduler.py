@@ -16,8 +16,10 @@ The search space explodes combinatorially (paper §3.3c), so selection is a
 greedy *hierarchy of optimization functions*: (1) implementation by quality
 gate + constraint preference, (2) hardware/device-count by the constraint
 objective, (3) parallelism given real-time free resources from the cluster
-manager. Constraints compare lexicographically in 5%-tolerance bands, so a
-secondary objective breaks near-ties of the primary one.
+manager. Constraints are the composable DSL of ``core.constraints`` —
+lexicographic orderings in 5%-tolerance bands (a secondary objective breaks
+near-ties of the primary one), weighted blends, deadlines and budget caps;
+the seed ``Constraint`` enum still normalizes through ``as_spec``.
 """
 from __future__ import annotations
 
@@ -26,10 +28,10 @@ from dataclasses import dataclass, field, replace
 
 from .agents import AgentImpl, AgentLibrary
 from .cluster import ClusterManager
+from .constraints import Constraint, ConstraintSpec, Objective, as_spec
 from .dag import DAG, TaskNode
 from .energy import CATALOG
 from .profiles import ProfileStore
-from .workflow import Constraint
 
 
 @dataclass(frozen=True)
@@ -129,30 +131,19 @@ class Scheduler:
 
     # -- constraint comparison ---------------------------------------------------
     @staticmethod
-    def _objective(cfg: TaskConfig, c: Constraint) -> float:
-        return {
-            Constraint.MIN_COST: cfg.est_usd,
-            Constraint.MIN_ENERGY: cfg.est_energy_j,
-            Constraint.MIN_LATENCY: cfg.est_latency_s,
-            Constraint.MAX_QUALITY: -cfg.quality,
-        }[c]
+    def _objective(cfg: TaskConfig, c: "Constraint | Objective") -> float:
+        """Value of one objective (enum shorthand or DSL object)."""
+        return as_spec(c).objectives[0].value(cfg)
 
-    @classmethod
-    def _key(cls, cfg: TaskConfig, order: tuple[Constraint, ...]) -> tuple:
-        """Lexicographic in 5% bands: primary banded, then secondaries."""
-        key: list[float] = []
-        for i, c in enumerate(order):
-            v = cls._objective(cfg, c)
-            if i < len(order) - 1:
-                v = 0.0 if v <= 0 else round(math.log(max(v, 1e-12), 1.05))
-            key.append(v)
-        # final universal tie-breaks: latency, then $.
-        key += [cfg.est_latency_s, cfg.est_usd]
-        return tuple(key)
+    @staticmethod
+    def _key(cfg: TaskConfig, order) -> tuple:
+        """Comparison key under any accepted constraint form."""
+        return as_spec(order).key(cfg)
 
     # -- the greedy hierarchical search -------------------------------------------
-    def plan_task(self, node: TaskNode, order: tuple[Constraint, ...],
+    def plan_task(self, node: TaskNode, order,
                   quality_floor: float | dict) -> TaskConfig:
+        order = as_spec(order)
         impls = self.library.impls_for(node.agent)
         if not impls:
             raise ValueError(f"no implementation for agent {node.agent!r}")
@@ -162,7 +153,7 @@ class Scheduler:
         # Level 1 — implementation: quality gate, then constraint preference.
         ok = [i for i in impls if i.quality >= floor] or \
             [max(impls, key=lambda i: i.quality)]
-        if order[0] is Constraint.MAX_QUALITY:
+        if order.seeks_quality:
             cand_impls = sorted(ok, key=lambda i: -i.quality)[:2]
         else:
             cand_impls = ok  # defer to the objective over hw configs
@@ -219,8 +210,8 @@ class Scheduler:
                                      k, best.batch, warm=best.warm)
                 if self._key(cand, order) < self._key(best, order):
                     best = cand
-        # Execution paths: only under MAX_QUALITY, only on harvestable slack.
-        if order[0] is Constraint.MAX_QUALITY:
+        # Execution paths: only when quality leads, only on harvestable slack.
+        if order.seeks_quality:
             harvest = st["harvestable"] // max(
                 best.n_devices * best.n_instances, 1)
             for p in (2, 4):
@@ -233,11 +224,13 @@ class Scheduler:
                     best = cand
         return best
 
-    def plan(self, dag: DAG, order: tuple[Constraint, ...],
+    def plan(self, dag: DAG, order,
              quality_floor: float | dict = 0.85) -> ExecutionPlan:
+        # workflow-level deadline/budget terms split evenly across tasks
+        spec = as_spec(order).per_task(len(dag))
         plan = ExecutionPlan()
         for tid in dag.topo_order:
-            plan.configs[tid] = self.plan_task(dag.nodes[tid], order,
+            plan.configs[tid] = self.plan_task(dag.nodes[tid], spec,
                                                quality_floor)
         return plan
 

@@ -20,8 +20,8 @@ from .orchestrator import RulePlanner
 from .profiles import ProfileStore
 from .scheduler import ExecutionPlan, Scheduler, TaskConfig
 from .simulator import SimReport, Simulator, render_trace
-from .workflow import (COMPONENT_ALIASES, Constraint, ImperativeWorkflow,
-                       Job, VideoInput)
+from .spec import build_node, input_units
+from .workflow import COMPONENT_ALIASES, ImperativeWorkflow, Job
 
 
 @dataclass
@@ -94,7 +94,7 @@ class Murakkab:
 
     def plan(self, job: Job) -> tuple[DAG, ExecutionPlan]:
         dag = self.lower(job)
-        plan = self.scheduler.plan(dag, job.constraint_order,
+        plan = self.scheduler.plan(dag, job.constraint_spec,
                                    job.quality_floor)
         return dag, plan
 
@@ -119,12 +119,13 @@ class Murakkab:
 
     def lower_imperative(self, wf: ImperativeWorkflow, inputs=()) \
             -> tuple[DAG, ExecutionPlan]:
-        """Listing-1 semantics: pinned impls/resources, sequential chain."""
-        from .dag import TaskNode
-        scenes = sum(v.scenes for v in inputs
-                     if isinstance(v, VideoInput)) or 1
-        fps = max((v.frames_per_scene for v in inputs
-                   if isinstance(v, VideoInput)), default=1)
+        """Listing-1 semantics: pinned impls/resources, sequential chain.
+
+        Work-item cardinality and token footprints come from the component's
+        interface (its declared ``CardinalityModel``/``TokenModel``) applied
+        to the inputs' merged unit counts — no scenario knowledge here.
+        """
+        units = input_units(inputs)
         nodes, plan = [], ExecutionPlan()
         prev = None
         for i, comp in enumerate(wf.components()):
@@ -132,18 +133,12 @@ class Murakkab:
             if alias is None:
                 raise KeyError(f"unknown component {comp.name!r}; aliases: "
                                f"{sorted(COMPONENT_ALIASES)}")
-            iface, impl_name = alias
-            tid = f"c{i}_{iface}"
-            items = scenes * fps if iface == "summarize" else scenes
-            node = TaskNode(
-                id=tid, description=f"{comp.name} ({comp.kind})",
-                agent=iface, deps=(prev,) if prev else (),
-                args=dict(comp.params),
-                work_items=items, chunkable=False,
-                tokens_in=RulePlanner.SUMM_TOKENS_IN
-                if iface in ("summarize", "qa") else 0,
-                tokens_out=RulePlanner.SUMM_TOKENS_OUT
-                if iface in ("summarize", "qa") else 0)
+            iface_name, impl_name = alias
+            iface = self.library.interfaces[iface_name]
+            tid = f"c{i}_{iface_name}"
+            node = build_node(tid, f"{comp.name} ({comp.kind})", iface,
+                              (prev,) if prev else (), dict(comp.params),
+                              units, chunkable=False)
             nodes.append(node)
             pool, n = self._resources_to_pool(comp.resources)
             cfg = self.scheduler.pin(node, impl_name, pool, n)
@@ -159,6 +154,10 @@ class Murakkab:
                     "tpus": "tpu"}.get(k)
             if kind is None:
                 continue
+            if int(n) <= 0:
+                raise ValueError(
+                    f"non-positive device count {key}={n!r}; a pinned "
+                    f"component must request >= 1 device")
             pools = self.cluster.pools_of_kind(kind)
             if not pools:
                 raise ValueError(f"no pool of kind {kind!r} in cluster")

@@ -18,25 +18,22 @@ Paper Listing 1 (imperative, today's systems)::
 The imperative path pins model/hardware per component and runs sequentially —
 it exists so the baseline of the paper's evaluation is a first-class citizen
 (the system prompt requires implementing the baseline too).
+
+Inputs are ``InputSet`` instances (DESIGN.md §2): each carries a dataflow
+``artifact`` type and a ``units()`` breakdown that interface-declared
+cardinality models consume. ``VideoInput``, ``DocumentInput`` and
+``QueryInput`` below are peers — the core special-cases none of them.
+Constraints accept the seed enum *or* the composable DSL from
+``core.constraints`` (``Deadline``, ``Budget``, ``Weighted``, orderings).
 """
 from __future__ import annotations
 
-import enum
 from dataclasses import dataclass, field
 from typing import Any, Sequence
 
-
-class Constraint(enum.Enum):
-    MIN_COST = "min_cost"
-    MIN_ENERGY = "min_energy"
-    MIN_LATENCY = "min_latency"
-    MAX_QUALITY = "max_quality"
-
-
-MIN_COST = Constraint.MIN_COST
-MIN_ENERGY = Constraint.MIN_ENERGY
-MIN_LATENCY = Constraint.MIN_LATENCY
-MAX_QUALITY = Constraint.MAX_QUALITY
+from .constraints import (MAX_QUALITY, MIN_COST, MIN_ENERGY,  # noqa: F401
+                          MIN_LATENCY, Constraint, ConstraintSpec, as_enum,
+                          as_spec)
 
 
 @dataclass(frozen=True)
@@ -48,6 +45,41 @@ class VideoInput:
     scenes: int = 4                  # OmAgent-style scene segmentation
     frames_per_scene: int = 10
 
+    artifact = "video"
+
+    def units(self) -> dict[str, int]:
+        return {"videos": 1, "scenes": self.scenes,
+                "frames": self.scenes * self.frames_per_scene}
+
+
+@dataclass(frozen=True)
+class DocumentInput:
+    """An input document to parse, digest and index."""
+
+    name: str
+    pages: int = 12
+    chunks_per_page: int = 3
+
+    artifact = "document"
+
+    def units(self) -> dict[str, int]:
+        return {"documents": 1, "pages": self.pages,
+                "chunks": self.pages * self.chunks_per_page}
+
+
+@dataclass(frozen=True)
+class QueryInput:
+    """A retrieval query over an indexed corpus."""
+
+    text: str
+    top_k: int = 5                   # passages handed to synthesis
+    candidates: int = 20             # retrieval pool size to rerank
+
+    artifact = "query"
+
+    def units(self) -> dict[str, int]:
+        return {"queries": 1, "passages": self.candidates}
+
 
 @dataclass(frozen=True)
 class Job:
@@ -56,14 +88,20 @@ class Job:
     description: str
     inputs: Sequence[Any] = ()
     tasks: Sequence[str] = ()        # optional NL sub-task hints
-    constraints: Constraint | Sequence[Constraint] = Constraint.MIN_COST
+    constraints: Any = Constraint.MIN_COST
     # min acceptable impl quality: one float, or per-interface dict
     quality_floor: float | dict = 0.85
 
     @property
-    def constraint_order(self) -> tuple[Constraint, ...]:
-        c = self.constraints
-        return (c,) if isinstance(c, Constraint) else tuple(c)
+    def constraint_spec(self) -> ConstraintSpec:
+        return as_spec(self.constraints)
+
+    @property
+    def constraint_order(self) -> tuple:
+        """Seed-compatible accessor: atomic objectives come back as the
+        ``Constraint`` enum members the seed returned (so identity and
+        membership checks keep working); composite DSL terms pass through."""
+        return tuple(as_enum(o) for o in self.constraint_spec.objectives)
 
     def execute(self, system, **kw):
         """Lower -> schedule -> run on the given Murakkab system."""
@@ -124,6 +162,9 @@ COMPONENT_ALIASES: dict[str, tuple[str, str]] = {
     "llama": ("summarize", "nvlm-72b"),     # paper eval runs NVLM here
     "nvlm": ("summarize", "nvlm-72b"),
     "nvlm-embed": ("embed", "nvlm-embed"),
+    "bm25": ("retrieve", "bm25-keyword"),
+    "faiss": ("retrieve", "dense-retrieval"),
+    "pypdf": ("parse_doc", "pypdf-parse"),
 }
 
 

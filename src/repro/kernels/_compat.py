@@ -1,0 +1,17 @@
+"""Pallas-TPU API compatibility across jax versions.
+
+``pltpu.CompilerParams`` (new name) was ``pltpu.TPUCompilerParams`` before
+jax 0.5; older releases again spell it ``dict``-compatible via
+``mosaic.params``. Resolve whichever this jax ships.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(**kw):
+    cls = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:                       # ancient fallback: plain mapping
+        return dict(mosaic=kw)
+    return cls(**kw)

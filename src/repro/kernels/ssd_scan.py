@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import compiler_params as _compiler_params
+
 
 def _ssd_kernel(u_ref, la_ref, b_ref, c_ref, y_ref, state_ref, s_scr, *,
                 chunk: int):
@@ -107,7 +109,7 @@ def ssd_scan_pallas(x, dt, a_log, b, c, d_skip, *, chunk=128,
             jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(u, la, bt, ct)

@@ -181,7 +181,9 @@ def _lower_cell(cfg, cell, mesh, *, rules=None, opts_over=None,
     model = build_model(cfg)
     B, S = cell.global_batch, cell.seq_len
     opts_over = opts_over or {}
-    with jax.set_mesh(mesh):
+    # jax.set_mesh arrived in 0.6; on older jax the Mesh is its own context
+    mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+    with mesh_ctx:
         if cell.kind == "train":
             opts = train_rt.TrainOptions(**{"remat_policy": "full",
                                             "microbatches": 1,

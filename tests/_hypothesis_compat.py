@@ -1,0 +1,109 @@
+"""Deterministic fallback for ``hypothesis`` when it isn't installed.
+
+The property tests (cluster allocation safety, simulator additivity) declare
+strategies via ``hypothesis.given``. The real package is a test dependency
+(see pyproject.toml), but this repo must also run in hermetic containers
+where installing it isn't possible. ``install()`` registers a minimal
+stand-in module that replays each property over a fixed-seed random sample
+plus the strategy bounds — deterministic, no shrinking, same test code.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self.boundary = tuple(boundary)     # always-tried edge examples
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value),
+                     boundary=(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: r.random() < 0.5, boundary=(False, True))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value),
+                     boundary=(min_value, max_value))
+
+
+def composite(fn):
+    """``@st.composite``: fn(draw, ...) -> value becomes a strategy factory."""
+    def factory(*args, **kw):
+        return _Strategy(
+            lambda r: fn(lambda s: s.example(r), *args, **kw))
+    return factory
+
+
+def tuples(*strats: _Strategy) -> _Strategy:
+    return _Strategy(lambda r: tuple(s.example(r) for s in strats))
+
+
+def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) \
+        -> _Strategy:
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        return [elem.example(r) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        def wrapper(*args, **kw):
+            # @settings may sit above or below @given; check both targets
+            n = getattr(wrapper, "_compat_max_examples",
+                        getattr(fn, "_compat_max_examples",
+                                _DEFAULT_EXAMPLES))
+            rnd = random.Random(0)
+            cases = []
+            if len(strats) == 1 and strats[0].boundary:
+                cases += [(b,) for b in strats[0].boundary]
+            cases += [tuple(s.example(rnd) for s in strats)
+                      for _ in range(n)]
+            for case in cases[:n]:        # honor max_examples
+                fn(*args, *case, **kw)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def install():
+    """Register the stand-in as ``hypothesis`` if the real one is absent."""
+    try:
+        import hypothesis                              # noqa: F401
+        return
+    except ModuleNotFoundError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.booleans = booleans
+    strategies.floats = floats
+    strategies.tuples = tuples
+    strategies.lists = lists
+    strategies.composite = composite
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

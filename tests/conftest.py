@@ -3,6 +3,11 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import _hypothesis_compat
+
+_hypothesis_compat.install()     # no-op when the real package is installed
 
 import jax
 import pytest

@@ -1,0 +1,202 @@
+"""Constraint DSL: normalization, lexicographic bands, deadlines, budgets,
+weighted blends — and their end-to-end effect on scheduling."""
+import pytest
+
+from repro.core import (Budget, ConstraintSpec, Deadline, Job, Lexicographic,
+                        MAX_QUALITY, MIN_COST, MIN_ENERGY, MIN_LATENCY,
+                        MaxQuality, MinCost, MinEnergy, MinLatency, Murakkab,
+                        TaskConfig, Weighted, as_spec)
+from repro.core.dag import TaskNode
+
+
+def _cfg(usd=1.0, j=1.0, lat=1.0, q=0.9):
+    return TaskConfig(impl="x", pool="p", n_devices=1, est_usd=usd,
+                      est_energy_j=j, est_latency_s=lat, quality=q)
+
+
+def _node(agent="summarize", items=8):
+    return TaskNode(id="t", description="", agent=agent, work_items=items,
+                    chunkable=True, tokens_in=900, tokens_out=120)
+
+
+# -- normalization -----------------------------------------------------------
+
+
+def test_as_spec_accepts_all_forms():
+    for form in (MIN_COST, (MIN_COST,), [MIN_COST, MIN_ENERGY], MinCost(),
+                 (MinCost(), MIN_LATENCY), Lexicographic(MIN_COST),
+                 ConstraintSpec((MinCost(),))):
+        spec = as_spec(form)
+        assert isinstance(spec, ConstraintSpec)
+        assert isinstance(spec.objectives[0], MinCost)
+    assert isinstance(as_spec(MAX_QUALITY).objectives[0], MaxQuality)
+    with pytest.raises(TypeError):
+        as_spec("cheapest please")
+    with pytest.raises(ValueError):
+        as_spec(())
+
+
+def test_objective_values():
+    c = _cfg(usd=2.0, j=30.0, lat=5.0, q=0.8)
+    assert MinCost().value(c) == 2.0
+    assert MinEnergy().value(c) == 30.0
+    assert MinLatency().value(c) == 5.0
+    assert MaxQuality().value(c) == -0.8
+
+
+def test_lexicographic_bands_break_near_ties():
+    """Same 5% log-band on the primary counts as a tie; secondary decides."""
+    spec = as_spec((MIN_LATENCY, MIN_COST))
+    near = _cfg(lat=1.02, usd=0.1)       # same band, 10x cheaper
+    fast = _cfg(lat=1.00, usd=1.0)
+    assert spec.key(near) < spec.key(fast)
+    far = _cfg(lat=2.0, usd=0.001)       # 2x slower: latency dominates
+    assert spec.key(fast) < spec.key(far)
+
+
+def test_deadline_semantics():
+    d = Deadline(s=10.0)
+    assert d.value(_cfg(lat=8.0)) == 0.0          # met -> no pressure
+    assert d.value(_cfg(lat=14.0)) == pytest.approx(4.0)
+    assert d.per_task(4) == Deadline(s=2.5)
+    # among deadline-met configs the secondary objective decides
+    spec = Lexicographic(Deadline(s=10.0), MinEnergy())
+    cheap = _cfg(lat=9.9, j=1.0)
+    fast = _cfg(lat=1.0, j=50.0)
+    assert spec.key(cheap) < spec.key(fast)
+
+
+def test_budget_semantics():
+    b = Budget(usd=1.0, wh=1.0)
+    assert b.value(_cfg(usd=0.5, j=1000.0)) == 0.0
+    assert b.value(_cfg(usd=2.0, j=1000.0)) == pytest.approx(1.0)
+    assert b.value(_cfg(usd=0.0, j=7200.0)) == pytest.approx(1.0)
+    half = b.per_task(2)
+    assert half.usd == 0.5 and half.wh == 0.5
+    assert Budget(usd=1.0).per_task(4).wh is None
+
+
+def test_weighted_blend():
+    w = Weighted.of(cost=1.0, energy=0.5)
+    assert w.value(_cfg(usd=2.0, j=4.0)) == pytest.approx(4.0)
+    assert Weighted.of(latency=1.0).value(_cfg(lat=7.0)) == 7.0
+    # per_task propagates into nested workflow-level terms
+    nested = Weighted(((Deadline(s=8.0), 1.0),)).per_task(4)
+    assert nested.terms[0][0] == Deadline(s=2.0)
+
+
+def test_deadline_feasible_beats_small_overrun():
+    """Regression: a sub-unit overrun must not band below feasibility."""
+    spec = Lexicographic(Deadline(s=60.0), MinEnergy())
+    feasible = _cfg(lat=59.0, j=100.0)
+    overrun = _cfg(lat=60.9, j=1.0)
+    assert spec.key(feasible) < spec.key(overrun)
+    # same for budget caps: within budget beats slightly-over
+    bspec = Lexicographic(Budget(usd=1.0), MinLatency())
+    within = _cfg(usd=0.99, lat=100.0)
+    over = _cfg(usd=1.5, lat=1.0)
+    assert bspec.key(within) < bspec.key(over)
+
+
+def test_quality_primary_ordering_respects_quality():
+    """Regression: MaxQuality values are negative; banding must not collapse
+    them all into one band and hand the decision to the secondary."""
+    spec = as_spec((MAX_QUALITY, MIN_COST))
+    good = _cfg(q=0.99, usd=1.0)
+    cheap = _cfg(q=0.80, usd=0.5)
+    assert spec.key(good) < spec.key(cheap)
+
+
+def test_degenerate_deadline_budget_rejected():
+    with pytest.raises(ValueError, match="positive target"):
+        Deadline(s=0)
+    with pytest.raises(ValueError, match="positive target"):
+        Deadline(s=-5)
+    with pytest.raises(ValueError, match="positive usd cap"):
+        Budget(usd=0.0)
+    with pytest.raises(ValueError, match="at least one"):
+        Budget()
+
+
+def test_constraint_order_round_trips_enum_members():
+    """Seed compat: atomic objectives come back as enum members so identity
+    and membership checks written against the seed API keep working."""
+    job = Job(description="x", constraints=(MIN_LATENCY, MIN_COST))
+    assert job.constraint_order == (MIN_LATENCY, MIN_COST)
+    assert job.constraint_order[0] is MIN_LATENCY
+    assert MIN_COST in job.constraint_order
+    # composite DSL terms pass through untouched
+    job2 = Job(description="x", constraints=(Deadline(s=5.0), MIN_COST))
+    assert job2.constraint_order == (Deadline(s=5.0), MIN_COST)
+
+
+def test_seeks_quality():
+    assert as_spec(MAX_QUALITY).seeks_quality
+    assert as_spec((MAX_QUALITY, MIN_COST)).seeks_quality
+    assert not as_spec(MIN_COST).seeks_quality
+    assert not as_spec((MIN_COST, MAX_QUALITY)).seeks_quality
+
+
+# -- end-to-end scheduling effects -------------------------------------------
+
+
+@pytest.fixture()
+def system():
+    return Murakkab.tpu_cluster(v5e=64, v5p=16, v4_harvest=16, host_cores=128)
+
+
+def test_deadline_then_energy_plan(system):
+    """Tight deadline forces a faster (more energetic) config than pure
+    MIN_ENERGY; loose deadline collapses to the MIN_ENERGY choice."""
+    node = _node()
+    loose = system.scheduler.plan_task(
+        node, Lexicographic(Deadline(s=1e6), MinEnergy()), 0.85)
+    pure = system.scheduler.plan_task(node, (MIN_ENERGY,), 0.85)
+    assert loose.est_energy_j <= pure.est_energy_j * 1.001
+    tight_s = pure.est_latency_s * 0.5
+    tight = system.scheduler.plan_task(
+        node, Lexicographic(Deadline(s=tight_s), MinEnergy()), 0.85)
+    assert tight.est_latency_s <= pure.est_latency_s + 1e-9
+
+
+def test_budget_caps_spend(system):
+    """A budget below the MIN_LATENCY plan's cost trades latency for spend;
+    a generous budget collapses to the MIN_LATENCY choice."""
+    node = _node()
+    fast = system.scheduler.plan_task(node, (MIN_LATENCY,), 0.85)
+    capped = system.scheduler.plan_task(
+        node, Lexicographic(Budget(usd=fast.est_usd * 0.5), MinLatency()),
+        0.85)
+    assert capped.est_usd < fast.est_usd
+    assert capped.est_latency_s >= fast.est_latency_s - 1e-9
+    loose = system.scheduler.plan_task(
+        node, Lexicographic(Budget(usd=fast.est_usd * 100), MinLatency()),
+        0.85)
+    assert loose.est_latency_s <= fast.est_latency_s * 1.001
+
+
+def test_weighted_matches_primary_at_extreme(system):
+    """An all-cost weighted blend picks the same config as MIN_COST."""
+    node = _node()
+    a = system.scheduler.plan_task(node, (MIN_COST,), 0.85)
+    b = system.scheduler.plan_task(node, Weighted.of(cost=1.0), 0.85)
+    assert b.est_usd <= a.est_usd * 1.001
+
+
+def test_job_accepts_dsl_end_to_end(system):
+    from repro.core import VideoInput
+    job = Job(description="Describe the videos",
+              inputs=(VideoInput("v.mov"),),
+              constraints=Lexicographic(Deadline(s=3600.0), MinCost()),
+              quality_floor=0.0)
+    result = job.execute(system)
+    assert result.makespan_s > 0 and result.energy_wh > 0
+
+
+def test_plan_divides_workflow_deadline_across_tasks(system):
+    from repro.configs.workflow_video import make_declarative_job
+    job = make_declarative_job(Lexicographic(Deadline(s=40.0), MinCost()))
+    dag = system.lower(job)
+    # per_task sees len(dag)=5 -> 8s per task; verify via spec arithmetic
+    spec = job.constraint_spec.per_task(len(dag))
+    assert spec.objectives[0] == Deadline(s=8.0)

@@ -1,0 +1,80 @@
+"""Golden test: the video scenario lowers to the exact DAG + plan the seed
+produced before the scenario-agnostic API redesign (captured at PR 1).
+
+If an intentional change to the lowering or scheduling semantics moves these
+values, re-capture them with::
+
+    PYTHONPATH=src python -c "
+    from repro.core import Murakkab
+    from repro.configs.workflow_video import make_declarative_job
+    dag, plan = Murakkab.paper_cluster().plan(make_declarative_job())
+    ..."
+"""
+import pytest
+
+from repro.core import Murakkab
+from repro.configs.workflow_video import (PAPER_VIDEOS,
+                                          make_baseline_workflow,
+                                          make_declarative_job)
+
+# (id, deps, work_items, tokens_in, tokens_out) per node, topo order
+GOLDEN_DAG = [
+    ("t0_frame_extract", (), 8, 0, 0),
+    ("t1_speech_to_text", (), 8, 0, 0),
+    ("t2_object_detect", ("t0_frame_extract",), 8, 0, 0),
+    ("t3_summarize", ("t0_frame_extract", "t2_object_detect",
+                      "t1_speech_to_text"), 80, 900, 120),
+    ("t4_embed", ("t3_summarize",), 8, 0, 0),
+]
+
+# (impl, pool, n_devices, n_instances, batch, paths) per task
+GOLDEN_PLAN = {
+    "t0_frame_extract": ("opencv", "cpu", 1, 8, 1, 1),
+    "t1_speech_to_text": ("whisper-large", "cpu", 64, 2, 1, 1),
+    "t2_object_detect": ("clip", "cpu", 2, 8, 1, 1),
+    "t3_summarize": ("nvlm-72b", "gpu", 8, 1, 80, 1),
+    "t4_embed": ("nvlm-embed", "gpu", 2, 1, 8, 1),
+}
+
+GOLDEN_TOOLCALL = ("FrameExtractor(end_time=240, file='cats.mov', "
+                   "num_frames=10, start_time=0)")
+
+
+def test_video_dag_matches_seed():
+    dag, _ = Murakkab.paper_cluster().plan(make_declarative_job())
+    got = [(n.id, n.deps, n.work_items, n.tokens_in, n.tokens_out)
+           for n in (dag.nodes[t] for t in dag.topo_order)]
+    assert got == GOLDEN_DAG
+
+
+def test_video_plan_matches_seed():
+    _, plan = Murakkab.paper_cluster().plan(make_declarative_job())
+    got = {tid: (c.impl, c.pool, c.n_devices, c.n_instances, c.batch,
+                 c.paths)
+           for tid, c in plan.configs.items()}
+    assert got == GOLDEN_PLAN
+
+
+def test_video_execution_endpoints_match_seed():
+    result = make_declarative_job().execute(Murakkab.paper_cluster())
+    assert result.makespan_s == pytest.approx(143.05, abs=0.5)
+    assert result.energy_wh == pytest.approx(57.47, abs=0.5)
+    assert result.toolcalls["t0_frame_extract"] == GOLDEN_TOOLCALL
+
+    base = make_baseline_workflow().execute(Murakkab.paper_cluster(),
+                                            inputs=PAPER_VIDEOS)
+    assert base.makespan_s == pytest.approx(295.2, abs=0.5)
+    assert base.energy_wh == pytest.approx(168.26, abs=0.5)
+
+
+def test_imperative_golden_dag():
+    system = Murakkab.paper_cluster()
+    dag, plan = system.lower_imperative(make_baseline_workflow(),
+                                        PAPER_VIDEOS)
+    items = {dag.nodes[t].agent: dag.nodes[t].work_items for t in dag}
+    assert items == {"frame_extract": 8, "speech_to_text": 8,
+                     "object_detect": 8, "summarize": 80, "embed": 8}
+    summ = [n for n in dag.nodes.values() if n.agent == "summarize"][0]
+    assert (summ.tokens_in, summ.tokens_out) == (900, 120)
+    # Listing-1 pinning: the plan is warm and fixed
+    assert all(c.warm for c in plan.configs.values())

@@ -1,0 +1,144 @@
+"""Typed dataflow specs: artifact registry, input units, cardinality/token
+models, scenario matching, and DAG wiring purely from interface types."""
+import pytest
+
+from repro.core import (ARTIFACTS, SCENARIOS, AgentInterface, CardinalityModel,
+                        DocumentInput, InputSet, Job, Murakkab, QueryInput,
+                        RulePlanner, TokenModel, VideoInput, input_units)
+from repro.core.agents import AgentLibrary, default_library
+
+
+def test_inputs_satisfy_protocol_and_units_merge():
+    vids = (VideoInput("a.mov", scenes=4, frames_per_scene=10),
+            VideoInput("b.mov", scenes=4, frames_per_scene=10))
+    assert all(isinstance(v, InputSet) for v in vids)
+    assert input_units(vids) == {"videos": 2, "scenes": 8, "frames": 80}
+
+    docs = (DocumentInput("x.pdf", pages=12, chunks_per_page=3),)
+    assert input_units(docs) == {"documents": 1, "pages": 12, "chunks": 36}
+
+    qs = (QueryInput("q1", candidates=20), QueryInput("q2", candidates=20))
+    assert input_units(qs) == {"queries": 2, "passages": 40}
+
+    # opaque payloads alongside typed inputs contribute nothing
+    assert input_units((object(), VideoInput("a.mov", scenes=2)))["scenes"] \
+        == 2
+
+
+def test_cardinality_model_unit_fallback_chain():
+    m = CardinalityModel(("scenes", "chunks", "queries"))
+    assert m.items({"scenes": 8, "chunks": 99}) == 8     # first key wins
+    assert m.items({"chunks": 72}) == 72
+    assert m.items({"queries": 4}) == 4
+    assert m.items({}) == 1                               # default
+    assert CardinalityModel().items({"scenes": 8}) == 1   # unitless
+
+
+def test_interface_declares_workload_models():
+    lib = default_library()
+    assert lib.interfaces["summarize"].cardinality.units == ("frames",)
+    assert lib.interfaces["summarize"].tokens == TokenModel(900, 120)
+    assert lib.interfaces["digest"].cardinality.units == ("chunks",)
+    assert lib.interfaces["retrieve"].cardinality.units == ("queries",)
+
+
+def test_unknown_artifact_type_rejected_at_registration():
+    lib = AgentLibrary()
+    with pytest.raises(KeyError, match="unknown artifact"):
+        lib.register_interface(AgentInterface(
+            "bad", "produces a typo'd artifact", schema={},
+            keywords=("bad",), produces="framez"))
+    with pytest.raises(KeyError, match="unknown artifact"):
+        lib.register_interface(AgentInterface(
+            "bad2", "consumes a typo'd artifact", schema={},
+            keywords=("bad2",), produces="frames", consumes=("vydeo",)))
+    # defining the artifact first makes registration legal
+    ARTIFACTS.define("sidecar_meta", "test-only artifact")
+    lib.register_interface(AgentInterface(
+        "meta_extract", "produces the new artifact", schema={},
+        keywords=("meta",), produces="sidecar_meta"))
+    assert "meta_extract" in lib.interfaces
+
+
+def test_scenario_matching_by_input_artifacts():
+    assert SCENARIOS.match((VideoInput("v.mov"),)).name == \
+        "video_understanding"
+    assert SCENARIOS.match((QueryInput("q"),)).name == "agentic_rag"
+    assert SCENARIOS.match((DocumentInput("d.pdf"),)).name == "doc_ingest"
+    assert SCENARIOS.match((object(),)) is None
+    assert {"video_understanding", "agentic_rag", "doc_ingest"} <= \
+        set(SCENARIOS.names())
+
+
+def test_dataflow_wiring_is_type_driven():
+    """Edges come from produces/consumes artifact types, for every scenario."""
+    lib = default_library()
+    planner = RulePlanner(lib)
+
+    rag = planner.lower(Job(description="answer the question",
+                            inputs=(QueryInput("q", candidates=20),)))
+    agents = {n.agent: n for n in rag.nodes.values()}
+    assert [rag.nodes[t].agent for t in rag.topo_order] == \
+        ["retrieve", "rerank", "synthesize", "embed"]
+    assert {rag.nodes[d].agent for d in agents["rerank"].deps} == {"retrieve"}
+    assert {rag.nodes[d].agent for d in agents["synthesize"].deps} == \
+        {"rerank"}
+    assert {rag.nodes[d].agent for d in agents["embed"].deps} == {"synthesize"}
+    # cardinality: 1 query, 20 candidate passages
+    assert agents["retrieve"].work_items == 1
+    assert agents["rerank"].work_items == 20
+    # token model flows from the interface
+    assert agents["synthesize"].tokens_in == 1200
+
+    ing = planner.lower(Job(description="ingest",
+                            inputs=(DocumentInput("d.pdf", pages=10,
+                                                  chunks_per_page=2),)))
+    agents = {n.agent: n for n in ing.nodes.values()}
+    assert [ing.nodes[t].agent for t in ing.topo_order] == \
+        ["parse_doc", "digest", "embed"]
+    assert agents["parse_doc"].work_items == 10       # pages
+    assert agents["digest"].work_items == 20          # chunks
+    assert agents["embed"].work_items == 20
+
+
+def test_no_scenario_and_no_hints_raises():
+    lib = default_library()
+    with pytest.raises(ValueError, match="no registered scenario"):
+        RulePlanner(lib).lower(Job(description="do something", inputs=()))
+
+
+def test_typod_arg_builder_key_raises(monkeypatch):
+    """A scenario arg_builder keyed by a misspelled interface is an error at
+    decompose time, not silently-empty toolcall args."""
+    import dataclasses
+
+    from repro.core.spec import SCENARIOS
+    from repro.configs.workflow_rag import RAG_SCENARIO
+    bad = dataclasses.replace(
+        RAG_SCENARIO, name="bad_rag",
+        arg_builders={**RAG_SCENARIO.arg_builders,
+                      "synthesise": lambda job: {}})
+    monkeypatch.setitem(SCENARIOS._scenarios, "agentic_rag", bad)
+    monkeypatch.delitem(SCENARIOS._scenarios, "bad_rag", raising=False)
+    lib = default_library()
+    with pytest.raises(ValueError, match="synthesise"):
+        RulePlanner(lib).lower(Job(description="answer",
+                                   inputs=(QueryInput("q"),)))
+
+
+def test_unknown_component_alias_raises():
+    system = Murakkab.paper_cluster()
+    from repro.core import Tool, Workflow
+    wf = Workflow(Tool(name="sprocketizer", resources={"CPUs": 1}))
+    with pytest.raises(KeyError, match="unknown component 'sprocketizer'"):
+        system.lower_imperative(wf, ())
+
+
+def test_nonpositive_resources_rejected():
+    system = Murakkab.paper_cluster()
+    with pytest.raises(ValueError, match="non-positive device count"):
+        system._resources_to_pool({"GPUs": 0})
+    with pytest.raises(ValueError, match="non-positive device count"):
+        system._resources_to_pool({"CPUs": -2})
+    with pytest.raises(ValueError, match="unintelligible"):
+        system._resources_to_pool({"FPGAs": 4})
