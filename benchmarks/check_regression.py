@@ -1,0 +1,96 @@
+"""Regression gate for the CI ``bench-smoke`` job.
+
+    python benchmarks/check_regression.py \
+        --baseline benchmarks/baselines/BENCH_scenarios.json \
+        --current BENCH_scenarios.json [--tolerance 0.2]
+
+Compares the ``metrics`` maps of two benchmark JSON files (written by
+``scenarios_bench.py --json`` / ``multitenant.py --json``). A metric
+regresses when it moves in its *bad* direction by more than ``tolerance``
+(relative, default 20%):
+
+- names containing ``quality``, ``saving`` or ``warm_hit`` are
+  higher-is-better;
+- everything else (makespan/span/energy/$/preemptions/requeues) is
+  lower-is-better.
+
+Integer-valued metrics (event counts: preemptions, requeues) get one unit
+of absolute slack on top of the relative tolerance — a 1→2 preemption move
+is not a 100% regression worth failing CI over; large count jumps still
+trip the gate.
+
+Metrics present on only one side are reported but do not fail the gate
+(the benchmark grew or was re-keyed — update the baseline in the same PR).
+The simulator is deterministic, so baseline drift only comes from real
+code changes, never from runner noise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+HIGHER_IS_BETTER = ("quality", "saving", "warm_hit")
+
+
+def better_higher(name: str) -> bool:
+    return any(tok in name for tok in HIGHER_IS_BETTER)
+
+
+def compare(baseline: dict, current: dict, tolerance: float) \
+        -> tuple[list[str], list[str]]:
+    """Returns (regressions, notes)."""
+    regressions, notes = [], []
+    for name in sorted(set(baseline) | set(current)):
+        if name not in current:
+            notes.append(f"missing in current: {name}")
+            continue
+        if name not in baseline:
+            notes.append(f"new metric (no baseline): {name}")
+            continue
+        base, cur = float(baseline[name]), float(current[name])
+        if base == cur:
+            continue
+        delta = cur - base
+        bad = -delta if better_higher(name) else delta
+        slack = tolerance * abs(base)
+        if base.is_integer() and cur.is_integer():
+            slack += 1.0        # event counts: one unit of absolute slack
+        rel = delta / max(abs(base), 1e-9)
+        line = f"{name}: {base} -> {cur} ({rel:+.1%})"
+        if bad > slack:
+            regressions.append(line)
+        else:
+            notes.append(line)
+    return regressions, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="max relative move in the bad direction (0.2 = 20%)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.current) as f:
+        cur = json.load(f)
+    regressions, notes = compare(base.get("metrics", base),
+                                 cur.get("metrics", cur), args.tolerance)
+    for line in notes:
+        print(f"  note: {line}")
+    if regressions:
+        print(f"{len(regressions)} regression(s) beyond "
+              f"{args.tolerance:.0%} vs {args.baseline}:")
+        for line in regressions:
+            print(f"  REGRESSION {line}")
+        return 1
+    print(f"ok: {args.current} within {args.tolerance:.0%} of "
+          f"{args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

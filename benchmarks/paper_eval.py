@@ -15,9 +15,8 @@ actually selects (asserted in tests).
 from __future__ import annotations
 
 from repro.core import MIN_COST, Murakkab
-from repro.core.dag import DAG, TaskNode
-from repro.core.scheduler import ExecutionPlan
-from repro.core.simulator import SimReport, Simulator
+from repro.core.dag import DAG
+from repro.core.simulator import Simulator
 from repro.configs.workflow_video import (PAPER_VIDEOS,
                                           make_baseline_workflow,
                                           make_declarative_job)

@@ -1,13 +1,20 @@
 """Cross-scenario constraint sweep: the generalization benchmark.
 
-    PYTHONPATH=src python benchmarks/scenarios_bench.py
+    PYTHONPATH=src python benchmarks/scenarios_bench.py [--fast] [--json PATH]
 
 Runs all three registered scenarios (video, agentic-RAG, doc-ingest) under
 each constraint form — seed enum objectives plus the DSL (deadline-gated
 energy, weighted cost/energy blend) — on the paper cluster, and prints one
 table. The point of the API redesign in one artifact: three workflow shapes,
 one planner/scheduler/simulator path, no scenario branches.
+
+``--fast`` restricts to one objective + one DSL constraint per scenario
+(the CI ``bench-smoke`` mode); ``--json`` writes the deterministic metrics
+(makespan/energy/$/quality — wall-clock planning time excluded) for the
+regression gate in ``benchmarks/check_regression.py``.
 """
+import argparse
+import json
 import os
 import sys
 import time
@@ -36,15 +43,29 @@ CONSTRAINTS = [
     ("W(c=1,e=1e-5)", Weighted.of(cost=1.0, energy=1e-5)),
 ]
 
+FAST_CONSTRAINTS = [
+    ("MIN_COST", MIN_COST),
+    ("DL60s>Energy", Lexicographic(Deadline(s=60.0), MinEnergy())),
+]
 
-def main():
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="one objective + one DSL constraint per scenario")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write metrics JSON (e.g. BENCH_scenarios.json)")
+    args = ap.parse_args()
+    constraints = FAST_CONSTRAINTS if args.fast else CONSTRAINTS
+
+    metrics: dict[str, float] = {}
     hdr = (f"{'scenario':<10s} {'constraint':<14s} {'makespan_s':>10s} "
            f"{'energy_wh':>9s} {'usd':>8s} {'quality':>7s} "
            f"{'plan_ms':>8s}  chosen impls")
     print(hdr)
     print("-" * len(hdr))
     for sname, make_job in SCENARIOS:
-        for cname, c in CONSTRAINTS:
+        for cname, c in constraints:
             system = Murakkab.paper_cluster()
             job = make_job(c)
             t0 = time.perf_counter()
@@ -55,7 +76,21 @@ def main():
             print(f"{sname:<10s} {cname:<14s} {result.makespan_s:>10.1f} "
                   f"{result.energy_wh:>9.1f} {result.usd:>8.4f} "
                   f"{result.quality:>7.3f} {plan_ms:>8.1f}  {impls}")
+            key = f"{sname}/{cname}"
+            metrics[f"{key}/makespan_s"] = round(result.makespan_s, 2)
+            metrics[f"{key}/energy_wh"] = round(result.energy_wh, 2)
+            metrics[f"{key}/usd"] = round(result.usd, 4)
+            metrics[f"{key}/quality"] = round(result.quality, 4)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "scenarios",
+                       "mode": "fast" if args.fast else "full",
+                       "metrics": metrics}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -11,6 +11,8 @@ Public API::
     result = Job("List objects shown/mentioned in the videos",
                  inputs=videos, constraints=MIN_COST).execute(system)
 """
+from .admission import (POLICIES, TENANT_CLASSES, Admission, AdmissionPolicy,
+                        FCFS, StrictPriority, WeightedFair, get_policy)
 from .agents import (AgentImpl, AgentInterface, AgentLibrary, Work,
                      default_library)
 from .cluster import ClusterManager, Instance, Pool
@@ -22,7 +24,8 @@ from .energy import CATALOG, DeviceSpec, EnergyLedger, roofline_latency
 from .orchestrator import LLMPlanner, RulePlanner, dag_creation_overhead
 from .profiles import Profile, ProfileStore
 from .scheduler import ExecutionPlan, Scheduler, TaskConfig
-from .simulator import SimReport, Simulator, TraceEntry, render_trace
+from .simulator import (SimReport, Simulator, Submission, TraceEntry,
+                        render_trace)
 from .spec import (ARTIFACTS, SCENARIOS, Artifact, ArtifactRegistry,
                    CardinalityModel, InputSet, Scenario, ScenarioRegistry,
                    TaskSpec, TokenModel, build_node, input_artifacts,
@@ -33,12 +36,14 @@ from .workflow import (LLM, MAX_QUALITY, MIN_COST, MIN_ENERGY, MIN_LATENCY,
                        QueryInput, Tool, VideoInput, Workflow)
 
 __all__ = [
+    "POLICIES", "TENANT_CLASSES", "Admission", "AdmissionPolicy", "FCFS",
+    "StrictPriority", "WeightedFair", "get_policy",
     "AgentImpl", "AgentInterface", "AgentLibrary", "Work", "default_library",
     "ClusterManager", "Instance", "Pool", "DAG", "TaskNode",
     "CATALOG", "DeviceSpec", "EnergyLedger", "roofline_latency",
     "LLMPlanner", "RulePlanner", "dag_creation_overhead",
     "Profile", "ProfileStore", "ExecutionPlan", "Scheduler", "TaskConfig",
-    "SimReport", "Simulator", "TraceEntry", "render_trace",
+    "SimReport", "Simulator", "Submission", "TraceEntry", "render_trace",
     "JobResult", "Murakkab",
     "ARTIFACTS", "SCENARIOS", "Artifact", "ArtifactRegistry",
     "CardinalityModel", "InputSet", "Scenario", "ScenarioRegistry",

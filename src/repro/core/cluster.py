@@ -14,7 +14,7 @@ optional execution paths (CoT top-k) but not for critical-path work.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from .dag import DAG
 from .energy import CATALOG, DeviceSpec
@@ -84,6 +84,15 @@ class ClusterManager:
             raise KeyError(f"double release of lease {lease.id}")
         del self._leases[lease.id]
         self._used[lease.pool] -= lease.n_devices
+
+    def lease_active(self, lease: Lease) -> bool:
+        """True while the lease still holds devices (not yet released)."""
+        return lease.id in self._leases
+
+    def harvest_devices(self, pool: str) -> int:
+        """Devices currently held by preemptible (harvest) leases."""
+        return sum(lease.n_devices for lease in self._leases.values()
+                   if lease.pool == pool and lease.harvest)
 
     def preempt_harvest(self, pool: str, n_needed: int, t: float) \
             -> list[Lease]:

@@ -8,8 +8,10 @@ module generalizes it into composable objects the scheduler consumes:
 - ``Deadline(s=30)`` / ``Budget(usd=..., wh=...)`` — feasibility terms whose
   value is the *overrun* (0 when satisfied), so placing one ahead of an
   objective means "among configurations meeting it, optimize the rest".
-  ``Scheduler.plan`` divides workflow-level deadlines/budgets evenly across
-  the DAG's tasks before per-task search.
+  ``Scheduler.plan`` divides workflow-level deadlines/budgets across the
+  DAG's tasks before per-task search: deadlines by critical-path-weighted
+  latency share, budgets by cost share (DESIGN.md §6.1); ``per_task`` keeps
+  the legacy even split.
 - ``Weighted(terms)`` — a weighted blend of objectives into one scalar
   (weights carry the unit conversion, e.g. $/J).
 - ``Lexicographic(a, b, ...)`` — explicit ordering; a bare sequence means
@@ -52,6 +54,17 @@ class Objective:
         """Workflow-level terms override this to split across tasks."""
         return self
 
+    def scaled(self, lat_frac: float, cost_frac: float) -> "Objective":
+        """Workflow-level terms override this to take a weighted share:
+        ``lat_frac`` of a deadline, ``cost_frac`` of a budget."""
+        return self
+
+    @property
+    def is_workflow_term(self) -> bool:
+        """True for terms stated at workflow scope (deadlines, budgets) that
+        must be divided across tasks before per-task search."""
+        return False
+
 
 @dataclass(frozen=True)
 class MinCost(Objective):
@@ -93,6 +106,13 @@ class Deadline(Objective):
     def per_task(self, n_tasks: int) -> "Deadline":
         return Deadline(s=self.s / max(n_tasks, 1))
 
+    def scaled(self, lat_frac: float, cost_frac: float) -> "Deadline":
+        return Deadline(s=self.s * lat_frac)
+
+    @property
+    def is_workflow_term(self) -> bool:
+        return True
+
 
 @dataclass(frozen=True)
 class Budget(Objective):
@@ -123,6 +143,14 @@ class Budget(Objective):
         return Budget(usd=None if self.usd is None else self.usd / n,
                       wh=None if self.wh is None else self.wh / n)
 
+    def scaled(self, lat_frac: float, cost_frac: float) -> "Budget":
+        return Budget(usd=None if self.usd is None else self.usd * cost_frac,
+                      wh=None if self.wh is None else self.wh * cost_frac)
+
+    @property
+    def is_workflow_term(self) -> bool:
+        return True
+
 
 @dataclass(frozen=True)
 class Weighted(Objective):
@@ -136,6 +164,14 @@ class Weighted(Objective):
     def per_task(self, n_tasks: int) -> "Weighted":
         return Weighted(tuple((o.per_task(n_tasks), w)
                               for o, w in self.terms))
+
+    def scaled(self, lat_frac: float, cost_frac: float) -> "Weighted":
+        return Weighted(tuple((o.scaled(lat_frac, cost_frac), w)
+                              for o, w in self.terms))
+
+    @property
+    def is_workflow_term(self) -> bool:
+        return any(o.is_workflow_term for o, _ in self.terms)
 
     @classmethod
     def of(cls, cost: float = 0.0, energy: float = 0.0, latency: float = 0.0,
@@ -215,6 +251,19 @@ class ConstraintSpec:
         """Split workflow-level deadline/budget terms evenly across tasks."""
         return ConstraintSpec(tuple(o.per_task(n_tasks)
                                     for o in self.objectives))
+
+    def for_share(self, lat_frac: float, cost_frac: float) \
+            -> "ConstraintSpec":
+        """One task's weighted share of the workflow-level terms: deadlines
+        scale by ``lat_frac``, budgets by ``cost_frac`` (Scheduler computes
+        the fractions from a pilot plan and the DAG's critical path)."""
+        return ConstraintSpec(tuple(o.scaled(lat_frac, cost_frac)
+                                    for o in self.objectives))
+
+    @property
+    def has_workflow_terms(self) -> bool:
+        """True when any objective is a workflow-scoped deadline/budget."""
+        return any(o.is_workflow_term for o in self.objectives)
 
 
 def Lexicographic(*objectives) -> ConstraintSpec:

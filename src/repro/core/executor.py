@@ -19,7 +19,7 @@ for *output equality* (same seeds -> same tokens), mirroring the paper's
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -28,7 +28,7 @@ from dataclasses import dataclass, field, replace
 
 from .agents import AgentImpl, AgentLibrary
 from .cluster import ClusterManager
-from .constraints import Constraint, ConstraintSpec, Objective, as_spec
+from .constraints import Constraint, Objective, as_spec
 from .dag import DAG, TaskNode
 from .energy import CATALOG
 from .profiles import ProfileStore
@@ -224,11 +224,69 @@ class Scheduler:
                     best = cand
         return best
 
+    def split_shares(self, dag: DAG, order,
+                     quality_floor: float | dict = 0.85) \
+            -> dict[str, tuple[float, float]]:
+        """Per-task ``(lat_frac, cost_frac)`` shares of workflow-level terms.
+
+        A pilot plan under the legacy even split supplies per-task latency
+        and cost estimates. The deadline share of task ``t`` is
+        ``lat(t) / L(t)`` with ``L(t)`` the longest path *through* ``t``:
+        tasks on ``dag.critical_path`` receive slack proportional to their
+        latency share of the path (their shares sum to exactly 1 along it,
+        handing the whole deadline to the path that needs it), and for every
+        root-to-leaf path the shares sum to <= 1, so per-task feasibility
+        implies workflow feasibility. The budget share is ``t``'s pilot cost
+        share of the whole DAG — spend is additive across tasks, so shares
+        sum to 1.
+        """
+        spec = as_spec(order)
+        pilot_spec = spec.per_task(len(dag))
+        pilot = {tid: self.plan_task(dag.nodes[tid], pilot_spec,
+                                     quality_floor)
+                 for tid in dag.topo_order}
+        eps = 1e-12
+        lat = {tid: max(cfg.est_latency_s, eps)
+               for tid, cfg in pilot.items()}
+        # longest path through t = forward finish + backward tail - own
+        fwd: dict[str, float] = {}
+        for tid in dag.topo_order:
+            fwd[tid] = lat[tid] + max((fwd[d]
+                                       for d in dag.nodes[tid].deps),
+                                      default=0.0)
+        bwd: dict[str, float] = {}
+        for tid in reversed(dag.topo_order):
+            bwd[tid] = lat[tid] + max((bwd[s]
+                                       for s in dag.successors(tid)),
+                                      default=0.0)
+        cost = {tid: cfg.est_usd for tid, cfg in pilot.items()}
+        total_cost = sum(cost.values())
+        if total_cost <= 0:   # free tools everywhere: fall back to energy
+            cost = {tid: cfg.est_energy_j for tid, cfg in pilot.items()}
+            total_cost = sum(cost.values())
+        shares = {}
+        for tid in dag.topo_order:
+            through = fwd[tid] + bwd[tid] - lat[tid]
+            lat_frac = min(lat[tid] / max(through, eps), 1.0)
+            cost_frac = (cost[tid] / total_cost if total_cost > 0
+                         else 1.0 / len(dag))
+            shares[tid] = (lat_frac, cost_frac)
+        return shares
+
     def plan(self, dag: DAG, order,
              quality_floor: float | dict = 0.85) -> ExecutionPlan:
-        # workflow-level deadline/budget terms split evenly across tasks
-        spec = as_spec(order).per_task(len(dag))
+        spec = as_spec(order)
         plan = ExecutionPlan()
+        if spec.has_workflow_terms:
+            # critical-path-weighted split of deadline/budget terms: tasks
+            # on the critical path get slack proportional to their pilot
+            # latency/cost share, admitting tighter SLOs than the even split
+            shares = self.split_shares(dag, spec, quality_floor)
+            for tid in dag.topo_order:
+                plan.configs[tid] = self.plan_task(
+                    dag.nodes[tid], spec.for_share(*shares[tid]),
+                    quality_floor)
+            return plan
         for tid in dag.topo_order:
             plan.configs[tid] = self.plan_task(dag.nodes[tid], spec,
                                                quality_floor)

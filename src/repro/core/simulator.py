@@ -16,6 +16,20 @@ Semantics notes:
   waits for the next completion event.
 - Energy: active increments per task; the idle floor for every metered pool
   is integrated over the makespan at ``finalize`` (paper Table-2 semantics).
+
+Multi-tenant semantics (core/admission.py):
+- Workflows may arrive as ``Submission`` objects carrying a tenant class
+  and an optional ``plan_fn``; planning then happens *at admission*, so the
+  scheduler sees the cluster state (warm instances, free devices) at
+  arrival rather than an empty cluster.
+- Ready work is dispatched in admission-policy order (FCFS /
+  strict-priority / weighted-fair), work-conserving.
+- Harvest-class tenants hold preemptible leases. When a priority tenant
+  cannot allocate, the engine reclaims harvest leases via
+  ``ClusterManager.preempt_harvest``: the victims' in-flight tasks are
+  cancelled (energy/$ for the unexecuted remainder refunded), re-enqueued,
+  and both the truncated run (``note="preempted"``) and the re-execution
+  (``note="requeue"``) appear in the trace.
 """
 from __future__ import annotations
 
@@ -23,7 +37,9 @@ import heapq
 import itertools
 import math
 from dataclasses import dataclass, field
+from typing import Callable
 
+from .admission import Admission, ServedLedger, get_policy
 from .agents import AgentLibrary
 from .cluster import ClusterManager, Instance, Lease
 from .dag import DAG
@@ -55,19 +71,55 @@ class SimReport:
     per_workflow: dict[str, dict]
     pool_busy_device_s: dict[str, float]
     preemptions: int = 0
+    requeues: int = 0            # task re-executions caused by preemption
 
     def workflow_span(self, wf: str) -> float:
         return self.per_workflow[wf]["finish"] - self.per_workflow[wf]["start"]
 
 
 @dataclass
+class Submission:
+    """One tenant's workflow submission to the multi-tenant engine.
+
+    ``plan`` may be ``None`` with a ``plan_fn`` instead: the engine calls it
+    when the workflow is admitted (its arrival event fires), so scheduling
+    sees the live cluster state.
+    """
+
+    dag: DAG
+    plan: ExecutionPlan | None
+    arrival: float
+    tenant: str = "standard"
+    plan_fn: "Callable[[], ExecutionPlan] | None" = None
+
+
+@dataclass
 class _WfState:
     dag: DAG
-    plan: ExecutionPlan
+    plan: ExecutionPlan | None
     arrival: float
+    tenant: str = "standard"
+    plan_fn: "Callable[[], ExecutionPlan] | None" = None
     done: set[str] = field(default_factory=set)
     started: set[str] = field(default_factory=set)
     finish: float = 0.0
+    attempt: dict[str, int] = field(default_factory=dict)
+
+
+@dataclass
+class _Running:
+    """Book-keeping for an in-flight task (needed to preempt it)."""
+
+    cfg: TaskConfig
+    leases: list[Lease]
+    insts: list[Instance]
+    start: float
+    end: float
+    compute_begin: float      # start + weights-load wall time
+    ndev: int
+    dev_s: float
+    pf: float
+    note: str
 
 
 class Simulator:
@@ -98,36 +150,106 @@ class Simulator:
         return impl.load_time_s > 0 or impl.arch is not None
 
     # -- engine ------------------------------------------------------------------
-    def run(self, workflows: dict[str, tuple[DAG, ExecutionPlan, float]],
-            log: list | None = None) -> SimReport:
-        wfs = {wid: _WfState(dag, plan, arrival)
-               for wid, (dag, plan, arrival) in workflows.items()}
+    def run(self,
+            workflows: "dict[str, tuple[DAG, ExecutionPlan, float] | Submission]",
+            log: list | None = None, policy=None) -> SimReport:
+        pol = get_policy(policy)
+        wfs: dict[str, _WfState] = {}
+        for wid, sub in workflows.items():
+            if not isinstance(sub, Submission):
+                dag, plan, arrival = sub
+                sub = Submission(dag, plan, arrival)
+            wfs[wid] = _WfState(sub.dag, sub.plan, sub.arrival, sub.tenant,
+                                sub.plan_fn)
         for wid, st in wfs.items():
             self.cluster.register_workflow(wid, st.dag)
 
         ledger = EnergyLedger()
+        served = ServedLedger()
+        preempt0 = self.cluster.preemptions
         trace: list[TraceEntry] = []
         busy: dict[str, float] = {}
-        events: list[tuple[float, int, str, str, list[Lease],
-                           list[Instance]]] = []
+        running: dict[tuple[str, str], _Running] = {}
+        lease_owner: dict[int, tuple[str, str]] = {}
+        requeues = 0
+        events: list[tuple[float, int, str, object]] = []
         ctr = itertools.count()
         for wid, st in wfs.items():
-            heapq.heappush(events, (st.arrival, next(ctr), "arrive", wid,
-                                    [], []))
+            heapq.heappush(events, (st.arrival, next(ctr), "arrive", wid))
         t = 0.0
 
         def ready_tasks():
             out = []
-            for wid, st in sorted(wfs.items(),
-                                  key=lambda kv: kv[1].arrival):
-                if t < st.arrival:
-                    continue
+            admitted = [Admission(wid, st.tenant, st.arrival)
+                        for wid, st in wfs.items()
+                        if t >= st.arrival and st.plan is not None]
+            for adm in sorted(admitted,
+                              key=lambda a: pol.key(a, served.served)):
+                st = wfs[adm.workflow]
                 for tid in st.dag.topo_order:
                     if tid in st.done or tid in st.started:
                         continue
                     if all(d in st.done for d in st.dag.nodes[tid].deps):
-                        out.append((wid, tid))
+                        out.append((adm.workflow, tid))
             return out
+
+        def cancel_task(vwid: str, vtid: str):
+            """Preemption: roll a task back to pending, refund the unearned
+            energy/$ and release whatever it still holds."""
+            nonlocal requeues
+            rec = running.pop((vwid, vtid), None)
+            if rec is None:
+                return
+            vst = wfs[vwid]
+            vst.started.discard(vtid)
+            vst.attempt[vtid] = vst.attempt.get(vtid, 0) + 1
+            for lease in rec.leases:
+                lease_owner.pop(lease.id, None)
+                if self.cluster.lease_active(lease):
+                    self.cluster.release(lease, t)
+            for inst in rec.insts:
+                if inst.lease is not None:
+                    lease_owner.pop(inst.lease.id, None)
+                if inst in self.cluster.instances:
+                    self.cluster.evict_instance(inst, t)
+            spec = CATALOG[self.cluster.pools[rec.cfg.pool].device]
+            # refund the *compute* not yet executed: the charged dev_s covers
+            # compute only (weights-load is an idle-power period), so the
+            # fraction is measured over the compute window [compute_begin,
+            # end], not the whole run — a victim preempted mid-load gets a
+            # full refund
+            frac = (rec.end - max(t, rec.compute_begin)) / \
+                max(rec.end - rec.compute_begin, 1e-12)
+            frac = min(max(frac, 0.0), 1.0)
+            ledger.charge_active(spec, -rec.dev_s * frac,
+                                 utilization=rec.pf, pool=rec.cfg.pool)
+            busy[rec.cfg.pool] = busy.get(rec.cfg.pool, 0.0) \
+                - rec.dev_s * frac
+            served.charge(vst.tenant, -rec.dev_s * frac)
+            requeues += 1
+            trace.append(TraceEntry(vwid, vtid, rec.cfg.impl, rec.cfg.pool,
+                                    rec.ndev, rec.start, t,
+                                    note="preempted"))
+            if log is not None:
+                log.append(f"[{t:8.1f}s] preempt {vwid}:{vtid} "
+                           f"({rec.ndev}x{rec.cfg.pool}); requeued")
+
+        def try_preempt(pool: str, n_needed: int) -> bool:
+            """Reclaim harvest-class leases for a priority tenant."""
+            deficit = n_needed - self.cluster.free(pool)
+            if deficit <= 0 or self.cluster.harvest_devices(pool) < deficit:
+                return False
+            victims = self.cluster.preempt_harvest(pool, deficit, t)
+            for lease in victims:
+                # idle warm instance on a preempted lease: drop the shell
+                for inst in [i for i in self.cluster.instances
+                             if i.lease is not None
+                             and i.lease.id == lease.id]:
+                    self.cluster.instances.remove(inst)
+                owner = lease_owner.pop(lease.id, None)
+                if owner is not None:
+                    cancel_task(*owner)
+            return bool(victims)
 
         def try_start(wid: str, tid: str) -> bool:
             st = wfs[wid]
@@ -135,6 +257,8 @@ class Simulator:
             cfg = st.plan[tid]
             impl = self.library.impls[cfg.impl]
             spec = CATALOG[self.cluster.pools[cfg.pool].device]
+            harvest = st.tenant == "harvest"
+            priority = st.tenant == "priority"
             leases: list[Lease] = []
             insts: list[Instance] = []
             new_inst = 0
@@ -153,7 +277,7 @@ class Simulator:
                 st.plan.configs[tid] = cfg
 
             def _alloc_or_evict(n):
-                lease = self.cluster.alloc(cfg.pool, n, t)
+                lease = self.cluster.alloc(cfg.pool, n, t, harvest=harvest)
                 if lease is None:
                     # evict idle warm instances of *other* impls (LRU)
                     idle = sorted(
@@ -163,44 +287,61 @@ class Simulator:
                         key=lambda i: i.warm_since)
                     for victim in idle:
                         self.cluster.evict_instance(victim, t)
-                        lease = self.cluster.alloc(cfg.pool, n, t)
+                        lease = self.cluster.alloc(cfg.pool, n, t,
+                                                   harvest=harvest)
                         if lease is not None:
                             break
                 return lease
 
             if self._is_model(impl):
-                # reuse idle warm instances on the right pool/size first
-                avail = [i for i in self.cluster.instances
-                         if i.impl == cfg.impl and i.pool == cfg.pool
-                         and i.n_devices == cfg.n_devices
-                         and i.busy_until <= t]
-                insts = avail[:cfg.n_instances]
-                while len(insts) < cfg.n_instances:
-                    lease = _alloc_or_evict(cfg.n_devices)
-                    if lease is None:
-                        break
-                    inst = Instance(cfg.impl, cfg.pool, cfg.n_devices,
-                                    warm_since=t, lease=lease)
-                    self.cluster.add_instance(inst)
-                    insts.append(inst)
-                    new_inst += 1
+                def _acquire():
+                    nonlocal new_inst
+                    # reuse idle warm instances on the right pool/size first
+                    avail = [i for i in self.cluster.instances
+                             if i.impl == cfg.impl and i.pool == cfg.pool
+                             and i.n_devices == cfg.n_devices
+                             and i.busy_until <= t and i not in insts]
+                    insts.extend(avail[:cfg.n_instances - len(insts)])
+                    while len(insts) < cfg.n_instances:
+                        lease = _alloc_or_evict(cfg.n_devices)
+                        if lease is None:
+                            break
+                        inst = Instance(cfg.impl, cfg.pool, cfg.n_devices,
+                                        warm_since=t, lease=lease)
+                        self.cluster.add_instance(inst)
+                        insts.append(inst)
+                        new_inst += 1
+
+                _acquire()
+                if not insts and priority and \
+                        try_preempt(cfg.pool, cfg.n_devices):
+                    _acquire()
                 if not insts:
                     return False
+                for inst in insts:
+                    self._relabel_lease(inst, harvest, t)
                 n_inst = len(insts)
             else:
                 total = cfg.n_devices * cfg.n_instances
-                lease = self.cluster.alloc(cfg.pool, total, t)
+                lease = self.cluster.alloc(cfg.pool, total, t,
+                                           harvest=harvest)
                 n_inst = cfg.n_instances
                 if lease is None:
                     lease = _alloc_or_evict(cfg.n_devices)
                     n_inst = 1
+                    if lease is None and priority and \
+                            try_preempt(cfg.pool, cfg.n_devices):
+                        lease = _alloc_or_evict(cfg.n_devices)
                     if lease is None:
                         return False
                 leases.append(lease)
 
             dur, compute = self._duration(node, cfg, n_inst, new_inst)
-            dur *= cfg.paths if cfg.paths > 1 and not node.chunkable else 1.0
+            pmult = cfg.paths if cfg.paths > 1 and not node.chunkable else 1.0
+            dur *= pmult
             end = t + dur
+            # the tail of the run is compute; any lead-in is weights load
+            compute_begin = end - compute * pmult
             for inst in insts:
                 inst.busy_until = end
             ndev = cfg.n_devices * n_inst
@@ -208,32 +349,60 @@ class Simulator:
             pf = self.profiles.power_frac(impl, spec, cfg.n_devices)
             ledger.charge_active(spec, dev_s, utilization=pf, pool=cfg.pool)
             busy[cfg.pool] = busy.get(cfg.pool, 0.0) + dev_s
+            served.charge(st.tenant, dev_s)
             st.started.add(tid)
-            trace.append(TraceEntry(wid, tid, cfg.impl, cfg.pool, ndev, t,
-                                    end,
-                                    note="cold" if new_inst else
-                                    ("warm" if insts else "")))
-            heapq.heappush(events, (end, next(ctr), "finish", f"{wid}|{tid}",
-                                    leases, []))
+            attempt = st.attempt.get(tid, 0)
+            note = ("requeue" if attempt else
+                    "cold" if new_inst else ("warm" if insts else ""))
+            for lease in leases:
+                lease_owner[lease.id] = (wid, tid)
+            for inst in insts:
+                if inst.lease is not None:
+                    lease_owner[inst.lease.id] = (wid, tid)
+            running[(wid, tid)] = _Running(cfg, leases, insts, t, end,
+                                           compute_begin, ndev, dev_s, pf,
+                                           note)
+            heapq.heappush(events, (end, next(ctr), "finish",
+                                    (wid, tid, attempt)))
             if log is not None:
                 log.append(f"[{t:8.1f}s] start {wid}:{tid} on "
-                           f"{ndev}x{cfg.pool} ({cfg.impl})")
+                           f"{ndev}x{cfg.pool} ({cfg.impl})"
+                           + (" [requeue]" if attempt else ""))
             return True
 
         while events:
-            t, _, kind, key, leases, _ = heapq.heappop(events)
-            if kind == "finish":
-                wid, tid = key.split("|")
+            t, _, kind, payload = heapq.heappop(events)
+            if kind == "arrive":
+                st = wfs[payload]
+                if st.plan is None:
+                    if st.plan_fn is None:
+                        raise ValueError(f"workflow {payload!r} submitted "
+                                         f"without a plan or plan_fn")
+                    # admission-time planning: the scheduler sees the live
+                    # cluster (warm instances, free devices)
+                    st.plan = st.plan_fn()
+            elif kind == "finish":
+                wid, tid, attempt = payload
                 st = wfs[wid]
+                if st.attempt.get(tid, 0) != attempt:
+                    continue        # stale: this execution was preempted
+                rec = running.pop((wid, tid))
                 st.done.add(tid)
                 st.finish = max(st.finish, t)
                 self.cluster.complete_task(wid, tid)
-                for lease in leases:
+                impl = self.library.impls[rec.cfg.impl]
+                for lease in rec.leases:
                     # model instances keep their devices (stay warm); tools
                     # release. Instance devices are reclaimed by rebalance.
-                    impl = self.library.impls[st.plan[tid].impl]
+                    lease_owner.pop(lease.id, None)
                     if not self._is_model(impl):
                         self.cluster.release(lease, t)
+                for inst in rec.insts:
+                    if inst.lease is not None:
+                        lease_owner.pop(inst.lease.id, None)
+                trace.append(TraceEntry(wid, tid, rec.cfg.impl, rec.cfg.pool,
+                                        rec.ndev, rec.start, t,
+                                        note=rec.note))
                 # workflow-aware reclamation once demand disappears
                 for action in self.cluster.rebalance(self.library, t):
                     if log is not None:
@@ -260,7 +429,7 @@ class Simulator:
             ledger.charge_idle(spec, p.capacity, makespan)
 
         per_wf = {wid: {"start": st.arrival, "finish": st.finish,
-                        "tasks": len(st.dag)}
+                        "tasks": len(st.dag), "tenant": st.tenant}
                   for wid, st in wfs.items()}
         return SimReport(
             makespan_s=makespan,
@@ -268,11 +437,26 @@ class Simulator:
             active_wh=ledger.active_joules / 3600.0,
             idle_wh=ledger.idle_joules / 3600.0,
             usd=ledger.usd,
-            trace=sorted(trace, key=lambda e: e.start),
+            trace=sorted(trace, key=lambda e: (e.start, e.end, e.workflow)),
             per_workflow=per_wf,
             pool_busy_device_s=busy,
-            preemptions=self.cluster.preemptions,
+            preemptions=self.cluster.preemptions - preempt0,
+            requeues=requeues,
         )
+
+    def _relabel_lease(self, inst: Instance, harvest: bool, t: float):
+        """Keep an instance lease's preemptibility in sync with the tenant
+        running on it: a priority/standard task on a harvest-created warm
+        instance must not be preemptible (and vice versa)."""
+        lease = inst.lease
+        if lease is None or lease.harvest == harvest:
+            return
+        if not self.cluster.lease_active(lease):
+            inst.lease = None
+            return
+        self.cluster.release(lease, t)
+        inst.lease = self.cluster.alloc(inst.pool, inst.n_devices, t,
+                                        harvest=harvest)
 
 
 def render_trace(report: SimReport, width: int = 72) -> str:

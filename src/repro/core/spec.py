@@ -27,7 +27,7 @@ module is the replacement vocabulary (DESIGN.md §2):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Iterable, Mapping, Protocol, Sequence, \
+from typing import Any, Callable, Mapping, Protocol, Sequence, \
     runtime_checkable
 
 from .dag import TaskNode

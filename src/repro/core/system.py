@@ -18,8 +18,8 @@ from .cluster import ClusterManager, Instance, Pool
 from .dag import DAG
 from .orchestrator import RulePlanner
 from .profiles import ProfileStore
-from .scheduler import ExecutionPlan, Scheduler, TaskConfig
-from .simulator import SimReport, Simulator, render_trace
+from .scheduler import ExecutionPlan, Scheduler
+from .simulator import SimReport, Simulator, Submission, render_trace
 from .spec import build_node, input_units
 from .workflow import COMPONENT_ALIASES, ImperativeWorkflow, Job
 
@@ -102,14 +102,31 @@ class Murakkab:
         dag, plan = self.plan(job)
         return self._run({"job": (dag, plan, arrival)}, dag, plan)
 
-    def execute_many(self, jobs: dict[str, tuple[Job, float]]) -> SimReport:
-        """Multi-tenant submission: {id: (job, arrival_s)}."""
-        wfs = {}
+    def execute_many(self, jobs: dict[str, tuple[Job, float]],
+                     policy: str | None = "fcfs",
+                     log: list | None = None) -> SimReport:
+        """Multi-tenant submission: {id: (job, arrival_s)}.
+
+        Jobs enter an admission queue ordered by ``policy`` (core/admission:
+        ``fcfs`` | ``strict-priority`` | ``weighted-fair``) and are *planned
+        on admission* — the scheduler sees the cluster state at each job's
+        arrival (warm instances, devices held by earlier tenants) instead of
+        planning every job upfront against an empty cluster. Each job's
+        ``tenant_class`` decides its queue rank and whether its allocations
+        are preemptible (harvest class).
+        """
+        subs = {}
         for wid, (job, arrival) in jobs.items():
-            dag, plan = self.plan(job)
-            wfs[wid] = (dag, plan, arrival)
+            dag = self.lower(job)
+
+            def _plan(dag=dag, job=job):
+                return self.scheduler.plan(dag, job.constraint_spec,
+                                           job.quality_floor)
+
+            subs[wid] = Submission(dag=dag, plan=None, arrival=arrival,
+                                   tenant=job.tenant_class, plan_fn=_plan)
         sim = Simulator(self.cluster, self.library, self.profiles)
-        return sim.run(wfs)
+        return sim.run(subs, log=log, policy=policy)
 
     # -- imperative (baseline) path ----------------------------------------------------
     def execute_imperative(self, wf: ImperativeWorkflow,
@@ -161,7 +178,16 @@ class Murakkab:
             pools = self.cluster.pools_of_kind(kind)
             if not pools:
                 raise ValueError(f"no pool of kind {kind!r} in cluster")
-            return pools[0].name, int(n)
+            # pinned (always-on) components need non-preemptible capacity:
+            # a harvestable pool can be reclaimed under a component that
+            # assumes its devices never go away
+            pinned = [p for p in pools if not p.harvestable]
+            if not pinned:
+                raise ValueError(
+                    f"only harvestable (preemptible) {kind!r} capacity in "
+                    f"this cluster ({[p.name for p in pools]}); a pinned "
+                    f"imperative component needs an always-on pool")
+            return pinned[0].name, int(n)
         raise ValueError(f"unintelligible resources {resources!r}")
 
     # -- shared run ------------------------------------------------------------------

@@ -91,6 +91,13 @@ class Job:
     constraints: Any = Constraint.MIN_COST
     # min acceptable impl quality: one float, or per-interface dict
     quality_floor: float | dict = 0.85
+    # multi-tenant class: "priority" | "standard" | "harvest"
+    # (core/admission.py; harvest-class allocations are preemptible)
+    tenant_class: str = "standard"
+
+    def __post_init__(self):
+        from .admission import validate_tenant
+        validate_tenant(self.tenant_class)
 
     @property
     def constraint_spec(self) -> ConstraintSpec:

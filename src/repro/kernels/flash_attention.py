@@ -16,7 +16,6 @@ TPU and to ``ref.mha_chunked`` on CPU (same math, jnp scan).
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

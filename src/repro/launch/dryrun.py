@@ -31,7 +31,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import SHAPE_CELLS, cell_applicable
 from ..configs.registry import ARCH_IDS, get_config
@@ -129,7 +128,8 @@ def input_specs(arch: str, shape: str, cfg=None) -> dict:
     cell = SHAPE_CELLS[shape]
     model = build_model(cfg)
     B, S = cell.global_batch, cell.seq_len
-    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), jnp.int32)
     if cell.kind == "train":
         return {"tokens": tok(B, S), "labels": tok(B, S),
                 **model.extra_inputs(B, S, abstract=True)}

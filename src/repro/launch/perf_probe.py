@@ -16,7 +16,7 @@ from ..configs.base import SHAPE_CELLS
 from ..configs.registry import ARCH_IDS, get_config
 from .dryrun import _lower_cell
 from .hlo_cost import (ScaledGraph, _ASSIGN, _COLLECTIVES, _GROUPS,
-                       _GROUPS_IOTA, _KERNEL_META, _is_free, _op_name,
+                       _GROUPS_IOTA, _KERNEL_META, _is_free,
                        _shape_bytes, _traffic_factor)
 from .mesh import make_production_mesh
 

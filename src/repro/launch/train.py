@@ -19,7 +19,6 @@ import time
 import jax
 
 from ..checkpointing.manager import CheckpointManager
-from ..configs.base import SHAPE_CELLS
 from ..configs.registry import ARCH_IDS, get_config
 from ..data.pipeline import DataConfig, DataIterator
 from ..models.model_zoo import build_model

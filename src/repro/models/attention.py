@@ -1,7 +1,6 @@
 """GQA attention block (full / sliding-window / softcap) with KV cache."""
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ collectives.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -211,7 +211,6 @@ def apply_moe(p, x, *, cfg, dist: DistContext = LOCAL):
     if dist.mesh is None or not dist.ep:
         out, aux = _moe_local(x2d, p, cfg)
     else:
-        batch_spec = P(dist.data_axes)
         if dist.expert_tp:     # 2D: EP over model, f TP'd over data
             ep_w_spec = P(dist.model_axis, None, dist.data_axes)
             ep_wd_spec = P(dist.model_axis, dist.data_axes, None)

@@ -11,7 +11,7 @@ Modes: ``train`` (no cache), ``prefill`` (flash attention + cache write at 0),
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,7 @@ from .attention import (apply_attention, attention_specs, compute_cross_kv,
 from .common import (ParamSpec, apply_norm, norm_spec, softcap)
 from .ffn import apply_ffn, ffn_specs
 from .moe import DistContext, LOCAL, apply_moe, moe_specs
-from .ssm import (apply_ssm, apply_ssm_decode, init_ssm_state, ssm_dims,
+from .ssm import (apply_ssm, apply_ssm_decode, init_ssm_state,
                   ssm_specs)
 
 

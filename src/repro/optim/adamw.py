@@ -9,7 +9,6 @@ EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -55,8 +54,8 @@ def init_opt_state(params, cfg: AdamWConfig):
 
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
 
 
 def apply_updates(params, grads, opt_state, cfg: AdamWConfig, lr=None):
@@ -67,7 +66,8 @@ def apply_updates(params, grads, opt_state, cfg: AdamWConfig, lr=None):
     clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
         if cfg.grad_clip else 1.0
 
-    is_q = lambda x: isinstance(x, dict) and "q" in x
+    def is_q(x):
+        return isinstance(x, dict) and "q" in x
 
     def upd(p, g, m, v):
         g = g.astype(jnp.float32) * clip

@@ -52,6 +52,6 @@ def compressed_psum(g, err, axis_name):
 
 def compression_ratio(tree) -> float:
     """HBM/link bytes saved: fp32 -> int8 + one scale per tensor."""
-    raw = sum(l.size * 4 for l in jax.tree.leaves(tree))
-    comp = sum(l.size * 1 + 4 for l in jax.tree.leaves(tree))
+    raw = sum(x.size * 4 for x in jax.tree.leaves(tree))
+    comp = sum(x.size * 1 + 4 for x in jax.tree.leaves(tree))
     return raw / comp

@@ -8,7 +8,7 @@ same builder serves the smoke tests (1 CPU device, mesh=None) and the
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -91,7 +91,6 @@ def batch_shardings(batch_abstract, mesh):
 def build_train_step(model: Model, opts: TrainOptions, mesh=None,
                      rules=None) -> Callable:
     dist = make_dist(mesh, opts)
-    cfg = model.cfg
 
     def loss_fn(params, batch):
         inputs = {k: v for k, v in batch.items() if k != "labels"}
@@ -143,7 +142,6 @@ def jit_train_step(model: Model, opts: TrainOptions, mesh, batch_abstract,
     step_fn = build_train_step(model, opts, mesh, rules)
     st_sh = state_shardings(model, mesh, opts, rules)
     b_sh = batch_shardings(batch_abstract, mesh)
-    metric_sh = NamedSharding(mesh, P())
     return jax.jit(step_fn,
                    in_shardings=(st_sh, b_sh),
                    out_shardings=(st_sh, None),

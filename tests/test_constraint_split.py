@@ -1,0 +1,195 @@
+"""Critical-path-weighted Deadline/Budget split (Scheduler.split_shares).
+
+Property tests (deterministic hypothesis fallback via _hypothesis_compat):
+over random fork/join DAGs the per-task shares must (a) hand the critical
+path exactly the workflow deadline (shares sum to 1 along it), (b) dominate
+the legacy even split's critical-path allotment, (c) stay feasible on every
+root-to-leaf path, and (d) hand the whole budget out exactly once. The
+golden video plan must keep its feasibility (a loose deadline collapses to
+the MIN_COST choice).
+"""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Budget, Deadline, Lexicographic, MIN_COST, MinCost,
+                        MinEnergy, Murakkab)
+from repro.core.constraints import as_spec
+from repro.core.dag import DAG, TaskNode
+
+
+def _system():
+    return Murakkab.tpu_cluster(v5e=32, v5p=8, v4_harvest=0, host_cores=64)
+
+
+def _fork_join_dag(n_chain: int, width: int) -> DAG:
+    """chain head -> `width` parallel summarize tasks -> join tail."""
+    nodes = [TaskNode(id="head", description="", agent="speech_to_text",
+                      work_items=4)]
+    prev = "head"
+    for i in range(n_chain):
+        nodes.append(TaskNode(id=f"c{i}", description="", agent="summarize",
+                              deps=(prev,), work_items=2 + i,
+                              tokens_in=600, tokens_out=90))
+        prev = f"c{i}"
+    mids = []
+    for j in range(width):
+        nodes.append(TaskNode(id=f"w{j}", description="", agent="embed",
+                              deps=(prev,), work_items=1 + j))
+        mids.append(f"w{j}")
+    nodes.append(TaskNode(id="tail", description="", agent="summarize",
+                          deps=tuple(mids) or (prev,), work_items=2,
+                          tokens_in=400, tokens_out=60))
+    return DAG(nodes)
+
+
+def _paths(dag: DAG):
+    """All root-to-leaf paths (the DAGs here are small)."""
+    out = []
+
+    def walk(tid, acc):
+        succ = dag.successors(tid)
+        if not succ:
+            out.append(acc + [tid])
+            return
+        for s in succ:
+            walk(s, acc + [tid])
+
+    for r in dag.roots():
+        walk(r, [])
+    return out
+
+
+SPEC = Lexicographic(Deadline(s=120.0), Budget(usd=5.0), MinCost())
+
+
+@given(st.integers(0, 3), st.integers(0, 4))
+@settings(max_examples=12, deadline=None)
+def test_split_share_properties(n_chain, width):
+    system = _system()
+    dag = _fork_join_dag(n_chain, width)
+    sch = system.scheduler
+    shares = sch.split_shares(dag, SPEC, 0.8)
+    assert set(shares) == set(dag.nodes)
+    for lat_frac, cost_frac in shares.values():
+        assert 0.0 < lat_frac <= 1.0 + 1e-9
+        assert 0.0 <= cost_frac <= 1.0 + 1e-9
+
+    # budget shares are a partition of the workflow budget
+    assert math.isclose(sum(c for _, c in shares.values()), 1.0,
+                        rel_tol=1e-9)
+
+    # recompute the pilot latencies the shares were derived from
+    pilot_spec = as_spec(SPEC).per_task(len(dag))
+    pilot = {tid: sch.plan_task(dag.nodes[tid], pilot_spec, 0.8)
+             for tid in dag.topo_order}
+    lat = {tid: cfg.est_latency_s for tid, cfg in pilot.items()}
+    _, cp = dag.critical_path(lat)
+
+    # (a) the critical path receives exactly the workflow deadline
+    cp_sum = sum(shares[tid][0] for tid in cp)
+    assert math.isclose(cp_sum, 1.0, rel_tol=1e-6), (cp, cp_sum)
+
+    # (b) ... which dominates the even split's critical-path allotment
+    even_cp = len(cp) / len(dag)
+    assert cp_sum >= even_cp - 1e-9
+
+    # (c) every root-to-leaf path stays feasible under per-task deadlines
+    for path in _paths(dag):
+        assert sum(shares[tid][0] for tid in path) <= 1.0 + 1e-6, path
+
+
+def test_single_task_gets_whole_deadline():
+    system = _system()
+    dag = DAG([TaskNode(id="only", description="", agent="summarize",
+                        work_items=2, tokens_in=500, tokens_out=80)])
+    shares = system.scheduler.split_shares(dag, SPEC, 0.8)
+    lat_frac, cost_frac = shares["only"]
+    assert math.isclose(lat_frac, 1.0, rel_tol=1e-9)
+    assert math.isclose(cost_frac, 1.0, rel_tol=1e-9)
+
+
+def test_weighted_split_admits_tighter_slo_than_even():
+    """The point of the refactor: a deadline the even split turns into
+    infeasible per-task targets stays feasible under the weighted split
+    for the task that needs the slack most."""
+    system = _system()
+    dag = _fork_join_dag(2, 3)
+    sch = system.scheduler
+    shares = sch.split_shares(dag, SPEC, 0.8)
+    pilot_spec = as_spec(SPEC).per_task(len(dag))
+    pilot = {tid: sch.plan_task(dag.nodes[tid], pilot_spec, 0.8)
+             for tid in dag.topo_order}
+    lat = {tid: cfg.est_latency_s for tid, cfg in pilot.items()}
+    _, cp = dag.critical_path(lat)
+    heavy = max(cp, key=lambda tid: lat[tid])
+    # the heaviest critical-path task's weighted share beats 1/n
+    assert shares[heavy][0] > 1.0 / len(dag)
+
+
+def test_plan_without_workflow_terms_unchanged():
+    """No Deadline/Budget in the ordering -> the split machinery is
+    bypassed and plans are identical to the direct per-task search."""
+    system = _system()
+    dag = _fork_join_dag(1, 2)
+    a = system.scheduler.plan(dag, (MIN_COST,), 0.8)
+    b = {tid: system.scheduler.plan_task(dag.nodes[tid],
+                                         as_spec(MIN_COST), 0.8)
+         for tid in dag.topo_order}
+    assert a.configs == b
+
+
+def test_golden_video_feasibility_unchanged():
+    """A loose deadline + MinCost must reproduce the golden MIN_COST video
+    plan (feasibility term at zero everywhere -> secondary decides), and
+    the weighted split must keep the plan's critical path within the
+    deadline for a realistic target."""
+    from repro.configs.workflow_video import make_declarative_job
+
+    golden_sys = Murakkab.paper_cluster()
+    dag, golden = golden_sys.plan(make_declarative_job(MIN_COST))
+
+    sys2 = Murakkab.paper_cluster()
+    _, loose = sys2.plan(make_declarative_job(
+        Lexicographic(Deadline(s=1e6), MinCost())))
+    assert {t: (c.impl, c.pool, c.n_devices, c.n_instances, c.batch)
+            for t, c in loose.configs.items()} == \
+           {t: (c.impl, c.pool, c.n_devices, c.n_instances, c.batch)
+            for t, c in golden.configs.items()}
+
+    sys3 = Murakkab.paper_cluster()
+    _, tight = sys3.plan(make_declarative_job(
+        Lexicographic(Deadline(s=100.0), MinEnergy())))
+    lat = {tid: c.est_latency_s for tid, c in tight.configs.items()}
+    cp_s, _ = dag.critical_path(lat)
+    assert cp_s <= 100.0 + 1e-6
+
+
+def test_budget_split_follows_cost_share():
+    """Budget caps follow pilot cost shares: the expensive stage receives
+    the larger slice of the workflow budget."""
+    system = _system()
+    dag = _fork_join_dag(2, 0)
+    sch = system.scheduler
+    shares = sch.split_shares(dag, Lexicographic(Budget(usd=1.0), MinCost()),
+                              0.8)
+    pilot_spec = as_spec(
+        Lexicographic(Budget(usd=1.0), MinCost())).per_task(len(dag))
+    pilot = {tid: sch.plan_task(dag.nodes[tid], pilot_spec, 0.8)
+             for tid in dag.topo_order}
+    costly = max(dag.nodes, key=lambda tid: pilot[tid].est_usd)
+    assert shares[costly][1] == max(c for _, c in shares.values())
+
+
+def test_for_share_spec_arithmetic():
+    spec = as_spec(Lexicographic(Deadline(s=40.0), Budget(usd=2.0, wh=8.0),
+                                 MinCost()))
+    assert spec.has_workflow_terms
+    sub = spec.for_share(0.25, 0.5)
+    assert sub.objectives[0] == Deadline(s=10.0)
+    assert sub.objectives[1] == Budget(usd=1.0, wh=4.0)
+    assert isinstance(sub.objectives[2], MinCost)
+    assert not as_spec(MIN_COST).has_workflow_terms
+    with pytest.raises(ValueError):
+        Deadline(s=10.0).scaled(0.0, 0.5)   # zero share is degenerate

@@ -80,4 +80,4 @@ def test_never_oversubscribed_property(ops):
             cm.release(live.pop(), t=0.0)
         used = cm.pools["gpu"].capacity - cm.free("gpu")
         assert 0 <= used <= 16
-        assert used == sum(l.n_devices for l in live)
+        assert used == sum(ls.n_devices for ls in live)

@@ -3,7 +3,7 @@ import json
 
 import pytest
 
-from repro.core import Job, LLMPlanner, Murakkab, RulePlanner, VideoInput
+from repro.core import Job, LLMPlanner, RulePlanner
 from repro.core.agents import default_library
 from repro.core.orchestrator import dag_creation_overhead
 from repro.configs.workflow_video import PAPER_VIDEOS, make_declarative_job

@@ -1,7 +1,5 @@
 """Scheduler: greedy hierarchical search vs brute force, constraint
 semantics, lever behavior."""
-import itertools
-import math
 
 import pytest
 

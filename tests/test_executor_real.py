@@ -3,7 +3,7 @@ plans (the paper's 'same output in all configurations')."""
 import numpy as np
 import pytest
 
-from repro.core import MIN_COST, MIN_LATENCY, Murakkab
+from repro.core import MIN_COST, Murakkab
 from repro.core.executor import Media, RealExecutor
 from repro.configs.workflow_video import (PAPER_VIDEOS,
                                           make_baseline_workflow,

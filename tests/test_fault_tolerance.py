@@ -1,7 +1,6 @@
 """Fault tolerance: restart driver, stragglers, elastic remesh
 (+ hypothesis on remesh-plan validity)."""
 import jax
-import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 

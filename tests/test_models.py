@@ -125,7 +125,6 @@ class TestMoE:
         assert gather_idx.shape == (E, C)
         assert bool(jnp.all((gather_idx >= 0) & (gather_idx <= T)))
         # every token index in a slot belongs to a real routed assignment
-        flat = np.asarray(gather_idx).reshape(-1)
         routed = set()
         idx_np = np.asarray(idx)
         for t in range(T):

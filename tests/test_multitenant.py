@@ -1,0 +1,226 @@
+"""Adaptive multi-tenant runtime: tenant classes, admission policies,
+lazy (admission-time) planning, and harvest-lease preemption."""
+import dataclasses
+
+import pytest
+
+from repro.core import (FCFS, MIN_LATENCY, Murakkab, POLICIES,
+                        StrictPriority, Submission, WeightedFair, get_policy)
+from repro.core.admission import Admission
+from repro.core.dag import DAG, TaskNode
+from repro.core.simulator import Simulator
+from repro.core.workflow import Job, VideoInput
+from repro.configs.workflow_video import make_declarative_job
+
+
+def _tenant_job(cls, scenes=4):
+    return dataclasses.replace(
+        Job(description="Describe the videos",
+            inputs=(VideoInput("v.mov", scenes=scenes),),
+            constraints=MIN_LATENCY, quality_floor=0.8),
+        tenant_class=cls)
+
+
+def _summarize_dag(tid, items):
+    return DAG([TaskNode(id=tid, description="", agent="summarize",
+                         work_items=items, chunkable=True,
+                         tokens_in=900, tokens_out=120)])
+
+
+# -- tenant classes & policy registry -----------------------------------------
+
+
+def test_job_tenant_class_validated():
+    assert Job(description="x").tenant_class == "standard"
+    for cls in ("priority", "standard", "harvest"):
+        assert Job(description="x", tenant_class=cls).tenant_class == cls
+    with pytest.raises(ValueError, match="tenant class"):
+        Job(description="x", tenant_class="platinum")
+
+
+def test_policy_registry():
+    assert isinstance(get_policy(None), FCFS)
+    assert isinstance(get_policy("strict-priority"), StrictPriority)
+    assert isinstance(get_policy(WeightedFair()), WeightedFair)
+    assert set(POLICIES) == {"fcfs", "strict-priority", "weighted-fair"}
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        get_policy("round-robin")
+
+
+def test_policy_ordering_keys():
+    early_h = Admission("h", "harvest", 0.0)
+    late_p = Admission("p", "priority", 9.0)
+    served = {}
+    assert FCFS().key(early_h, served) < FCFS().key(late_p, served)
+    sp = StrictPriority()
+    assert sp.key(late_p, served) < sp.key(early_h, served)
+    # weighted-fair: the class that consumed less virtual time goes first
+    wf = WeightedFair({"priority": 4.0, "harvest": 1.0})
+    served = {"priority": 400.0, "harvest": 10.0}
+    assert wf.key(early_h, served) < wf.key(late_p, served)
+    served = {"priority": 0.0, "harvest": 1000.0}
+    assert wf.key(late_p, served) < wf.key(early_h, served)
+
+
+# -- execute_many: admission queue + lazy planning ----------------------------
+
+
+def test_execute_many_legacy_tuple_form_still_works():
+    system = Murakkab.tpu_cluster(v5e=16, v5p=0, v4_harvest=0, host_cores=32)
+    report = system.execute_many({
+        "a": (make_declarative_job(MIN_LATENCY), 0.0),
+        "b": (make_declarative_job(MIN_LATENCY), 1.0),
+    })
+    assert set(report.per_workflow) == {"a", "b"}
+    assert all(v["tenant"] == "standard"
+               for v in report.per_workflow.values())
+    assert report.requeues == 0
+
+
+def test_plan_fn_called_at_admission():
+    """Planning is deferred to the workflow's arrival event."""
+    system = Murakkab.tpu_cluster(v5e=16, v5p=0, v4_harvest=0, host_cores=32)
+    dag = _summarize_dag("t", 4)
+    planned_at = []
+
+    def plan_fn():
+        planned_at.append(len(planned_at))
+        return system.scheduler.plan(dag, (MIN_LATENCY,), 0.8)
+
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    rep = sim.run({"w": Submission(dag, None, 7.0, plan_fn=plan_fn)})
+    assert planned_at == [0]            # called exactly once
+    assert rep.per_workflow["w"]["start"] == 7.0
+
+
+def test_submission_without_plan_or_fn_rejected():
+    system = Murakkab.tpu_cluster(v5e=8, v5p=0, v4_harvest=0, host_cores=16)
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    with pytest.raises(ValueError, match="plan"):
+        sim.run({"w": Submission(_summarize_dag("t", 2), None, 0.0)})
+
+
+def test_strict_priority_orders_contended_start():
+    """Both tenants ready at t=0 on a pool that fits one at a time: the
+    priority tenant runs first under strict-priority even though the
+    harvest tenant sorts first by id/arrival."""
+    def spans(policy):
+        system = Murakkab.tpu_cluster(v5e=8, v5p=0, v4_harvest=0,
+                                      host_cores=16)
+        da, dp = _summarize_dag("a", 8), _summarize_dag("b", 8)
+        sim = Simulator(system.cluster, system.library, system.profiles)
+        rep = sim.run({
+            "h": Submission(da, system.scheduler.plan(da, (MIN_LATENCY,),
+                                                      0.8), 0.0, "harvest"),
+            "p": Submission(dp, system.scheduler.plan(dp, (MIN_LATENCY,),
+                                                      0.8), 0.0, "priority"),
+        }, policy=policy)
+        return rep.workflow_span("p"), rep.workflow_span("h")
+
+    p_strict, h_strict = spans("strict-priority")
+    p_fcfs, h_fcfs = spans("fcfs")
+    assert p_strict <= p_fcfs
+    assert p_strict < h_strict          # priority went first
+
+
+# -- preemption ---------------------------------------------------------------
+
+
+def _preemption_run(policy="strict-priority"):
+    system = Murakkab.tpu_cluster(v5e=8, v5p=0, v4_harvest=0, host_cores=16)
+    dh = _summarize_dag("long", 400)
+    dp = _summarize_dag("quick", 4)
+    plan_h = system.scheduler.plan(dh, (MIN_LATENCY,), 0.8)
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    rep = sim.run({
+        "h": Submission(dh, plan_h, 0.0, tenant="harvest"),
+        "p": Submission(dp, None, 10.0, tenant="priority",
+                        plan_fn=lambda: system.scheduler.plan(
+                            dp, (MIN_LATENCY,), 0.8)),
+    }, policy=policy)
+    return rep
+
+
+def test_priority_preempts_harvest_lease():
+    rep = _preemption_run()
+    assert rep.preemptions >= 1
+    assert rep.requeues >= 1
+    notes = [e.note for e in rep.trace]
+    assert "preempted" in notes         # the truncated harvest run
+    assert "requeue" in notes           # its re-execution
+    # the priority task ran immediately at its arrival
+    quick = [e for e in rep.trace if e.workflow == "p"][0]
+    assert quick.start == pytest.approx(10.0)
+    # the harvest workflow still finished (re-enqueued, not dropped)
+    assert rep.per_workflow["h"]["finish"] > 0
+    pre = [e for e in rep.trace if e.note == "preempted"][0]
+    req = [e for e in rep.trace if e.note == "requeue"][0]
+    assert pre.end <= req.start + 1e-9  # requeue strictly after preemption
+
+
+def test_preemption_energy_accounting_consistent():
+    """Refund on preemption keeps energy = active + idle and both
+    non-negative."""
+    import math
+    rep = _preemption_run()
+    assert math.isclose(rep.energy_wh, rep.active_wh + rep.idle_wh,
+                        rel_tol=1e-9)
+    assert rep.active_wh > 0 and rep.idle_wh > 0
+
+
+def test_standard_tenant_never_preempts():
+    system = Murakkab.tpu_cluster(v5e=8, v5p=0, v4_harvest=0, host_cores=16)
+    dh = _summarize_dag("long", 400)
+    dp = _summarize_dag("quick", 4)
+    plan_h = system.scheduler.plan(dh, (MIN_LATENCY,), 0.8)
+    plan_p = system.scheduler.plan(dp, (MIN_LATENCY,), 0.8)
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    rep = sim.run({
+        "h": Submission(dh, plan_h, 0.0, tenant="harvest"),
+        "s": Submission(dp, plan_p, 10.0, tenant="standard"),
+    }, policy="strict-priority")
+    assert rep.preemptions == 0
+    # the standard tenant waited for the harvest task to finish
+    quick = [e for e in rep.trace if e.workflow == "s"][0]
+    long_end = max(e.end for e in rep.trace if e.workflow == "h")
+    assert quick.start >= long_end - 1e-9
+
+
+def test_capacity_safe_under_preemption():
+    """Per-pool device usage never exceeds capacity across the preemption/
+    requeue storm."""
+    rep = _preemption_run()
+    system_capacity = {"v5e": 8, "cpu": 16}
+    events = []
+    for e in rep.trace:
+        events.append((e.start, 1, e.pool, e.devices))
+        events.append((e.end, -1, e.pool, -e.devices))
+    for pool, cap in system_capacity.items():
+        level = 0
+        for _, _, p, d in sorted(events, key=lambda x: (x[0], x[3])):
+            if p == pool:
+                level += d
+                assert level <= cap, pool
+
+
+def test_harvest_pool_rejected_for_pinned_components():
+    """_resources_to_pool skips harvestable pools and errors clearly when
+    only preemptible capacity matches."""
+    from repro.core.cluster import ClusterManager, Pool
+    from repro.core.workflow import MLModel, Workflow
+
+    wf = Workflow(MLModel(name="Whisper", resources={"GPUs": 1}))
+    only_harvest = Murakkab(ClusterManager([
+        Pool("gpu_spot", "a100-80g", capacity=8, harvestable=True),
+        Pool("cpu", "epyc-7v12-core", capacity=32),
+    ]))
+    with pytest.raises(ValueError, match="harvestable"):
+        only_harvest.lower_imperative(wf, ())
+
+    mixed = Murakkab(ClusterManager([
+        Pool("gpu_spot", "a100-80g", capacity=8, harvestable=True),
+        Pool("gpu", "a100-80g", capacity=8),
+        Pool("cpu", "epyc-7v12-core", capacity=32),
+    ]))
+    _, plan = mixed.lower_imperative(wf, ())
+    assert all(c.pool == "gpu" for c in plan.configs.values())

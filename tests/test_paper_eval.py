@@ -1,5 +1,4 @@
 """The paper's evaluation endpoints (§4, Fig. 3, Table 2) as assertions."""
-import numpy as np
 import pytest
 
 from benchmarks.paper_eval import PAPER_TARGETS, run_all, prewarm

@@ -3,8 +3,6 @@ gradient compression, schedules."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import get_config
 from repro.data.pipeline import DataConfig, batch_for_step

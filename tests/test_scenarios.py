@@ -35,8 +35,9 @@ def test_retrieval_routing_lever():
     MAX_QUALITY pays for hybrid — same workflow definition."""
     cheap = make_rag_job().execute(Murakkab.paper_cluster())
     best = make_rag_job(MAX_QUALITY).execute(Murakkab.paper_cluster())
-    impl_of = lambda r: [c.impl for t, c in r.plan.configs.items()
-                         if r.dag.nodes[t].agent == "retrieve"][0]
+    def impl_of(r):
+        return [c.impl for t, c in r.plan.configs.items()
+                if r.dag.nodes[t].agent == "retrieve"][0]
     assert impl_of(cheap) == "bm25-keyword"
     assert impl_of(best) == "hybrid-retrieval"
     assert best.quality > cheap.quality
