@@ -9,8 +9,8 @@ Compares the ``metrics`` maps of two benchmark JSON files (written by
 regresses when it moves in its *bad* direction by more than ``tolerance``
 (relative, default 20%):
 
-- names containing ``quality``, ``saving`` or ``warm_hit`` are
-  higher-is-better;
+- names containing ``quality``, ``saving``, ``warm_hit`` or ``hit_rate``
+  are higher-is-better;
 - everything else (makespan/span/energy/$/preemptions/requeues) is
   lower-is-better.
 
@@ -30,7 +30,7 @@ import argparse
 import json
 import sys
 
-HIGHER_IS_BETTER = ("quality", "saving", "warm_hit")
+HIGHER_IS_BETTER = ("quality", "saving", "warm_hit", "hit_rate")
 
 
 def better_higher(name: str) -> bool:

@@ -4,10 +4,19 @@
     workflow; we measure sweep size/time and per-job reuse.
 (b) DAG creation — <1% of workflow execution time (short LLM queries).
 (c) Configuration search — greedy hierarchical pruning visits a small
-    fraction of the full lever cross-product.
+    fraction of the full lever cross-product; dominated-config pruning
+    (DESIGN.md §7) cuts the visited count further. Per-plan wall time and
+    ``Scheduler.evals`` are reported so planner overhead is tracked next
+    to the paper-repro numbers (``--json``; see also planner_bench.py).
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.overheads [--json BENCH_overheads.json]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 from repro.core import MIN_COST, Murakkab, dag_creation_overhead
@@ -38,25 +47,49 @@ def run(verbose: bool = True) -> list[tuple[str, float, str]]:
     rows.append(("overheads/dag_creation_frac", round(frac, 4),
                  "paper <0.01"))
 
-    # (c) greedy search vs full cross-product
+    # (c) greedy search vs full cross-product + per-plan planner overhead
     system = Murakkab.paper_cluster()
     prewarm(system)
     dag = system.lower(job)
     full = sum(system.scheduler.search_space_size(dag.nodes[t])
                for t in dag.topo_order)
     system.scheduler.evals = 0
+    t0 = time.perf_counter()
     system.scheduler.plan(dag, job.constraint_order, job.quality_floor)
+    plan_wall_ms = (time.perf_counter() - t0) * 1e3
     visited = system.scheduler.evals
     rows.append(("overheads/search_full_space", full, "lever cross-product"))
-    rows.append(("overheads/search_visited", visited, "greedy"))
+    rows.append(("overheads/search_visited", visited,
+                 "greedy + dominated-config pruning"))
     rows.append(("overheads/search_prune_ratio",
                  round(full / max(visited, 1), 1), "x fewer"))
+    rows.append(("overheads/plan_wall_ms", round(plan_wall_ms, 2),
+                 "one video-workflow plan"))
+    rows.append(("overheads/plan_evals", visited, "estimate() calls/plan"))
     if verbose:
         for r in rows:
             print(f"{r[0]:38s} {r[1]:>12} ({r[2]})")
     return rows
 
 
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write metrics JSON (wall-time per plan + evals)")
+    args = ap.parse_args()
+    rows = run(verbose=args.json is not None)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "overheads",
+                       "metrics": {name: value for name, value, _ in rows}},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    else:
+        for r in rows:
+            print(",".join(map(str, r)))
+    return 0
+
+
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    raise SystemExit(main())

@@ -1,0 +1,210 @@
+"""Planner micro-benchmark: the cost of admission-time planning.
+
+PR 2 moved planning to admission time, so every workflow arriving into
+``execute_many`` pays a greedy search against live cluster state. This
+bench measures that search over the multi-tenant tenant mix (the same DAG
+shapes ``benchmarks/multitenant.py`` admits) and quantifies the three
+planner caches (DESIGN.md §7):
+
+- ``baseline`` mode reproduces the pre-cache planner: dominated-config
+  pruning off, the ProfileStore estimate memo off, the admission plan
+  cache off — every plan re-runs the full greedy search.
+- ``fast`` mode turns all three on and replays the admission loop:
+  repeated arrivals of the tenant mix into an unchanged cluster, the case
+  the plan cache exists for.
+
+Both modes plan the identical workload on identical pristine clusters, so
+the bench also *asserts* plan equality config-by-config — the speedup is
+at unchanged plan quality by construction.
+
+The knee sweep evaluates the batch roofline for each scenario's
+representative decode-bound stage (``BATCH_KNEE_REFERENCE``): per-item
+latency vs batch size shows the weights-streaming regime, the
+memory→compute knee, and the flat compute-bound tail.
+
+CLI::
+
+    PYTHONPATH=src python benchmarks/planner_bench.py                # full
+    PYTHONPATH=src python benchmarks/planner_bench.py --fast \
+        --json BENCH_planner.json --min-speedup 5                    # CI
+
+Wall-clock numbers (plans/sec, speedup) go to the JSON ``info`` map —
+runner-dependent, not regression-gated. The ``metrics`` map holds only
+deterministic quantities (evals/plan, cache hit rates, knee positions).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.core import CATALOG, Murakkab, batch_knee, batch_roofline_latency
+
+from benchmarks.multitenant import mixed_jobs
+
+KNEE_DEVICE = "tpu-v5e"
+
+
+def _cluster() -> Murakkab:
+    # mirrors benchmarks/multitenant.py's contended accelerator pool
+    return Murakkab.tpu_cluster(v5e=16, v5p=0, v4_harvest=0, host_cores=96)
+
+
+def _workload(n_tenants: int):
+    """The admitted tenant mix as (wid, dag, job) rows, lowered once."""
+    system = _cluster()
+    jobs = mixed_jobs(n_tenants, stagger_s=2.0)
+    return [(wid, system.lower(job), job)
+            for wid, (job, _arrival) in sorted(jobs.items())]
+
+
+def run_mode(fast: bool, n_tenants: int, repeats: int):
+    """Plan the tenant mix ``repeats`` times; returns (plans, stats)."""
+    system = _cluster()
+    system.scheduler.prune = fast
+    system.profiles.cache_reset(enabled=fast)
+    system.plan_cache_enabled = fast
+    rows = _workload(n_tenants)
+
+    plans = {}
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for wid, dag, job in rows:
+            plans[wid] = system.plan_admitted(dag, job)
+    wall_s = time.perf_counter() - t0
+
+    n_plans = repeats * len(rows)
+    stats = {
+        "wall_s": wall_s,
+        "plans": n_plans,
+        "plans_per_sec": n_plans / wall_s if wall_s else float("inf"),
+        "evals_per_plan": system.scheduler.evals / n_plans,
+        "pruned_per_plan": system.scheduler.pruned / n_plans,
+        "estimate_cache_hit_rate": system.profiles.cache_info()["hit_rate"],
+        "plan_cache_hit_rate": system.plan_cache_hits
+        / max(system.plan_cache_hits + system.plan_cache_misses, 1),
+    }
+    return plans, stats
+
+
+def knee_sweep(verbose: bool = True) -> dict[str, float]:
+    """Per-item latency vs batch for each scenario's reference LLM stage."""
+    from repro.configs import workflow_docingest, workflow_rag, workflow_video
+
+    refs = {
+        "video": workflow_video.BATCH_KNEE_REFERENCE,
+        "rag": workflow_rag.BATCH_KNEE_REFERENCE,
+        "docingest": workflow_docingest.BATCH_KNEE_REFERENCE,
+    }
+    spec = CATALOG[KNEE_DEVICE]
+    lib = _cluster().library
+    metrics: dict[str, float] = {}
+    for sname, (impl_name, ti, to) in refs.items():
+        impl = lib.impls[impl_name]
+        work = impl.work_fn(ti, to)
+        knee = batch_knee(work, spec, 1, impl.mxu_efficiency)
+        lat1 = batch_roofline_latency(work, spec, 1, 1, impl.mxu_efficiency)
+        lat_max = batch_roofline_latency(work, spec, 1, impl.max_batch,
+                                         impl.mxu_efficiency)
+        metrics[f"knee/{sname}_batch"] = round(knee, 2)
+        metrics[f"knee/{sname}_amortization_saving_x"] = \
+            round(lat1 / lat_max, 2)
+        if verbose:
+            print(f"\nknee sweep: {sname} -> {impl_name} "
+                  f"({ti}/{to} tok) on {KNEE_DEVICE}, knee b*={knee:.1f}, "
+                  f"amortization {lat1 / lat_max:.1f}x")
+            curve = []
+            b = 1
+            while b <= impl.max_batch:
+                lat = batch_roofline_latency(work, spec, 1, b,
+                                             impl.mxu_efficiency)
+                curve.append(f"b={b}: {lat * 1e3:8.2f} ms/item")
+                b *= 2
+            print("  " + "\n  ".join(curve))
+    return metrics
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller tenant mix / fewer repeats (CI mode)")
+    ap.add_argument("--tenants", type=int, default=None)
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="admission-loop replays per mode")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write metrics JSON (e.g. BENCH_planner.json)")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="exit 1 unless fast-path plans/sec beats baseline "
+                         "by this factor")
+    args = ap.parse_args()
+    n = args.tenants if args.tenants is not None else (6 if args.fast else 12)
+    repeats = args.repeats if args.repeats is not None \
+        else (8 if args.fast else 16)
+
+    base_plans, base = run_mode(fast=False, n_tenants=n, repeats=repeats)
+    fast_plans, fast = run_mode(fast=True, n_tenants=n, repeats=repeats)
+
+    # plan quality unchanged: caches + pruning must not move a single config
+    mismatched = [wid for wid in base_plans
+                  if base_plans[wid].configs != fast_plans[wid].configs]
+    if mismatched:
+        print(f"PLAN MISMATCH between baseline and fast paths: {mismatched}")
+    speedup = fast["plans_per_sec"] / base["plans_per_sec"]
+
+    print(f"planner bench: {n} tenants (mixed video+RAG+doc-ingest), "
+          f"{repeats} admission replays per mode")
+    hdr = (f"{'mode':<10s} {'plans/s':>10s} {'evals/plan':>11s} "
+           f"{'pruned/plan':>12s} {'est-cache':>10s} {'plan-cache':>11s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for name, st in (("baseline", base), ("fast", fast)):
+        print(f"{name:<10s} {st['plans_per_sec']:>10.1f} "
+              f"{st['evals_per_plan']:>11.1f} {st['pruned_per_plan']:>12.1f} "
+              f"{st['estimate_cache_hit_rate']:>10.1%} "
+              f"{st['plan_cache_hit_rate']:>11.1%}")
+    print(f"speedup: {speedup:.1f}x plans/sec "
+          f"({'plan quality unchanged' if not mismatched else 'PLANS DRIFTED'})")
+
+    metrics: dict[str, float] = {
+        "evals_per_plan_baseline": round(base["evals_per_plan"], 2),
+        "evals_per_plan_fast": round(fast["evals_per_plan"], 2),
+        "pruned_per_plan_saving": round(fast["pruned_per_plan"], 2),
+        "estimate_cache_hit_rate": round(fast["estimate_cache_hit_rate"], 4),
+        "plan_cache_hit_rate": round(fast["plan_cache_hit_rate"], 4),
+        "plan_quality_unchanged": 0.0 if mismatched else 1.0,
+    }
+    metrics.update(knee_sweep())
+    info = {
+        "plans_per_sec_baseline": round(base["plans_per_sec"], 1),
+        "plans_per_sec_fast": round(fast["plans_per_sec"], 1),
+        "speedup_x": round(speedup, 2),
+        "tenants": n, "repeats": repeats,
+    }
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "planner",
+                       "mode": "fast" if args.fast else "full",
+                       "metrics": metrics, "info": info},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+
+    if mismatched:
+        return 1
+    if args.min_speedup is not None and speedup < args.min_speedup:
+        print(f"FAIL: speedup {speedup:.1f}x < required "
+              f"{args.min_speedup:.1f}x")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,10 +2,11 @@
 
     PYTHONPATH=src python examples/doc_ingest.py
 
-The digest stage fans out over 72 chunks; weight-streaming LLM decode makes
-batching nearly free (batch_alpha=0.15), so constraint choice mostly moves
-the parse/digest *tiers* (pypdf vs OCR, 7B vs 104B) while the scheduler
-co-schedules chunks aggressively under every objective.
+The digest stage fans out over 72 chunks; LLM decode streams the weights
+once per step regardless of batch size (the batch roofline, DESIGN.md §7),
+so below the compute knee batching is nearly free and constraint choice
+mostly moves the parse/digest *tiers* (pypdf vs OCR, 7B vs 104B) while the
+scheduler co-schedules chunks aggressively under every objective.
 """
 import os
 import sys

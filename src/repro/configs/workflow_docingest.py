@@ -4,8 +4,9 @@ The second scenario built purely on the declarative API: documents are
 parsed into chunks (cardinality: pages), every chunk gets an LLM digest
 (cardinality: chunks — the batchable bulk stage), and the digests are
 indexed. The digest stage is where the scheduler's batching lever pays:
-``batch_alpha = 0.15`` weight-streaming LLM decode makes large batches
-nearly free, so MIN_ENERGY/MIN_COST plans co-schedule chunks aggressively.
+LLM decode streams the weights once per step regardless of batch size
+(the batch roofline, DESIGN.md §7), so below the compute knee MIN_ENERGY/
+MIN_COST plans co-schedule chunks aggressively.
 """
 from __future__ import annotations
 
@@ -17,6 +18,12 @@ PAPER_DOCS = (
     DocumentInput("10k_2024.pdf", pages=12, chunks_per_page=3),
     DocumentInput("10k_2023.pdf", pages=12, chunks_per_page=3),
 )
+
+
+# representative decode-bound stage for the batch-roofline knee sweep
+# (benchmarks/planner_bench.py): the digest interface's token footprint —
+# the batchable bulk stage this scenario exists to exercise.
+BATCH_KNEE_REFERENCE = ("gemma2-9b-digest", 700, 90)
 
 
 def _first_doc(job) -> DocumentInput:

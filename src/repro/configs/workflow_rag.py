@@ -28,6 +28,11 @@ RAG_QUERIES = (
 )
 
 
+# representative decode-bound stage for the batch-roofline knee sweep
+# (benchmarks/planner_bench.py): the synthesize interface's token footprint.
+BATCH_KNEE_REFERENCE = ("gemma2-9b-synth", 1200, 200)
+
+
 def _first_query(job) -> QueryInput:
     qs = [q for q in job.inputs if isinstance(q, QueryInput)]
     return qs[0] if qs else QueryInput("input")

@@ -32,9 +32,17 @@ PAPER_VIDEOS = (
 N_SCENES = sum(v.scenes for v in PAPER_VIDEOS)          # 8
 FRAMES = N_SCENES * PAPER_VIDEOS[0].frames_per_scene    # 80
 
+# representative decode-bound stage for the batch-roofline knee sweep
+# (benchmarks/planner_bench.py): (impl, tokens_in, tokens_out) — the
+# summarize interface's declared token footprint on a mid-tier LLM.
+BATCH_KNEE_REFERENCE = ("gemma2-9b", 900, 120)
+
 
 # pinned (impl, device, n_devices) -> seconds per work-item [, power_frac]
 # work-items: scenes for frame/stt/obj/embed; frames for summarize.
+# Measured rows are per-item at batch=1 and carry no FLOP/byte split, so
+# their batch model stays the deprecated ``batch ** alpha`` fallback — the
+# batch roofline (DESIGN.md §7) applies to analytic profiles only.
 PAPER_PROFILES: dict[tuple[str, str, int], tuple[float, float]] = {
     # OpenCV frame extraction: ~4 s/scene on one vCPU
     ("opencv", "epyc-7v12-core", 1): (4.0, 1.0),

@@ -20,7 +20,8 @@ from .constraints import (Budget, Constraint, ConstraintSpec, Deadline,
                           Lexicographic, MaxQuality, MinCost, MinEnergy,
                           MinLatency, Objective, Weighted, as_spec)
 from .dag import DAG, TaskNode
-from .energy import CATALOG, DeviceSpec, EnergyLedger, roofline_latency
+from .energy import (CATALOG, DeviceSpec, EnergyLedger, batch_knee,
+                     batch_roofline_latency, roofline_latency)
 from .orchestrator import LLMPlanner, RulePlanner, dag_creation_overhead
 from .profiles import Profile, ProfileStore
 from .scheduler import ExecutionPlan, Scheduler, TaskConfig
@@ -40,7 +41,8 @@ __all__ = [
     "StrictPriority", "WeightedFair", "get_policy",
     "AgentImpl", "AgentInterface", "AgentLibrary", "Work", "default_library",
     "ClusterManager", "Instance", "Pool", "DAG", "TaskNode",
-    "CATALOG", "DeviceSpec", "EnergyLedger", "roofline_latency",
+    "CATALOG", "DeviceSpec", "EnergyLedger", "batch_knee",
+    "batch_roofline_latency", "roofline_latency",
     "LLMPlanner", "RulePlanner", "dag_creation_overhead",
     "Profile", "ProfileStore", "ExecutionPlan", "Scheduler", "TaskConfig",
     "SimReport", "Simulator", "Submission", "TraceEntry", "render_trace",

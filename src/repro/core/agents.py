@@ -24,20 +24,85 @@ from .spec import ARTIFACTS, CardinalityModel, TokenModel
 
 @dataclass(frozen=True)
 class Work:
-    """Device-agnostic workload of one task invocation."""
+    """Device-agnostic workload of one task invocation.
+
+    ``flops``/``hbm_bytes`` are the single-item totals the seed roofline
+    consumes. A work model may additionally declare a *prefill/decode phase
+    split* (DESIGN.md §7): per-phase FLOPs plus the HBM traffic partitioned
+    into ``weight_bytes`` — the parameter stream, read once per decode step
+    *regardless of batch size* — and per-item activation/KV bytes. The
+    split is what makes ``energy.batch_roofline_latency`` batch-aware:
+    shared weight streams amortize across a batch, per-item bytes do not.
+    """
 
     flops: float = 0.0
     hbm_bytes: float = 0.0
     coll_bytes: float = 0.0
+    # -- prefill/decode phase split (all zero => no phase info) --------------
+    prefill_flops: float = 0.0     # forward over the prompt, per item
+    decode_flops: float = 0.0      # autoregressive steps, per item
+    prefill_bytes: float = 0.0     # per-item prompt/activation HBM traffic
+    decode_bytes: float = 0.0      # per-item KV/activation traffic, all steps
+    weight_bytes: float = 0.0      # parameter bytes streamed per decode step
+    decode_steps: float = 0.0      # number of decode steps (~tokens_out)
+
+    @property
+    def has_phases(self) -> bool:
+        """True when the model declared a prefill/decode split."""
+        return self.weight_bytes > 0.0 and self.decode_steps > 0.0
+
+    @property
+    def shared_bytes(self) -> float:
+        """HBM traffic amortized across a batch: the weights stream, read
+        once per decode step however many items are co-scheduled."""
+        return self.weight_bytes * self.decode_steps
+
+    @property
+    def per_item_bytes(self) -> float:
+        """HBM traffic that scales with batch size (activations, KV)."""
+        return max(self.hbm_bytes - self.shared_bytes, 0.0)
+
+    @staticmethod
+    def two_phase(prefill_flops: float, decode_flops: float,
+                  prefill_bytes: float, decode_bytes: float,
+                  weight_bytes: float, decode_steps: float,
+                  coll_bytes: float = 0.0) -> "Work":
+        """Build a phased Work whose legacy totals are consistent with the
+        split, so the batch model reduces to the seed roofline at batch=1."""
+        steps = max(decode_steps, 0.0)
+        return Work(flops=prefill_flops + decode_flops,
+                    hbm_bytes=weight_bytes * steps + prefill_bytes
+                    + decode_bytes,
+                    coll_bytes=coll_bytes,
+                    prefill_flops=prefill_flops, decode_flops=decode_flops,
+                    prefill_bytes=prefill_bytes, decode_bytes=decode_bytes,
+                    weight_bytes=weight_bytes, decode_steps=steps)
 
     def __mul__(self, k: float) -> "Work":
-        return Work(self.flops * k, self.hbm_bytes * k, self.coll_bytes * k)
+        # k items: extensive quantities scale; the resident weights do not
+        # (k items means k * decode_steps weight streams, not k * weights).
+        return Work(self.flops * k, self.hbm_bytes * k, self.coll_bytes * k,
+                    self.prefill_flops * k, self.decode_flops * k,
+                    self.prefill_bytes * k, self.decode_bytes * k,
+                    self.weight_bytes, self.decode_steps * k)
 
     __rmul__ = __mul__
 
     def __add__(self, o: "Work") -> "Work":
+        # combined shared stream must equal the sum of both works' streams
+        # (keeps shared + per_item == hbm and the b=1 == seed invariant);
+        # the larger residency stands in as the stream granularity.
+        wb = max(self.weight_bytes, o.weight_bytes)
+        shared = self.shared_bytes + o.shared_bytes
         return Work(self.flops + o.flops, self.hbm_bytes + o.hbm_bytes,
-                    self.coll_bytes + o.coll_bytes)
+                    self.coll_bytes + o.coll_bytes,
+                    self.prefill_flops + o.prefill_flops,
+                    self.decode_flops + o.decode_flops,
+                    self.prefill_bytes + o.prefill_bytes,
+                    self.decode_bytes + o.decode_bytes,
+                    wb,
+                    shared / wb if wb else
+                    self.decode_steps + o.decode_steps)
 
 
 @dataclass(frozen=True)
@@ -79,20 +144,34 @@ class AgentImpl:
     arch: str | None = None             # model-zoo backing (real execution)
     params_bytes: float = 0.0
     overhead_s: float = 0.0             # per-step invocation overhead
-    # batching lever: time(batch of b items) = per_item * b**batch_alpha.
-    # alpha ~ 0.15 for weight-streaming-bound LLM decode (weights read once
-    # per step regardless of batch); alpha = 1.0 means no batching benefit.
+    # batching lever. Impls whose work model declares a prefill/decode phase
+    # split (``Work.has_phases``) get the batch-aware roofline
+    # (``energy.batch_roofline_latency``): weights stream once per decode
+    # step regardless of batch, so per-item latency falls until the compute
+    # knee. ``batch_alpha`` is the DEPRECATED scalar fallback — time(batch
+    # of b) = per_item * b**alpha — kept only for impls without a phase
+    # split and for pinned (measured) profile rows, which carry no
+    # FLOP/byte decomposition to feed the roofline.
     max_batch: int = 1
     batch_alpha: float = 1.0
 
 
 @functools.lru_cache(maxsize=None)
 def _lm_work(arch: str) -> tuple[Callable[[int, int], Work], float]:
-    """LLM workload model from a zoo config: prefill FLOPs + decode bytes.
+    """LLM workload model from a zoo config, as a two-phase ``Work``.
 
-    flops  = 2 * N_active * (tokens_in + tokens_out)   (forward only)
-    bytes  = params_bytes * tokens_out                  (decode is weight-
-             streaming bound; prefill reads weights ~once, negligible vs this)
+    prefill: flops = 2 * N_active * tokens_in — compute-bound; weights are
+             read ~once for the whole (batched) forward, negligible against
+             the decode stream below, so no per-item byte charge. (The seed
+             model charged 2 * N_active bytes *per prompt token* here —
+             contradicting its own "negligible" note and drowning the
+             batch-shared decode stream; the roofline split removes it.)
+    decode:  flops = 2 * N_active * tokens_out; weights (params_bytes)
+             stream once per decode step — ``max(tokens_out, 1)`` steps,
+             the floor standing in for the single prefill pass of
+             decode-free works — shared across every item co-scheduled in
+             a batch. Per-item KV/activation traffic is negligible at
+             these context lengths (decode_bytes=0).
     """
     cfg = get_config(arch)
     model = build_model(cfg)
@@ -100,9 +179,13 @@ def _lm_work(arch: str) -> tuple[Callable[[int, int], Work], float]:
     pbytes = model.param_count() * 2.0  # bf16
 
     def work(tokens_in: int, tokens_out: int) -> Work:
-        flops = 2.0 * n_active * (tokens_in + tokens_out)
-        bytes_ = pbytes * max(tokens_out, 1) + 2.0 * n_active * tokens_in
-        return Work(flops=flops, hbm_bytes=bytes_)
+        return Work.two_phase(
+            prefill_flops=2.0 * n_active * tokens_in,
+            decode_flops=2.0 * n_active * tokens_out,
+            prefill_bytes=0.0,
+            decode_bytes=0.0,
+            weight_bytes=pbytes,
+            decode_steps=max(tokens_out, 1))
 
     return work, pbytes
 
@@ -318,8 +401,10 @@ def default_library() -> AgentLibrary:
     # NVLM-class profile from the paper's setup (8xA100 summarize)
     lib.register_impl(AgentImpl(
         "nvlm-72b", "summarize", quality=0.96, hw_kinds=("gpu",),
-        work_fn=lambda ti, to: Work(flops=2.0 * 72e9 * (ti + to),
-                                    hbm_bytes=144e9 * max(to, 1)),
+        work_fn=lambda ti, to: Work.two_phase(
+            prefill_flops=2.0 * 72e9 * ti, decode_flops=2.0 * 72e9 * to,
+            prefill_bytes=0.0, decode_bytes=0.0,
+            weight_bytes=144e9, decode_steps=max(to, 1)),
         min_devices={"gpu": 8}, max_devices={"gpu": 8},
         power_frac=0.55, load_time_s=40.0, params_bytes=144e9,
         max_batch=128, batch_alpha=0.15, overhead_s=0.3))

@@ -123,6 +123,19 @@ class ClusterManager:
     def pools_of_kind(self, kind: str) -> list[Pool]:
         return [p for p in self.pools.values() if p.spec.kind == kind]
 
+    def digest(self) -> tuple:
+        """Hashable snapshot of every cluster fact the scheduler reads.
+
+        Pool occupancy (``stats()``'s free/harvestable derive from it) plus
+        the warm-instance set (plan_task's warmth check). Equal digests ⟹
+        the deterministic scheduler returns identical plans, which is what
+        makes the admission-time plan cache sound (DESIGN.md §7). Instance
+        busy-times and lease identities are deliberately excluded — the
+        planner never reads them.
+        """
+        return (tuple(sorted(self._used.items())),
+                frozenset((i.impl, i.pool) for i in self.instances))
+
     # -- workflow awareness ------------------------------------------------------
     def register_workflow(self, wf_id: str, dag: DAG):
         self._dags[wf_id] = dag

@@ -43,6 +43,7 @@ class DAG:
                 if d not in self.nodes:
                     raise ValueError(f"{n.id!r} depends on unknown {d!r}")
         self._topo = self._toposort()
+        self._sig: tuple | None = None
 
     # -- structure -----------------------------------------------------------
     def _toposort(self) -> tuple[str, ...]:
@@ -68,6 +69,22 @@ class DAG:
     @property
     def topo_order(self) -> tuple[str, ...]:
         return self._topo
+
+    def signature(self) -> tuple:
+        """Hashable structural identity: everything the scheduler reads.
+
+        Two DAGs with equal signatures produce identical plans against the
+        same cluster state — the admission-time plan cache's key
+        (DESIGN.md §7). Covers ids, interfaces, edges and the workload
+        descriptors (work_items, chunkable, token footprint); toolcall args
+        and NL descriptions are excluded (the scheduler never reads them).
+        """
+        if self._sig is None:
+            self._sig = tuple(
+                (n.id, n.agent, n.deps, n.work_items, n.chunkable,
+                 n.tokens_in, n.tokens_out)
+                for n in (self.nodes[i] for i in self._topo))
+        return self._sig
 
     def successors(self, node_id: str) -> list[str]:
         return [n.id for n in self.nodes.values() if node_id in n.deps]

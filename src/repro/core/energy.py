@@ -17,6 +17,7 @@ active increments accrue only while a task runs on the device.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 
@@ -131,3 +132,51 @@ def roofline_latency(flops: float, bytes_moved: float, spec: DeviceSpec,
     t_m = bytes_moved / (n * spec.hbm_bw)
     t_x = (collective_bytes / (n * spec.link_bw)) if spec.link_bw else 0.0
     return max(t_c, t_m, t_x)
+
+
+def batch_roofline_latency(work, spec: DeviceSpec, n_devices: int = 1,
+                           batch: int = 1, efficiency: float = 0.6) -> float:
+    """Per-item latency of one step over a batch of ``batch`` items.
+
+    The batch-aware extension of :func:`roofline_latency` (DESIGN.md §7):
+    the ``work``'s prefill/decode phase split decides which HBM traffic
+    amortizes across the batch. Weights stream once per decode step (and
+    once for prefill) *regardless* of batch size — ``work.shared_bytes`` —
+    while per-item activation/KV traffic scales with ``batch``:
+
+        compute(b) = b * flops / (n * peak * eff)
+        memory(b)  = (shared_bytes + b * per_item_bytes) / (n * hbm_bw)
+        coll(b)    = b * coll_bytes / (n * link_bw)
+        per_item   = max(compute, memory, coll) / b
+
+    Small ``b``: weights-streaming-bound, per-item latency falls ~1/b.
+    Past the knee (:func:`batch_knee`): compute-bound, per-item flattens.
+    At ``batch=1`` this is exactly the seed roofline (memory(1) =
+    hbm_bytes / (n * hbm_bw)), so unbatched estimates are unchanged.
+    """
+    n = max(n_devices, 1)
+    b = max(batch, 1)
+    t_c = b * work.flops / (n * spec.peak_flops * efficiency)
+    t_m = (work.shared_bytes + b * work.per_item_bytes) / (n * spec.hbm_bw)
+    t_x = (b * work.coll_bytes / (n * spec.link_bw)) if spec.link_bw else 0.0
+    return max(t_c, t_m, t_x) / b
+
+
+def batch_knee(work, spec: DeviceSpec, n_devices: int = 1,
+               efficiency: float = 0.6) -> float:
+    """Batch size where the weights stream stops dominating compute.
+
+    Solves ``compute(b) = memory(b)`` of :func:`batch_roofline_latency` for
+    ``b``: below the knee a batched step is bound by the shared weights
+    stream (batching is nearly free), above it by compute (batching only
+    adds latency). ``inf`` when the work never becomes compute-bound
+    (per-item memory traffic alone outweighs compute — batching always
+    pays); 1.0 when it is compute-bound already at ``b=1``.
+    """
+    n = max(n_devices, 1)
+    c = work.flops / (n * spec.peak_flops * efficiency)     # compute / item
+    p = work.per_item_bytes / (n * spec.hbm_bw)             # memory / item
+    s = work.shared_bytes / (n * spec.hbm_bw)               # shared stream
+    if c <= p:
+        return math.inf
+    return max(s / (c - p), 1.0)

@@ -16,10 +16,12 @@ workflows.
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass
 
 from .agents import AgentImpl, AgentLibrary, Work
-from .energy import CATALOG, DeviceSpec, roofline_latency
+from .energy import (CATALOG, DeviceSpec, batch_roofline_latency,
+                     roofline_latency)
 
 
 @dataclass(frozen=True)
@@ -37,12 +39,29 @@ class Profile:
 
 
 class ProfileStore:
-    """Profile generation + pinned calibration overrides."""
+    """Profile generation + pinned calibration overrides.
+
+    ``step_latency`` is the single latency model both the scheduler's
+    estimates and the simulator's actuals consume (DESIGN.md §7). Results
+    are memoized in a bounded LRU keyed by
+    ``(impl, device, n_devices, batch, work)`` — the work signature is the
+    frozen ``Work`` dataclass itself — so repeated planning over the same
+    library/cluster pays the roofline math once.
+    """
+
+    CACHE_MAX = 8192
 
     def __init__(self, library: AgentLibrary):
         self.library = library
         # (impl, device, n_devices) -> (latency_s per item, power_frac)
         self._pinned: dict[tuple[str, str, int], tuple[float, float]] = {}
+        self._cache: OrderedDict[tuple, float] = OrderedDict()
+        self.cache_enabled = True
+        self.cache_hits = 0
+        self.cache_misses = 0
+        # bumped on every pin(): downstream caches keyed on estimates (the
+        # admission plan cache) include it so calibration invalidates them
+        self.version = 0
 
     # -- calibration ---------------------------------------------------------
     def pin(self, impl: str, device: str, n_devices: int, latency_s: float,
@@ -50,11 +69,13 @@ class ProfileStore:
         imp = self.library.impls[impl]
         pf = imp.power_frac if power_frac is None else power_frac
         self._pinned[(impl, device, n_devices)] = (latency_s, pf)
+        self._cache.clear()     # calibration invalidates memoized estimates
+        self.version += 1
 
     # -- queries --------------------------------------------------------------
-    def latency(self, impl: AgentImpl, spec: DeviceSpec, n_devices: int,
-                work: Work) -> float:
-        """Per-work-item latency for one instance of ``n_devices``."""
+    def _pinned_per_item(self, impl: AgentImpl, spec: DeviceSpec,
+                         n_devices: int) -> float | None:
+        """Calibrated per-item latency, or None when only analytic."""
         key = (impl.name, spec.name, n_devices)
         if key in self._pinned:
             return self._pinned[key][0]
@@ -64,12 +85,64 @@ class ProfileStore:
         if cands:
             n0, (lat0, _) = min(cands, key=lambda c: abs(
                 math.log(c[0] / max(n_devices, 1))))
-            scale = (n0 / n_devices) ** 0.9
-            return lat0 * scale
-        return impl.overhead_s + roofline_latency(
-            work.flops, work.hbm_bytes, spec, n_devices=n_devices,
-            collective_bytes=work.coll_bytes,
-            efficiency=impl.mxu_efficiency)
+            return lat0 * (n0 / n_devices) ** 0.9
+        return None
+
+    def step_latency(self, impl: AgentImpl, spec: DeviceSpec, n_devices: int,
+                     work: Work, batch: int = 1) -> float:
+        """Wall time of ONE step co-scheduling ``batch`` work-items.
+
+        Three regimes, in precedence order:
+
+        - *pinned* (measured) rows carry no FLOP/byte decomposition, so the
+          deprecated ``batch ** alpha`` scalar stays their batch model;
+        - analytic works *with* a prefill/decode phase split use the
+          batch-aware roofline (weights stream amortizes across the batch);
+        - analytic works without a split fall back to ``batch ** alpha``.
+        """
+        key = (impl.name, spec.name, n_devices, batch, work)
+        if self.cache_enabled:
+            hit = self._cache.get(key)
+            if hit is not None:
+                self._cache.move_to_end(key)
+                self.cache_hits += 1
+                return hit
+            self.cache_misses += 1
+        pinned = self._pinned_per_item(impl, spec, n_devices)
+        if pinned is not None:
+            step = pinned * batch ** impl.batch_alpha
+        elif work.has_phases:
+            step = impl.overhead_s + max(batch, 1) * batch_roofline_latency(
+                work, spec, n_devices=n_devices, batch=batch,
+                efficiency=impl.mxu_efficiency)
+        else:
+            step = (impl.overhead_s + roofline_latency(
+                work.flops, work.hbm_bytes, spec, n_devices=n_devices,
+                collective_bytes=work.coll_bytes,
+                efficiency=impl.mxu_efficiency)) * batch ** impl.batch_alpha
+        if self.cache_enabled:
+            self._cache[key] = step
+            if len(self._cache) > self.CACHE_MAX:
+                self._cache.popitem(last=False)
+        return step
+
+    def latency(self, impl: AgentImpl, spec: DeviceSpec, n_devices: int,
+                work: Work, batch: int = 1) -> float:
+        """Per-work-item latency within a batch of ``batch`` items."""
+        return self.step_latency(impl, spec, n_devices, work, batch) \
+            / max(batch, 1)
+
+    def cache_info(self) -> dict:
+        total = self.cache_hits + self.cache_misses
+        return {"hits": self.cache_hits, "misses": self.cache_misses,
+                "size": len(self._cache), "max": self.CACHE_MAX,
+                "hit_rate": self.cache_hits / total if total else 0.0}
+
+    def cache_reset(self, enabled: bool = True):
+        """Drop memoized estimates and zero the counters (benchmarks)."""
+        self._cache.clear()
+        self.cache_enabled = enabled
+        self.cache_hits = self.cache_misses = 0
 
     def pinned_counts(self, impl_name: str, device: str) -> list[int]:
         """Profiled device counts for (impl, device). When non-empty, the

@@ -28,7 +28,7 @@ from dataclasses import dataclass, field, replace
 
 from .agents import AgentImpl, AgentLibrary
 from .cluster import ClusterManager
-from .constraints import Constraint, Objective, as_spec
+from .constraints import Constraint, ConstraintSpec, Objective, as_spec
 from .dag import DAG, TaskNode
 from .energy import CATALOG
 from .profiles import ProfileStore
@@ -99,20 +99,32 @@ class Scheduler:
         self.profiles = profiles
         self.cluster = cluster
         self.evals = 0          # estimate() calls (greedy-search footprint)
+        self.prune = True       # dominated-config pruning in plan_task
+        self.pruned = 0         # candidate configs skipped by pruning
+        self._works: dict[tuple[str, int, int], object] = {}
 
     # -- estimation ------------------------------------------------------------
+    def _work_of(self, impl: AgentImpl, node: TaskNode):
+        """Memoized ``impl.work_fn`` — one Work per (impl, token footprint)."""
+        key = (impl.name, node.tokens_in, node.tokens_out)
+        work = self._works.get(key)
+        if work is None:
+            work = self._works[key] = impl.work_fn(node.tokens_in,
+                                                   node.tokens_out)
+        return work
+
     def estimate(self, node: TaskNode, impl: AgentImpl, pool: str,
                  n_devices: int, n_instances: int = 1, batch: int = 1,
                  paths: int = 1, warm: bool = False) -> TaskConfig:
         self.evals += 1
         spec = CATALOG[self.cluster.pools[pool].device]
-        work = impl.work_fn(node.tokens_in, node.tokens_out)
-        per_item = self.profiles.latency(impl, spec, n_devices, work)
+        work = self._work_of(impl, node)
         if spec.kind == "cpu":
             batch = 1     # batching is an accelerator lever (weights reuse)
         items_per_inst = math.ceil(node.work_items / n_instances)
         steps = math.ceil(items_per_inst / batch)
-        compute = steps * per_item * batch ** impl.batch_alpha
+        compute = steps * self.profiles.step_latency(impl, spec, n_devices,
+                                                     work, batch)
         lat = compute if warm else compute + impl.load_time_s
         pf = self.profiles.power_frac(impl, spec, n_devices)
         # active energy/$ accrue over compute time; weight-loading is an
@@ -140,6 +152,49 @@ class Scheduler:
         """Comparison key under any accepted constraint form."""
         return as_spec(order).key(cfg)
 
+    def _dominated(self, node: TaskNode, impl: AgentImpl, pool: str,
+                   counts: list[int], warm: bool, incumbent: TaskConfig,
+                   order: "ConstraintSpec") -> bool:
+        """Dominated-config pruning: can *any* device count in this
+        (impl, pool) group beat the incumbent under ``order``?
+
+        Builds one optimistic pseudo-config whose latency/$/energy/quality
+        are simultaneous lower bounds over every level-2 candidate in the
+        group. On the analytic roofline, per-item latency is ``overhead +
+        K/n`` — non-increasing in device count — so the latency bound sits
+        at ``max(counts)`` and the device-seconds (hence $/energy) bound at
+        ``min(counts)``; pinned (impl, device) pairs scale off the nearest
+        calibration anchor, which is *not* monotone in ``n``, so those
+        groups evaluate every count exactly (cheap: memoized, short lists).
+        Every objective in the DSL is monotone in those four quantities and
+        the lexicographic key is monotone componentwise, so if even the
+        bound cannot beat the incumbent's key, no real candidate can — the
+        whole ``counts`` loop is skipped without changing the chosen plan.
+        """
+        spec = CATALOG[self.cluster.pools[pool].device]
+        work = self._work_of(impl, node)
+        items = node.work_items
+        if self.profiles.pinned_counts(impl.name, spec.name):
+            per = [self.profiles.latency(impl, spec, n, work)
+                   for n in counts]
+            lat_lb = items * min(per)
+            dev_s_lb = items * min(p * n for p, n in zip(per, counts))
+        else:
+            lat_lb = items * self.profiles.latency(impl, spec, counts[-1],
+                                                   work)
+            dev_s_lb = items * self.profiles.latency(impl, spec, counts[0],
+                                                     work) * counts[0]
+        if not warm:
+            lat_lb += impl.load_time_s
+        pf_lb = min(self.profiles.power_frac(impl, spec, n) for n in counts)
+        lb = TaskConfig(
+            impl=impl.name, pool=pool, n_devices=counts[0],
+            est_latency_s=lat_lb,
+            est_energy_j=dev_s_lb * pf_lb * (spec.active_w - spec.idle_w),
+            est_usd=dev_s_lb / 3600.0 * spec.usd_per_hour,
+            quality=impl.quality, warm=warm)
+        return order.key(lb) >= order.key(incumbent)
+
     # -- the greedy hierarchical search -------------------------------------------
     def plan_task(self, node: TaskNode, order,
                   quality_floor: float | dict) -> TaskConfig:
@@ -159,6 +214,10 @@ class Scheduler:
             cand_impls = ok  # defer to the objective over hw configs
 
         stats = self.cluster.stats()
+        # warm-instance lookup, hoisted out of the candidate loop: one
+        # O(instances) scan per plan_task instead of one per (impl, pool)
+        warm_set = {(inst.impl, inst.pool)
+                    for inst in self.cluster.instances}
 
         # Level 2 — hardware + device count per candidate implementation.
         def search(cands) -> TaskConfig | None:
@@ -172,12 +231,16 @@ class Scheduler:
                     hi = min(impl.max_devices.get(st["kind"], cap), cap)
                     if lo > hi:
                         continue
-                    warm = any(inst.impl == impl.name
-                               and inst.pool == pool_name
-                               for inst in self.cluster.instances)
+                    warm = (impl.name, pool_name) in warm_set
                     device = self.cluster.pools[pool_name].device
                     counts = [n for n in self.profiles.pinned_counts(
-                                  impl.name, device) if lo <= n <= cap]                         or _pow2_range(lo, hi)
+                                  impl.name, device) if lo <= n <= hi] \
+                        or _pow2_range(lo, hi)
+                    if best is not None and self.prune and self._dominated(
+                            node, impl, pool_name, counts, warm, best,
+                            order):
+                        self.pruned += len(counts)
+                        continue
                     for n in counts:
                         cfg = self.estimate(node, impl, pool_name, n,
                                             warm=warm)

@@ -135,11 +135,14 @@ class Simulator:
         impl = self.library.impls[cfg.impl]
         spec = CATALOG[self.cluster.pools[cfg.pool].device]
         work = impl.work_fn(node.tokens_in, node.tokens_out)
-        per_item = self.profiles.latency(impl, spec, cfg.n_devices, work)
         batch = 1 if spec.kind == "cpu" else cfg.batch
         items = math.ceil(node.work_items / max(n_inst, 1))
         steps = math.ceil(items / batch)
-        compute = steps * per_item * batch ** impl.batch_alpha
+        # the same batch-aware step model the scheduler estimates with
+        # (ProfileStore.step_latency): one source of truth for plan vs actual
+        compute = steps * self.profiles.step_latency(impl, spec,
+                                                     cfg.n_devices, work,
+                                                     batch)
         lat = compute
         if new_instances and not cfg.warm:
             # cfg.warm = provisioned capacity (PTU-style): always-on, no load
@@ -372,41 +375,53 @@ class Simulator:
 
         while events:
             t, _, kind, payload = heapq.heappop(events)
-            if kind == "arrive":
-                st = wfs[payload]
-                if st.plan is None:
-                    if st.plan_fn is None:
-                        raise ValueError(f"workflow {payload!r} submitted "
-                                         f"without a plan or plan_fn")
-                    # admission-time planning: the scheduler sees the live
-                    # cluster (warm instances, free devices)
-                    st.plan = st.plan_fn()
-            elif kind == "finish":
-                wid, tid, attempt = payload
-                st = wfs[wid]
-                if st.attempt.get(tid, 0) != attempt:
-                    continue        # stale: this execution was preempted
-                rec = running.pop((wid, tid))
-                st.done.add(tid)
-                st.finish = max(st.finish, t)
-                self.cluster.complete_task(wid, tid)
-                impl = self.library.impls[rec.cfg.impl]
-                for lease in rec.leases:
-                    # model instances keep their devices (stay warm); tools
-                    # release. Instance devices are reclaimed by rebalance.
-                    lease_owner.pop(lease.id, None)
-                    if not self._is_model(impl):
-                        self.cluster.release(lease, t)
-                for inst in rec.insts:
-                    if inst.lease is not None:
-                        lease_owner.pop(inst.lease.id, None)
-                trace.append(TraceEntry(wid, tid, rec.cfg.impl, rec.cfg.pool,
-                                        rec.ndev, rec.start, t,
-                                        note=rec.note))
-                # workflow-aware reclamation once demand disappears
-                for action in self.cluster.rebalance(self.library, t):
-                    if log is not None:
-                        log.append(f"[{t:8.1f}s] rebalance: {action}")
+            # drain every event sharing this timestamp before dispatching:
+            # simultaneous arrivals are all admitted (and planned) before
+            # any of them starts work, so admission-policy order holds for
+            # same-time tenants and identical tenants admitted into the
+            # same cluster state share one plan via the plan cache.
+            batch = [(kind, payload)]
+            while events and events[0][0] == t:
+                _, _, k, p = heapq.heappop(events)
+                batch.append((k, p))
+            for kind, payload in batch:
+                if kind == "arrive":
+                    st = wfs[payload]
+                    if st.plan is None:
+                        if st.plan_fn is None:
+                            raise ValueError(
+                                f"workflow {payload!r} submitted without a "
+                                f"plan or plan_fn")
+                        # admission-time planning: the scheduler sees the
+                        # live cluster (warm instances, free devices)
+                        st.plan = st.plan_fn()
+                elif kind == "finish":
+                    wid, tid, attempt = payload
+                    st = wfs[wid]
+                    if st.attempt.get(tid, 0) != attempt:
+                        continue    # stale: this execution was preempted
+                    rec = running.pop((wid, tid))
+                    st.done.add(tid)
+                    st.finish = max(st.finish, t)
+                    self.cluster.complete_task(wid, tid)
+                    impl = self.library.impls[rec.cfg.impl]
+                    for lease in rec.leases:
+                        # model instances keep their devices (stay warm);
+                        # tools release. Instance devices are reclaimed by
+                        # rebalance.
+                        lease_owner.pop(lease.id, None)
+                        if not self._is_model(impl):
+                            self.cluster.release(lease, t)
+                    for inst in rec.insts:
+                        if inst.lease is not None:
+                            lease_owner.pop(inst.lease.id, None)
+                    trace.append(TraceEntry(wid, tid, rec.cfg.impl,
+                                            rec.cfg.pool, rec.ndev,
+                                            rec.start, t, note=rec.note))
+                    # workflow-aware reclamation once demand disappears
+                    for action in self.cluster.rebalance(self.library, t):
+                        if log is not None:
+                            log.append(f"[{t:8.1f}s] rebalance: {action}")
             # start whatever is now ready and fits
             progress = True
             while progress:

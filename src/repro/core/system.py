@@ -11,6 +11,7 @@ must talk: the *workflow orchestrator* (planner + scheduler) and the
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 from .agents import AgentLibrary, default_library
@@ -41,6 +42,8 @@ class JobResult:
 
 
 class Murakkab:
+    PLAN_CACHE_MAX = 256
+
     def __init__(self, cluster: ClusterManager,
                  library: AgentLibrary | None = None,
                  planner=None):
@@ -49,6 +52,12 @@ class Murakkab:
         self.cluster = cluster
         self.planner = planner or RulePlanner(self.library)
         self.scheduler = Scheduler(self.library, self.profiles, self.cluster)
+        # admission-time plan reuse (DESIGN.md §7): identical tenants
+        # arriving into an unchanged cluster skip the greedy search
+        self._plan_cache: OrderedDict[tuple, ExecutionPlan] = OrderedDict()
+        self.plan_cache_enabled = True
+        self.plan_cache_hits = 0
+        self.plan_cache_misses = 0
 
     # -- cluster factories -------------------------------------------------------
     @classmethod
@@ -114,19 +123,49 @@ class Murakkab:
         planning every job upfront against an empty cluster. Each job's
         ``tenant_class`` decides its queue rank and whether its allocations
         are preemptible (harvest class).
+
+        Admission-time planning goes through a plan cache keyed by (DAG
+        structural signature, constraint spec, quality floor, cluster-state
+        digest): an identical tenant arriving into an unchanged cluster
+        reuses the prior plan instead of re-running the greedy search.
         """
         subs = {}
         for wid, (job, arrival) in jobs.items():
             dag = self.lower(job)
 
             def _plan(dag=dag, job=job):
-                return self.scheduler.plan(dag, job.constraint_spec,
-                                           job.quality_floor)
+                return self.plan_admitted(dag, job)
 
             subs[wid] = Submission(dag=dag, plan=None, arrival=arrival,
                                    tenant=job.tenant_class, plan_fn=_plan)
         sim = Simulator(self.cluster, self.library, self.profiles)
         return sim.run(subs, log=log, policy=policy)
+
+    def plan_admitted(self, dag: DAG, job: Job) -> ExecutionPlan:
+        """Plan one admitted workflow against live cluster state, reusing a
+        cached plan when an identical (workflow, constraints, cluster-state)
+        triple was already planned. Returns a private copy — the simulator
+        may degrade configs in place when capacity shrank since planning."""
+        if not self.plan_cache_enabled:
+            return self.scheduler.plan(dag, job.constraint_spec,
+                                       job.quality_floor)
+        floor = job.quality_floor
+        key = (dag.signature(), job.constraint_spec,
+               tuple(sorted(floor.items())) if isinstance(floor, dict)
+               else floor,
+               self.cluster.digest(), self.profiles.version)
+        cached = self._plan_cache.get(key)
+        if cached is not None:
+            self._plan_cache.move_to_end(key)
+            self.plan_cache_hits += 1
+            return ExecutionPlan(dict(cached.configs))
+        self.plan_cache_misses += 1
+        plan = self.scheduler.plan(dag, job.constraint_spec,
+                                   job.quality_floor)
+        self._plan_cache[key] = ExecutionPlan(dict(plan.configs))
+        if len(self._plan_cache) > self.PLAN_CACHE_MAX:
+            self._plan_cache.popitem(last=False)
+        return plan
 
     # -- imperative (baseline) path ----------------------------------------------------
     def execute_imperative(self, wf: ImperativeWorkflow,

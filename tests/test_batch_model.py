@@ -1,0 +1,196 @@
+"""Batch roofline model (DESIGN.md §7): hypothesis properties over the
+prefill/decode split, the golden knee, and the scheduler/simulator sharing
+one latency source of truth."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (CATALOG, Murakkab, Work, batch_knee,
+                        batch_roofline_latency, roofline_latency)
+from repro.core.dag import TaskNode
+from repro.core.simulator import Simulator
+
+V5E = CATALOG["tpu-v5e"]
+
+
+def _work(pf, df, pb, db, wb, steps):
+    return Work.two_phase(prefill_flops=pf, decode_flops=df,
+                          prefill_bytes=pb, decode_bytes=db,
+                          weight_bytes=wb, decode_steps=steps)
+
+
+WORK_STRATS = (st.floats(1e9, 1e15), st.floats(1e9, 1e15),
+               st.floats(0.0, 1e12), st.floats(0.0, 1e12),
+               st.floats(1e8, 2e11), st.integers(1, 512))
+
+
+@settings(max_examples=60)
+@given(*WORK_STRATS, st.integers(1, 7))
+def test_per_item_latency_non_increasing_in_batch(pf, df, pb, db, wb, steps,
+                                                  log_b):
+    """Co-scheduling more items can never raise per-item latency."""
+    w = _work(pf, df, pb, db, wb, steps)
+    b = 2 ** log_b
+    prev = batch_roofline_latency(w, V5E, 1, b // 2)
+    cur = batch_roofline_latency(w, V5E, 1, b)
+    assert cur <= prev * (1 + 1e-12)
+
+
+@settings(max_examples=60)
+@given(*WORK_STRATS, st.integers(1, 7))
+def test_step_latency_non_decreasing_in_batch(pf, df, pb, db, wb, steps,
+                                              log_b):
+    """A bigger batched step can never take less wall time."""
+    w = _work(pf, df, pb, db, wb, steps)
+    b = 2 ** log_b
+    prev = (b // 2) * batch_roofline_latency(w, V5E, 1, b // 2)
+    cur = b * batch_roofline_latency(w, V5E, 1, b)
+    assert cur >= prev * (1 - 1e-12)
+
+
+@settings(max_examples=60)
+@given(*WORK_STRATS, st.integers(1, 64))
+def test_batch_one_reduces_to_seed_roofline(pf, df, pb, db, wb, steps, n):
+    """At batch=1 the batch model is exactly the seed three-term roofline
+    over the single-item totals — unbatched estimates are unchanged."""
+    w = _work(pf, df, pb, db, wb, steps)
+    got = batch_roofline_latency(w, V5E, n_devices=n, batch=1)
+    seed = roofline_latency(w.flops, w.hbm_bytes, V5E, n_devices=n,
+                            collective_bytes=w.coll_bytes)
+    assert math.isclose(got, seed, rel_tol=1e-12)
+
+
+@settings(max_examples=40)
+@given(*WORK_STRATS)
+def test_two_phase_totals_consistent(pf, df, pb, db, wb, steps):
+    w = _work(pf, df, pb, db, wb, steps)
+    assert w.has_phases
+    assert math.isclose(w.flops, pf + df, rel_tol=1e-12)
+    assert math.isclose(w.hbm_bytes, w.shared_bytes + w.per_item_bytes,
+                        rel_tol=1e-12)
+    assert math.isclose(w.shared_bytes, wb * steps, rel_tol=1e-12)
+
+
+@settings(max_examples=40)
+@given(*WORK_STRATS, *WORK_STRATS)
+def test_work_addition_preserves_stream_split(pf, df, pb, db, wb, steps,
+                                              pf2, df2, pb2, db2, wb2,
+                                              steps2):
+    """Summing two phased works keeps shared + per_item == hbm (so the
+    b=1 == seed-roofline invariant survives composition)."""
+    w = _work(pf, df, pb, db, wb, steps) + _work(pf2, df2, pb2, db2, wb2,
+                                                 steps2)
+    assert math.isclose(w.shared_bytes,
+                        wb * steps + wb2 * steps2, rel_tol=1e-12)
+    assert math.isclose(w.hbm_bytes, w.shared_bytes + w.per_item_bytes,
+                        rel_tol=1e-12)
+    got = batch_roofline_latency(w, V5E, 1, 1)
+    seed = roofline_latency(w.flops, w.hbm_bytes, V5E)
+    assert math.isclose(got, seed, rel_tol=1e-12)
+
+
+@settings(max_examples=40)
+@given(*WORK_STRATS, st.integers(1, 7))
+def test_past_knee_is_compute_bound(pf, df, pb, db, wb, steps, log_b):
+    """Beyond the knee, per-item latency equals the pure compute time."""
+    w = _work(pf, df, pb, db, wb, steps)
+    knee = batch_knee(w, V5E, 1)
+    b = 2 ** log_b
+    if math.isfinite(knee) and b >= knee:
+        t_c = w.flops / (V5E.peak_flops * 0.6)
+        t_p = w.per_item_bytes / V5E.hbm_bw
+        expect = max(t_c, t_p, w.coll_bytes / V5E.link_bw)
+        got = batch_roofline_latency(w, V5E, 1, b)
+        # shared-stream share vanishes at large b but never below the floor
+        assert got >= expect * (1 - 1e-12)
+        assert got <= expect + w.shared_bytes / (b * V5E.hbm_bw) + 1e-15
+
+
+def test_golden_knee_gemma2_9b_summarize():
+    """The video scenario's reference decode stage (gemma2-9b, 900/120
+    tokens) knees at b* ~ 17 on tpu-v5e: weights-streaming-bound below,
+    compute-bound and flat above."""
+    lib = Murakkab.tpu_cluster().library
+    impl = lib.impls["gemma2-9b"]
+    work = impl.work_fn(900, 120)
+    knee = batch_knee(work, V5E, 1, impl.mxu_efficiency)
+    assert 15.0 < knee < 19.0
+    lat = {b: batch_roofline_latency(work, V5E, 1, b, impl.mxu_efficiency)
+           for b in (1, 2, 8, 32, 64, 128)}
+    # below the knee: the shared weights stream dominates, halving with b
+    assert lat[2] == pytest.approx(lat[1] / 2, rel=1e-9)
+    assert lat[8] == pytest.approx(lat[1] / 8, rel=1e-9)
+    # above the knee: flat at the compute roofline
+    assert lat[64] == pytest.approx(lat[32], rel=0.05)
+    assert lat[128] == pytest.approx(
+        work.flops / (V5E.peak_flops * impl.mxu_efficiency), rel=1e-6)
+
+
+def test_lm_work_declares_phases_and_tools_do_not():
+    lib = Murakkab.tpu_cluster().library
+    assert lib.impls["gemma2-9b"].work_fn(900, 120).has_phases
+    assert lib.impls["nvlm-72b"].work_fn(900, 120).has_phases
+    assert not lib.impls["opencv"].work_fn(0, 0).has_phases
+    assert not lib.impls["dense-retrieval"].work_fn(64, 0).has_phases
+
+
+def test_scheduler_estimate_uses_batch_roofline_for_phased_work():
+    """For impls with a work model, batch ** alpha is gone from estimates:
+    the batched step matches the batch roofline exactly."""
+    system = Murakkab.tpu_cluster()
+    node = TaskNode(id="t", description="", agent="digest", work_items=64,
+                    chunkable=True, tokens_in=700, tokens_out=90)
+    impl = system.library.impls["gemma2-9b-digest"]
+    b = 32
+    cfg = system.scheduler.estimate(node, impl, "v5e", 1, batch=b)
+    work = impl.work_fn(700, 90)
+    step = impl.overhead_s + b * batch_roofline_latency(
+        work, V5E, 1, b, impl.mxu_efficiency)
+    steps = math.ceil(64 / b)
+    assert cfg.est_latency_s == pytest.approx(
+        steps * step + impl.load_time_s, rel=1e-12)
+    # and it is NOT the deprecated alpha curve
+    lat1 = impl.overhead_s + batch_roofline_latency(work, V5E, 1, 1,
+                                                    impl.mxu_efficiency)
+    assert cfg.est_latency_s != pytest.approx(
+        steps * lat1 * b ** impl.batch_alpha + impl.load_time_s, rel=0.01)
+
+
+def test_alpha_fallback_for_unphased_and_pinned():
+    """Impls without a phase split — and measured (pinned) rows — keep the
+    deprecated batch ** alpha scalar."""
+    system = Murakkab.tpu_cluster()
+    node = TaskNode(id="t", description="", agent="retrieve", work_items=16,
+                    chunkable=True, tokens_in=64, tokens_out=0)
+    impl = system.library.impls["dense-retrieval"]     # fixed work, a=0.4
+    spec = V5E
+    work = impl.work_fn(64, 0)
+    lat1 = system.profiles.latency(impl, spec, 1, work)
+    b = 8
+    cfg = system.scheduler.estimate(node, impl, "v5e", 1, batch=b)
+    assert cfg.est_latency_s == pytest.approx(
+        math.ceil(16 / b) * lat1 * b ** impl.batch_alpha + impl.load_time_s,
+        rel=1e-12)
+    # pinned rows: calibration wins and alpha still scales the batch
+    system.profiles.pin("gemma2-9b-digest", "tpu-v5e", 1, 0.5)
+    dimpl = system.library.impls["gemma2-9b-digest"]
+    dwork = dimpl.work_fn(700, 90)
+    assert system.profiles.step_latency(dimpl, spec, 1, dwork, 4) == \
+        pytest.approx(0.5 * 4 ** dimpl.batch_alpha, rel=1e-12)
+
+
+def test_simulator_actuals_match_scheduler_estimates():
+    """One source of truth: the simulator's batched duration equals the
+    scheduler's estimate for the same config (cold start included)."""
+    system = Murakkab.tpu_cluster()
+    node = TaskNode(id="t", description="", agent="digest", work_items=64,
+                    chunkable=True, tokens_in=700, tokens_out=90)
+    impl = system.library.impls["gemma2-9b-digest"]
+    cfg = system.scheduler.estimate(node, impl, "v5e", 1, batch=32)
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    dur, compute = sim._duration(node, cfg, n_inst=1, new_instances=1)
+    assert dur == pytest.approx(cfg.est_latency_s, rel=1e-12)
+    assert compute == pytest.approx(cfg.est_latency_s - impl.load_time_s,
+                                    rel=1e-12)

@@ -1,0 +1,157 @@
+"""Planner fast path (DESIGN.md §7): dominated-config pruning never moves
+the chosen plan, the estimate memo is transparent, the admission plan cache
+reuses plans only for identical (workflow, constraints, cluster-state)
+triples, and the pinned-count device filter respects max_devices."""
+import pytest
+
+from repro.core import (MAX_QUALITY, MIN_COST, MIN_ENERGY, MIN_LATENCY,
+                        Murakkab)
+from repro.core.dag import TaskNode
+from repro.configs.workflow_docingest import make_docingest_job
+from repro.configs.workflow_rag import make_rag_job
+from repro.configs.workflow_video import make_declarative_job
+
+ALL_JOBS = (make_declarative_job, make_rag_job, make_docingest_job)
+
+
+def _system():
+    return Murakkab.tpu_cluster(v5e=64, v5p=16, v4_harvest=16,
+                                host_cores=128)
+
+
+@pytest.mark.parametrize("constraint",
+                         [MIN_COST, MIN_ENERGY, MIN_LATENCY, MAX_QUALITY])
+def test_pruning_never_changes_the_plan(constraint):
+    """Sound pruning: identical configs with strictly fewer estimate()
+    evaluations, across every scenario and objective."""
+    for make_job in ALL_JOBS:
+        job = make_job(constraint)
+        ref, fast = _system(), _system()
+        ref.scheduler.prune = False
+        _, p_ref = ref.plan(job)
+        _, p_fast = fast.plan(job)
+        assert p_ref.configs == p_fast.configs, make_job.__name__
+        assert fast.scheduler.evals < ref.scheduler.evals
+        assert fast.scheduler.pruned > 0
+
+
+def test_estimate_cache_transparent_and_counted():
+    system = _system()
+    job = make_rag_job(MIN_LATENCY)
+    _, p1 = system.plan(job)
+    assert system.profiles.cache_info()["misses"] > 0
+    hits_before = system.profiles.cache_info()["hits"]
+    _, p2 = system.plan(job)
+    assert p1.configs == p2.configs
+    assert system.profiles.cache_info()["hits"] > hits_before
+    # disabling the cache still yields the same plan
+    system.profiles.cache_reset(enabled=False)
+    _, p3 = system.plan(job)
+    assert p3.configs == p1.configs
+    assert system.profiles.cache_info()["hits"] == 0
+
+
+def test_pin_invalidates_estimate_cache():
+    system = _system()
+    impl = system.library.impls["gemma2-9b"]
+    work = impl.work_fn(900, 120)
+    from repro.core import CATALOG
+    spec = CATALOG["tpu-v5e"]
+    before = system.profiles.step_latency(impl, spec, 1, work)
+    system.profiles.pin("gemma2-9b", "tpu-v5e", 1, before * 10)
+    assert system.profiles.step_latency(impl, spec, 1, work) == \
+        pytest.approx(before * 10)
+
+
+def test_plan_cache_hits_on_identical_admission():
+    """Same DAG shape + constraints + pristine cluster => cached plan, as
+    a private copy the simulator may mutate."""
+    system = _system()
+    job = make_docingest_job(MIN_COST)
+    dag = system.lower(job)
+    p1 = system.plan_admitted(dag, job)
+    assert (system.plan_cache_hits, system.plan_cache_misses) == (0, 1)
+    p2 = system.plan_admitted(dag, job)
+    assert (system.plan_cache_hits, system.plan_cache_misses) == (1, 1)
+    assert p2.configs == p1.configs
+    assert p2 is not p1 and p2.configs is not p1.configs
+
+
+def test_plan_cache_misses_on_changed_key():
+    system = _system()
+    job = make_docingest_job(MIN_COST)
+    dag = system.lower(job)
+    system.plan_admitted(dag, job)
+    # different constraints -> miss
+    system.plan_admitted(dag, make_docingest_job(MIN_LATENCY))
+    assert system.plan_cache_misses == 2
+    # changed cluster state (devices held) -> miss
+    system.cluster.alloc("v5e", 8, t=0.0)
+    system.plan_admitted(dag, job)
+    assert system.plan_cache_misses == 3
+
+
+def test_execute_many_reuses_plans_for_simultaneous_tenants():
+    """Identical tenants admitted at the same instant see the same cluster
+    digest (same-time events drain before dispatch), so every tenant after
+    the first reuses the cached plan instead of re-searching."""
+    system = Murakkab.tpu_cluster(v5e=16, v5p=0, v4_harvest=0,
+                                  host_cores=32)
+    report = system.execute_many({
+        f"t{i}": (make_docingest_job(MIN_LATENCY), 0.0) for i in range(4)
+    })
+    assert len(report.per_workflow) == 4
+    assert system.plan_cache_misses == 1
+    assert system.plan_cache_hits == 3
+    assert all(v["finish"] > 0 for v in report.per_workflow.values())
+
+
+def test_pin_invalidates_plan_cache():
+    """Calibration after planning must not resurrect a stale cached plan:
+    pin() bumps ProfileStore.version, which is part of the plan-cache key."""
+    system = _system()
+    job = make_docingest_job(MIN_COST)
+    dag = system.lower(job)
+    p1 = system.plan_admitted(dag, job)
+    digest = next(tid for tid in dag.topo_order
+                  if dag.nodes[tid].agent == "digest")
+    # make the previously-chosen digest config measurably terrible
+    cfg = p1.configs[digest]
+    device = system.cluster.pools[cfg.pool].device
+    system.profiles.pin(cfg.impl, device, cfg.n_devices, 500.0)
+    p2 = system.plan_admitted(dag, job)
+    assert system.plan_cache_hits == 0      # key changed: no stale hit
+    assert p2.configs != p1.configs
+
+
+def test_dag_signature_identity():
+    system = _system()
+    job = make_rag_job()
+    d1, d2 = system.lower(job), system.lower(job)
+    assert d1.signature() == d2.signature()
+    other = system.lower(make_docingest_job())
+    assert other.signature() != d1.signature()
+
+
+def test_cluster_digest_tracks_planner_visible_state():
+    system = _system()
+    d0 = system.cluster.digest()
+    lease = system.cluster.alloc("v5e", 4, t=0.0)
+    assert system.cluster.digest() != d0
+    system.cluster.release(lease, t=1.0)
+    assert system.cluster.digest() == d0
+
+
+def test_pinned_counts_respect_max_devices():
+    """Satellite fix: a calibration point above impl.max_devices must not
+    become selectable — the filter caps at hi = min(max_devices, cap)."""
+    system = Murakkab.paper_cluster()
+    # whisper-large caps at 64 CPU cores; pin an (absurdly fast) 128-core
+    # row — the old `lo <= n <= cap` filter would have selected it.
+    system.profiles.pin("whisper-large", "epyc-7v12-core", 128, 0.001)
+    node = TaskNode(id="t", description="", agent="speech_to_text",
+                    work_items=8, chunkable=True)
+    cfg = system.scheduler.plan_task(node, (MIN_COST,),
+                                     {"speech_to_text": 0.97})
+    max_cpu = system.library.impls["whisper-large"].max_devices["cpu"]
+    assert cfg.n_devices <= max_cpu
