@@ -1,0 +1,139 @@
+"""Capture per-batch latency curves for pinned (measured) profile rows.
+
+Single-point pins batch via the deprecated ``batch ** alpha`` scalar
+(DESIGN.md §7.1); this helper captures the *batch curve* — per-item latency
+at a grid of batch sizes — so a calibration can be pinned with real batch
+behaviour and the fallback retires (§7.2)::
+
+    PYTHONPATH=src python -m benchmarks.calibrate_batch_curves \
+        --impl gemma2-9b-digest --device tpu-v5e --counts 1 4 \
+        --json curves.json
+
+    # later, in a session:
+    from benchmarks.calibrate_batch_curves import pin_curves
+    pin_curves(system.profiles, json.load(open("curves.json")))
+
+The probe here evaluates the analytic batch roofline at each grid point —
+the offline stand-in this repo uses for wall-clock profiling runs (the
+same substitution as DESIGN.md §5.4: measured timings would be recorded by
+the serving harness on real hardware; the capture/pin plumbing is
+identical either way). The batch grid is pow2 up to ``max_batch`` plus the
+compute knee's floor/ceil, so the pinned curve brackets the
+memory→compute transition and the store's log-log interpolation stays
+faithful between points.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.core import CATALOG, Murakkab
+from repro.core.energy import batch_knee
+from repro.core.profiles import ProfileStore
+
+
+def batch_grid(impl, spec, tokens_in: int = 1024, tokens_out: int = 256,
+               efficiency: float | None = None) -> list[int]:
+    """Measurement grid: pow2 through max_batch + the knee's floor/ceil.
+
+    The knee is evaluated at the same token footprint the capture probes,
+    so the grid brackets the memory→compute transition of the curve being
+    measured.
+    """
+    eff = impl.mxu_efficiency if efficiency is None else efficiency
+    grid = {1}
+    b = 2
+    while b <= impl.max_batch:
+        grid.add(b)
+        b *= 2
+    grid.add(impl.max_batch)
+    work = impl.work_fn(tokens_in, tokens_out)
+    if work.has_phases:
+        knee = batch_knee(work, spec, 1, eff)
+        if math.isfinite(knee):
+            for k in (math.floor(knee), math.ceil(knee)):
+                if 1 <= k <= impl.max_batch:
+                    grid.add(int(k))
+    return sorted(grid)
+
+
+def capture_curve(library, impl_name: str, device: str, n_devices: int,
+                  tokens_in: int = 1024, tokens_out: int = 256,
+                  batches: list[int] | None = None) -> dict[int, float]:
+    """Per-item latency at each grid batch size for (impl, device, count).
+
+    Probes a *pristine* ProfileStore (no pins), so the curve reflects the
+    analytic roofline — swap the probe for wall-clock timings on real
+    hardware; the returned mapping pins identically either way.
+    """
+    impl = library.impls[impl_name]
+    spec = CATALOG[device]
+    store = ProfileStore(library)
+    work = impl.work_fn(tokens_in, tokens_out)
+    bs = batches or batch_grid(impl, spec, tokens_in, tokens_out)
+    return {b: store.latency(impl, spec, n_devices, work, b) for b in bs}
+
+
+def pin_curves(store: ProfileStore, curves: dict) -> int:
+    """Pin a captured-curves JSON structure; returns rows pinned.
+
+    Structure: ``{impl: {device: {str(n_devices): {str(batch):
+    per_item_s}}}}`` — what ``main`` emits.
+    """
+    rows = 0
+    for impl_name, devices in curves.items():
+        for device, counts in devices.items():
+            for n, curve in counts.items():
+                store.pin(impl_name, device, int(n),
+                          {int(b): float(v) for b, v in curve.items()})
+                rows += 1
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--impl", action="append", required=True,
+                    help="implementation name (repeatable)")
+    ap.add_argument("--device", default="tpu-v5e")
+    ap.add_argument("--counts", type=int, nargs="+", default=[1])
+    ap.add_argument("--tokens-in", type=int, default=1024)
+    ap.add_argument("--tokens-out", type=int, default=256)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the curves (pin with pin_curves)")
+    args = ap.parse_args()
+
+    library = Murakkab.tpu_cluster().library
+    out: dict = {}
+    for impl_name in args.impl:
+        impl = library.impls[impl_name]
+        spec = CATALOG[args.device]
+        if spec.kind not in impl.hw_kinds:
+            print(f"skip {impl_name}: no {spec.kind} support")
+            continue
+        for n in args.counts:
+            curve = capture_curve(library, impl_name, args.device, n,
+                                  args.tokens_in, args.tokens_out)
+            out.setdefault(impl_name, {}).setdefault(args.device, {})[
+                str(n)] = {str(b): v for b, v in curve.items()}
+            pts = ", ".join(f"b={b}: {v * 1e3:.2f}ms" for b, v in
+                            curve.items())
+            print(f"{impl_name} on {n}x {args.device}: {pts}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,8 +4,9 @@
     workflow; we measure sweep size/time and per-job reuse.
 (b) DAG creation — <1% of workflow execution time (short LLM queries).
 (c) Configuration search — greedy hierarchical pruning visits a small
-    fraction of the full lever cross-product; dominated-config pruning
-    (DESIGN.md §7) cuts the visited count further. Per-plan wall time and
+    fraction of the full lever cross-product, even with the joint
+    (count x batch) level-2 grid of DESIGN.md §7.2; dominated-config
+    pruning (§7.3) cuts the visited count further. Per-plan wall time and
     ``Scheduler.evals`` are reported so planner overhead is tracked next
     to the paper-repro numbers (``--json``; see also planner_bench.py).
 

@@ -22,6 +22,14 @@ representative decode-bound stage (``BATCH_KNEE_REFERENCE``): per-item
 latency vs batch size shows the weights-streaming regime, the
 memory→compute knee, and the flat compute-bound tail.
 
+The joint-vs-sequential comparison (DESIGN.md §7.2) plans every scenario
+under both lever orders — the joint (count x batch) level-2 search vs the
+legacy sequential hierarchy (count at batch=1, then one batch candidate) —
+and simulates both plans: the joint search must produce workflow spans <=
+the sequential ones on every scenario, strictly better on the
+remainder-heavy case (70 chunks against a 64-item max batch leave a
+below-knee remainder step the joint divisor grid avoids).
+
 CLI::
 
     PYTHONPATH=src python benchmarks/planner_bench.py                # full
@@ -92,6 +100,61 @@ def run_mode(fast: bool, n_tenants: int, repeats: int):
         / max(system.plan_cache_hits + system.plan_cache_misses, 1),
     }
     return plans, stats
+
+
+def joint_vs_sequential(verbose: bool = True) \
+        -> tuple[dict[str, float], list[str]]:
+    """Workflow spans under the joint vs sequential lever search.
+
+    Each case plans + simulates one workflow on a pristine contended-size
+    cluster under ``MIN_LATENCY`` (tail latency is where the remainder
+    step shows). Returns deterministic span metrics and a list of
+    violations (joint span worse than sequential, or no strict win on the
+    remainder-heavy case).
+    """
+    from repro.core import MIN_LATENCY
+    from repro.core.workflow import DocumentInput
+    from repro.configs.workflow_docingest import make_docingest_job
+    from repro.configs.workflow_rag import make_rag_job
+    from repro.configs.workflow_video import make_declarative_job
+
+    cases = {
+        "video": (make_declarative_job, {}),
+        "rag": (make_rag_job, {}),
+        "docingest": (make_docingest_job, {}),
+        # 70 chunks vs the digest tier's 64-item max batch: the sequential
+        # order charges a 6-item below-knee remainder step that the joint
+        # grid's zero-remainder divisor schedule (b=35) avoids
+        "docingest_remainder": (make_docingest_job, {
+            "documents": (DocumentInput("remainder.pdf", pages=14,
+                                        chunks_per_page=5),)}),
+    }
+    metrics: dict[str, float] = {}
+    failures: list[str] = []
+    if verbose:
+        print("\njoint vs sequential lever search (MIN_LATENCY spans):")
+    for name, (make_job, kw) in cases.items():
+        spans = {}
+        for mode, joint in (("joint", True), ("seq", False)):
+            system = _cluster()
+            system.scheduler.joint_batch = joint
+            spans[mode] = make_job(MIN_LATENCY, **kw).execute(system) \
+                .makespan_s
+        metrics[f"joint/{name}_span_s"] = round(spans["joint"], 3)
+        metrics[f"joint/{name}_seq_span_s"] = round(spans["seq"], 3)
+        if spans["joint"] > spans["seq"] * (1 + 1e-9):
+            failures.append(
+                f"{name}: joint span {spans['joint']:.3f}s exceeds "
+                f"sequential {spans['seq']:.3f}s")
+        if verbose:
+            print(f"  {name:<20s} joint {spans['joint']:8.3f}s   "
+                  f"seq {spans['seq']:8.3f}s   "
+                  f"shaved {spans['seq'] - spans['joint']:+7.3f}s")
+    strict = metrics["joint/docingest_remainder_seq_span_s"] \
+        - metrics["joint/docingest_remainder_span_s"]
+    if strict <= 0:
+        failures.append("no strict win on the remainder-heavy case")
+    return metrics, failures
 
 
 def knee_sweep(verbose: bool = True) -> dict[str, float]:
@@ -181,6 +244,12 @@ def main() -> int:
         "plan_quality_unchanged": 0.0 if mismatched else 1.0,
     }
     metrics.update(knee_sweep())
+    joint_metrics, joint_failures = joint_vs_sequential()
+    metrics.update(joint_metrics)
+    metrics["joint_dominates_sequential"] = \
+        0.0 if joint_failures else 1.0
+    for f in joint_failures:
+        print(f"JOINT-SEARCH FAIL: {f}")
     info = {
         "plans_per_sec_baseline": round(base["plans_per_sec"], 1),
         "plans_per_sec_fast": round(fast["plans_per_sec"], 1),
@@ -198,6 +267,8 @@ def main() -> int:
         print(f"wrote {args.json}")
 
     if mismatched:
+        return 1
+    if joint_failures:
         return 1
     if args.min_speedup is not None and speedup < args.min_speedup:
         print(f"FAIL: speedup {speedup:.1f}x < required "

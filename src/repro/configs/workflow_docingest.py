@@ -22,7 +22,11 @@ PAPER_DOCS = (
 
 # representative decode-bound stage for the batch-roofline knee sweep
 # (benchmarks/planner_bench.py): the digest interface's token footprint —
-# the batchable bulk stage this scenario exists to exercise.
+# the batchable bulk stage this scenario exists to exercise. The same knee
+# seeds the joint (count x batch) search's candidate grid
+# (energy.knee_batch_grid, DESIGN.md §7.2): 72 chunks don't divide the
+# 64-item max batch, so the remainder-aware grid is what finds the
+# zero-remainder divisor schedules here.
 BATCH_KNEE_REFERENCE = ("gemma2-9b-digest", 700, 90)
 
 

@@ -30,6 +30,8 @@ RAG_QUERIES = (
 
 # representative decode-bound stage for the batch-roofline knee sweep
 # (benchmarks/planner_bench.py): the synthesize interface's token footprint.
+# The same knee seeds the joint (count x batch) search's candidate grid
+# (energy.knee_batch_grid, DESIGN.md §7.2).
 BATCH_KNEE_REFERENCE = ("gemma2-9b-synth", 1200, 200)
 
 

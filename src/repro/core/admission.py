@@ -46,6 +46,7 @@ class AdmissionPolicy:
     name = "base"
 
     def key(self, adm: Admission, served: dict[str, float]) -> tuple:
+        """Sort key for one admission; lower dispatches first."""
         raise NotImplementedError
 
     def __repr__(self) -> str:
@@ -58,6 +59,7 @@ class FCFS(AdmissionPolicy):
     name = "fcfs"
 
     def key(self, adm: Admission, served: dict[str, float]) -> tuple:
+        """Arrival time, workflow id as the deterministic tie-break."""
         return (adm.arrival, adm.workflow)
 
 
@@ -67,6 +69,7 @@ class StrictPriority(AdmissionPolicy):
     name = "strict-priority"
 
     def key(self, adm: Admission, served: dict[str, float]) -> tuple:
+        """Tenant-class rank, then arrival order."""
         return (_RANK[adm.tenant], adm.arrival, adm.workflow)
 
 
@@ -82,6 +85,7 @@ class WeightedFair(AdmissionPolicy):
                              "harvest": 1.0})
 
     def key(self, adm: Admission, served: dict[str, float]) -> tuple:
+        """Virtual time (served / weight), rank + arrival tie-breaks."""
         w = self.weights.get(adm.tenant, 1.0)
         vtime = served.get(adm.tenant, 0.0) / max(w, 1e-9)
         return (vtime, _RANK[adm.tenant], adm.arrival, adm.workflow)
@@ -108,6 +112,7 @@ def get_policy(policy: "str | AdmissionPolicy | None") -> AdmissionPolicy:
 
 
 def validate_tenant(tenant: str) -> str:
+    """Reject unknown tenant classes; returns the class unchanged."""
     if tenant not in TENANT_CLASSES:
         raise ValueError(f"unknown tenant class {tenant!r}; "
                          f"one of {TENANT_CLASSES}")
@@ -121,4 +126,5 @@ class ServedLedger:
     served: dict[str, float] = field(default_factory=dict)
 
     def charge(self, tenant: str, device_seconds: float):
+        """Accrue served device-seconds (negative on preemption refunds)."""
         self.served[tenant] = self.served.get(tenant, 0.0) + device_seconds

@@ -150,8 +150,9 @@ class AgentImpl:
     # step regardless of batch, so per-item latency falls until the compute
     # knee. ``batch_alpha`` is the DEPRECATED scalar fallback — time(batch
     # of b) = per_item * b**alpha — kept only for impls without a phase
-    # split and for pinned (measured) profile rows, which carry no
-    # FLOP/byte decomposition to feed the roofline.
+    # split and for *single-point* pinned (measured) profile rows; pinned
+    # rows with a per-batch latency curve (ProfileStore.pin, DESIGN.md
+    # §7.2) batch over their calibration instead.
     max_batch: int = 1
     batch_alpha: float = 1.0
 
@@ -179,6 +180,7 @@ def _lm_work(arch: str) -> tuple[Callable[[int, int], Work], float]:
     pbytes = model.param_count() * 2.0  # bf16
 
     def work(tokens_in: int, tokens_out: int) -> Work:
+        """Two-phase LLM workload for one (tokens_in, tokens_out) item."""
         return Work.two_phase(
             prefill_flops=2.0 * n_active * tokens_in,
             decode_flops=2.0 * n_active * tokens_out,
@@ -200,22 +202,27 @@ def _fixed_work(flops: float, bytes_: float) -> Callable[[int, int], Work]:
 
 
 class AgentLibrary:
+    """Registry of agent interfaces and their implementations."""
+
     def __init__(self):
         self.interfaces: dict[str, AgentInterface] = {}
         self.impls: dict[str, AgentImpl] = {}
 
     def register_interface(self, iface: AgentInterface):
+        """Add a capability; its artifact types must be registered."""
         ARTIFACTS[iface.produces]             # typo -> registration error
         for c in iface.consumes:
             ARTIFACTS[c]
         self.interfaces[iface.name] = iface
 
     def register_impl(self, impl: AgentImpl):
+        """Add a model/tool implementing a registered interface."""
         if impl.interface not in self.interfaces:
             raise KeyError(f"unknown interface {impl.interface!r}")
         self.impls[impl.name] = impl
 
     def impls_for(self, interface: str) -> list[AgentImpl]:
+        """All registered implementations of one interface."""
         return [i for i in self.impls.values() if i.interface == interface]
 
     def match_interface(self, text: str) -> str | None:
@@ -252,6 +259,7 @@ def _camel(s: str) -> str:
 
 
 def default_library() -> AgentLibrary:
+    """The built-in library: video/RAG/doc-ingest interfaces + zoo tiers."""
     lib = AgentLibrary()
 
     lib.register_interface(AgentInterface(

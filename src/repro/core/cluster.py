@@ -22,6 +22,8 @@ from .energy import CATALOG, DeviceSpec
 
 @dataclass
 class Pool:
+    """One homogeneous capacity pool of a single device SKU."""
+
     name: str
     device: str                # DeviceSpec name
     capacity: int
@@ -30,11 +32,14 @@ class Pool:
 
     @property
     def spec(self) -> DeviceSpec:
+        """The pool's hardware SKU record."""
         return CATALOG[self.device]
 
 
 @dataclass(frozen=True)
 class Lease:
+    """A granted device allocation (preemptible when ``harvest``)."""
+
     id: int
     pool: str
     n_devices: int
@@ -55,6 +60,8 @@ class Instance:
 
 
 class ClusterManager:
+    """Pools + leases + warm instances + workflow-aware reclamation."""
+
     def __init__(self, pools: list[Pool]):
         self.pools: dict[str, Pool] = {p.name: p for p in pools}
         self._used: dict[str, int] = {p.name: 0 for p in pools}
@@ -67,11 +74,13 @@ class ClusterManager:
 
     # -- allocation ------------------------------------------------------------
     def free(self, pool: str) -> int:
+        """Unallocated devices in ``pool`` right now."""
         p = self.pools[pool]
         return p.capacity - self._used[pool]
 
     def alloc(self, pool: str, n: int, t: float,
               harvest: bool = False) -> Lease | None:
+        """Grant ``n`` devices, or None when they don't fit."""
         if n <= 0 or self.free(pool) < n:
             return None
         self._used[pool] += n
@@ -80,6 +89,7 @@ class ClusterManager:
         return lease
 
     def release(self, lease: Lease, t: float):
+        """Return a lease's devices; double release is an error."""
         if lease.id not in self._leases:
             raise KeyError(f"double release of lease {lease.id}")
         del self._leases[lease.id]
@@ -109,6 +119,7 @@ class ClusterManager:
 
     # -- stats for the orchestrator (paper: "continuously receives stats") -----
     def stats(self) -> dict[str, dict]:
+        """Per-pool scheduling facts: device/kind/capacity/free/harvestable."""
         out = {}
         for name, p in self.pools.items():
             free = self.free(name)
@@ -121,6 +132,7 @@ class ClusterManager:
         return out
 
     def pools_of_kind(self, kind: str) -> list[Pool]:
+        """Pools whose device kind matches (gpu | cpu | tpu)."""
         return [p for p in self.pools.values() if p.spec.kind == kind]
 
     def digest(self) -> tuple:
@@ -138,10 +150,12 @@ class ClusterManager:
 
     # -- workflow awareness ------------------------------------------------------
     def register_workflow(self, wf_id: str, dag: DAG):
+        """Announce an admitted workflow's DAG (feeds upcoming_demand)."""
         self._dags[wf_id] = dag
         self._done[wf_id] = set()
 
     def complete_task(self, wf_id: str, task_id: str):
+        """Mark a task done; fully-done workflows stop counting as demand."""
         if wf_id in self._done:
             self._done[wf_id].add(task_id)
             if self._done[wf_id] >= set(self._dags[wf_id].nodes):
@@ -164,6 +178,7 @@ class ClusterManager:
         return min(cands, key=lambda i: i.busy_until) if cands else None
 
     def add_instance(self, inst: Instance):
+        """Track a newly-provisioned warm model instance."""
         self.instances.append(inst)
 
     def rebalance(self, library, t: float) -> list[str]:
@@ -188,5 +203,6 @@ class ClusterManager:
             self.release(inst.lease, t)
 
     def utilization(self) -> dict[str, float]:
+        """Allocated fraction per pool (0..1)."""
         return {name: self._used[name] / p.capacity
                 for name, p in self.pools.items() if p.capacity}

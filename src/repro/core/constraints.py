@@ -48,6 +48,7 @@ class Objective:
     """One scalar scheduling objective; lower ``value`` is better."""
 
     def value(self, cfg) -> float:
+        """Objective value of a candidate ``TaskConfig`` (lower = better)."""
         raise NotImplementedError
 
     def per_task(self, n_tasks: int) -> "Objective":
@@ -68,25 +69,37 @@ class Objective:
 
 @dataclass(frozen=True)
 class MinCost(Objective):
+    """Minimize estimated dollar spend."""
+
     def value(self, cfg) -> float:
+        """The config's estimated $ cost."""
         return cfg.est_usd
 
 
 @dataclass(frozen=True)
 class MinEnergy(Objective):
+    """Minimize estimated above-idle energy."""
+
     def value(self, cfg) -> float:
+        """The config's estimated energy in joules."""
         return cfg.est_energy_j
 
 
 @dataclass(frozen=True)
 class MinLatency(Objective):
+    """Minimize estimated task latency."""
+
     def value(self, cfg) -> float:
+        """The config's estimated latency in seconds."""
         return cfg.est_latency_s
 
 
 @dataclass(frozen=True)
 class MaxQuality(Objective):
+    """Maximize result quality (negated: lower value = better)."""
+
     def value(self, cfg) -> float:
+        """Negated quality, so minimization maximizes quality."""
         return -cfg.quality
 
 
@@ -101,16 +114,20 @@ class Deadline(Objective):
             raise ValueError(f"Deadline needs a positive target, got {self.s}")
 
     def value(self, cfg) -> float:
+        """Seconds of overrun beyond the target (0 when met)."""
         return max(0.0, cfg.est_latency_s - self.s)
 
     def per_task(self, n_tasks: int) -> "Deadline":
+        """Legacy even split of the deadline across tasks."""
         return Deadline(s=self.s / max(n_tasks, 1))
 
     def scaled(self, lat_frac: float, cost_frac: float) -> "Deadline":
+        """One task's critical-path-weighted share of the deadline."""
         return Deadline(s=self.s * lat_frac)
 
     @property
     def is_workflow_term(self) -> bool:
+        """Deadlines are stated at workflow scope."""
         return True
 
 
@@ -130,6 +147,7 @@ class Budget(Objective):
                     f"Budget needs a positive {name} cap, got {cap}")
 
     def value(self, cfg) -> float:
+        """Summed normalized overrun fraction across the caps (0 if met)."""
         over = 0.0
         if self.usd is not None:
             over += max(0.0, cfg.est_usd - self.usd) / self.usd
@@ -139,16 +157,19 @@ class Budget(Objective):
         return over
 
     def per_task(self, n_tasks: int) -> "Budget":
+        """Legacy even split of the caps across tasks."""
         n = max(n_tasks, 1)
         return Budget(usd=None if self.usd is None else self.usd / n,
                       wh=None if self.wh is None else self.wh / n)
 
     def scaled(self, lat_frac: float, cost_frac: float) -> "Budget":
+        """One task's cost-weighted share of the caps."""
         return Budget(usd=None if self.usd is None else self.usd * cost_frac,
                       wh=None if self.wh is None else self.wh * cost_frac)
 
     @property
     def is_workflow_term(self) -> bool:
+        """Budgets are stated at workflow scope."""
         return True
 
 
@@ -159,23 +180,28 @@ class Weighted(Objective):
     terms: tuple[tuple[Objective, float], ...]
 
     def value(self, cfg) -> float:
+        """The weighted sum over the blended objectives."""
         return sum(w * o.value(cfg) for o, w in self.terms)
 
     def per_task(self, n_tasks: int) -> "Weighted":
+        """Split any workflow-scoped terms evenly across tasks."""
         return Weighted(tuple((o.per_task(n_tasks), w)
                               for o, w in self.terms))
 
     def scaled(self, lat_frac: float, cost_frac: float) -> "Weighted":
+        """Scale any workflow-scoped terms by their per-task shares."""
         return Weighted(tuple((o.scaled(lat_frac, cost_frac), w)
                               for o, w in self.terms))
 
     @property
     def is_workflow_term(self) -> bool:
+        """True when any blended term is workflow-scoped."""
         return any(o.is_workflow_term for o, _ in self.terms)
 
     @classmethod
     def of(cls, cost: float = 0.0, energy: float = 0.0, latency: float = 0.0,
            quality: float = 0.0) -> "Weighted":
+        """Shorthand: blend the four atomic objectives by weight."""
         terms = [(MinCost(), cost), (MinEnergy(), energy),
                  (MinLatency(), latency), (MaxQuality(), quality)]
         return cls(tuple((o, w) for o, w in terms if w))
@@ -267,6 +293,7 @@ class ConstraintSpec:
 
 
 def Lexicographic(*objectives) -> ConstraintSpec:
+    """Explicit ordering of objectives; earlier terms dominate."""
     return ConstraintSpec(tuple(_as_objective(o) for o in objectives))
 
 

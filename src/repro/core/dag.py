@@ -26,6 +26,7 @@ class TaskNode:
     tokens_out: int = 0              # LLM-agent output size
 
     def with_(self, **kw) -> "TaskNode":
+        """Functional update (the dataclass is frozen)."""
         return replace(self, **kw)
 
 
@@ -68,6 +69,7 @@ class DAG:
 
     @property
     def topo_order(self) -> tuple[str, ...]:
+        """Deterministic topological order of task ids."""
         return self._topo
 
     def signature(self) -> tuple:
@@ -87,12 +89,15 @@ class DAG:
         return self._sig
 
     def successors(self, node_id: str) -> list[str]:
+        """Tasks that directly depend on ``node_id``."""
         return [n.id for n in self.nodes.values() if node_id in n.deps]
 
     def roots(self) -> list[str]:
+        """Tasks with no dependencies (ready at arrival)."""
         return [i for i, n in self.nodes.items() if not n.deps]
 
     def leaves(self) -> list[str]:
+        """Tasks nothing depends on (the deliverable stages)."""
         succ_of = {d for n in self.nodes.values() for d in n.deps}
         return [i for i in self.nodes if i not in succ_of]
 
@@ -135,6 +140,7 @@ class DAG:
         return iter(self._topo)
 
     def to_json(self) -> list[dict[str, Any]]:
+        """Serializable node rows in topological order."""
         return [{"id": n.id, "agent": n.agent, "deps": list(n.deps),
                  "description": n.description, "work_items": n.work_items}
                 for n in (self.nodes[i] for i in self._topo)]

@@ -95,6 +95,7 @@ class EnergyLedger:
 
     def charge_active(self, spec: DeviceSpec, device_seconds: float,
                       utilization: float = 1.0, pool: str = ""):
+        """Accrue the above-idle energy (and $) for real device-seconds."""
         if spec.metered:
             j = device_seconds * utilization * (spec.active_w - spec.idle_w)
             self.active_joules += j
@@ -104,15 +105,18 @@ class EnergyLedger:
         self.usd += device_seconds / 3600.0 * spec.usd_per_hour
 
     def charge_idle(self, spec: DeviceSpec, n_devices: int, seconds: float):
+        """Integrate the idle-power floor for ``n_devices`` over a period."""
         if spec.metered:
             self.idle_joules += n_devices * seconds * spec.idle_w
 
     @property
     def joules(self) -> float:
+        """Total energy: active increments plus the idle floor."""
         return self.active_joules + self.idle_joules
 
     @property
     def wh(self) -> float:
+        """Total energy in watt-hours (the paper's Table-2 unit)."""
         return self.joules / 3600.0
 
 
@@ -180,3 +184,59 @@ def batch_knee(work, spec: DeviceSpec, n_devices: int = 1,
     if c <= p:
         return math.inf
     return max(s / (c - p), 1.0)
+
+
+def _largest_divisor_in(items: int, lo: int, hi: int) -> int | None:
+    """Largest divisor of ``items`` inside ``[lo, hi]``, or None."""
+    best = None
+    i = 1
+    while i * i <= items:
+        if items % i == 0:
+            for d in (i, items // i):
+                if lo <= d <= hi and (best is None or d > best):
+                    best = d
+        i += 1
+    return best
+
+
+def knee_batch_grid(work, spec: DeviceSpec, items: int, max_batch: int,
+                    efficiency: float = 0.6) -> list[int]:
+    """Candidate batch sizes for the joint (count x batch) lever search.
+
+    The full batch range is too wide to scan per (impl, pool, count), but
+    the roofline's shape pins where the optimum can sit (DESIGN.md §7.2):
+
+    - ``1`` — the unbatched baseline;
+    - ``min(max_batch, items)`` — the largest feasible batch, optimal
+      whenever per-item latency keeps falling (below the knee) or the
+      remainder lands at/past the knee;
+    - ``floor/ceil`` of :func:`batch_knee` — the smallest batches that
+      already run compute-bound (same per-item latency as larger ones,
+      smaller co-residency);
+    - the largest divisor of ``items`` in ``[knee, max]`` — a zero-remainder
+      schedule whose every step is past the knee. When ``max_batch`` does
+      not divide ``items`` and the remainder ``items % max_batch`` falls
+      below the knee, that remainder step runs weights-streaming-bound and
+      this divisor strictly beats the max batch.
+
+    The knee is independent of the device count (compute, per-item and
+    shared-stream terms all scale 1/n), so one grid serves every count in
+    the joint search. Works without a phase split have no knee — the
+    deprecated ``batch ** alpha`` power law is monotone, so its optimum is
+    an endpoint and the grid is just ``{1, min(max_batch, items)}``.
+    """
+    items = max(int(items), 1)
+    bmax = max(min(max_batch, items), 1)
+    if bmax == 1:
+        return [1]
+    cands = {1, bmax}
+    if work.has_phases:
+        knee = batch_knee(work, spec, 1, efficiency)
+        if math.isfinite(knee):
+            lo = min(max(int(math.floor(knee)), 1), bmax)
+            hi = min(max(int(math.ceil(knee)), 1), bmax)
+            cands.update((lo, hi))
+            d = _largest_divisor_in(items, hi, bmax)
+            if d is not None:
+                cands.add(d)
+    return sorted(cands)

@@ -44,6 +44,7 @@ class Media:
     @classmethod
     def synthesize(cls, name: str, scenes: int = 4, fps: int = 10,
                    seed: int = 0) -> "Media":
+        """Deterministic random media standing in for a decoded video."""
         k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
         frames = jax.random.uniform(k1, (scenes, fps, 32, 32, 3))
         audio = jax.random.normal(k2, (scenes, 64, 80))
@@ -68,6 +69,7 @@ class RealExecutor:
 
     # -- model sessions ----------------------------------------------------------
     def session(self, arch: str) -> ServeSession:
+        """Lazily-built serving session for one reduced zoo config."""
         if arch not in self._sessions:
             cfg = get_config(arch, reduced=True)
             model = build_model(cfg)
@@ -78,12 +80,14 @@ class RealExecutor:
 
     # -- agent implementations -----------------------------------------------------
     def frame_extract(self, media: list[Media], args: dict) -> jax.Array:
+        """Strided frame sampling over all scenes."""
         stride = max(int(args.get("sampling_rate", 15)) // 15, 1)
         out = jnp.concatenate([m.frames[:, ::stride] for m in media], 0)
         return out                                  # (scenes, fps', 32, 32, 3)
 
     def speech_to_text(self, media: list[Media], arch: str | None) \
             -> jax.Array:
+        """Transcribe audio features with a (reduced) enc-dec or LM."""
         arch = arch or "seamless-m4t-large-v2"
         sess = self.session(arch)
         cfg = sess.model.cfg
@@ -119,6 +123,7 @@ class RealExecutor:
 
     def summarize(self, frames, objects, transcript, arch: str | None) \
             -> jax.Array:
+        """LM generate over a deterministic per-scene context prompt."""
         arch = arch or self.default_arch
         sess = self.session(arch)
         V = sess.model.cfg.vocab_size
@@ -133,6 +138,7 @@ class RealExecutor:
         return sess.generate(ctx, max_new_tokens=8)  # (scenes, 8) summaries
 
     def embed(self, summaries: jax.Array, arch: str | None) -> jax.Array:
+        """Mean-pooled embedding vectors, inserted into the in-memory DB."""
         arch = arch or self.default_arch
         sess = self.session(arch)
         emb = sess.params["embed"]                   # (V, d)
@@ -144,6 +150,7 @@ class RealExecutor:
 
     def qa(self, vectors: jax.Array, question: str, arch: str | None) \
             -> jax.Array:
+        """Nearest-vector retrieval + LM generate over the question."""
         arch = arch or self.default_arch
         sess = self.session(arch)
         V = sess.model.cfg.vocab_size

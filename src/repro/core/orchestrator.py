@@ -73,6 +73,7 @@ class RulePlanner:
         return specs
 
     def lower(self, job: Job) -> DAG:
+        """Decompose the job and wire tasks by artifact dataflow."""
         specs = self.decompose(job)
         units = input_units(job.inputs)
         nodes: list[TaskNode] = []
@@ -87,6 +88,7 @@ class RulePlanner:
         return DAG(nodes)
 
     def toolcalls(self, dag: DAG) -> dict[str, str]:
+        """Rendered executable toolcall per task (paper §3.2 example)."""
         return {tid: self.library.toolcall(dag.nodes[tid].agent,
                                            dag.nodes[tid].args)
                 for tid in dag.topo_order}
@@ -117,6 +119,7 @@ class LLMPlanner:
     llm_fn: Callable[[str, str], str]
 
     def system_prompt(self) -> str:
+        """The ReAct system prompt listing every library interface."""
         lines = [f"- {i.name}({', '.join(i.schema)}): {i.description} "
                  f"[consumes: {','.join(i.consumes) or '-'}; "
                  f"produces: {i.produces}]"
@@ -124,6 +127,7 @@ class LLMPlanner:
         return _SYSTEM_TMPL.format(agents="\n".join(lines))
 
     def lower(self, job: Job) -> DAG:
+        """Ask the LLM for a task decomposition and validate it."""
         user = job.description
         if job.tasks:
             user += "\nSub-tasks: " + "; ".join(job.tasks)

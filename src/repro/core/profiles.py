@@ -11,17 +11,97 @@ collective) over the implementation's workload model and the device's specs.
 Measured calibration points (e.g. the paper-cluster Whisper timings in
 ``configs/workflow_video.py``) can be *pinned* and take precedence — that is
 the moral equivalent of the paper's offline profiling runs, amortized across
-workflows.
+workflows. A pin may carry a per-batch latency *curve* (DESIGN.md §7.2), so
+measured rows batch on calibration data instead of the deprecated
+``batch ** alpha`` scalar.
 """
 from __future__ import annotations
 
 import math
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
 
 from .agents import AgentImpl, AgentLibrary, Work
 from .energy import (CATALOG, DeviceSpec, batch_roofline_latency,
                      roofline_latency)
+
+# a pinned calibration row: ((batch, per_item_latency_s), ...), sorted by
+# batch, per-item latency non-increasing (see _as_curve)
+BatchCurve = tuple[tuple[int, float], ...]
+
+
+def _as_curve(latency_s) -> BatchCurve:
+    """Normalize a pin's latency argument into a monotone batch curve.
+
+    Accepts a scalar (per-item seconds at batch=1 — the legacy single-point
+    form), a ``{batch: per_item_s}`` mapping, or an iterable of ``(batch,
+    per_item_s)`` pairs. Per-item latencies are made non-increasing in batch
+    by a running minimum (absorbs measurement noise; co-scheduling more
+    items can never *raise* per-item latency on real hardware), and the
+    implied step latency ``batch * per_item`` must be non-decreasing — a
+    superlinear batching speedup is unphysical and would unsound the
+    scheduler's dominated-config pruning bound.
+    """
+    if isinstance(latency_s, (int, float)):
+        pts = [(1, float(latency_s))]
+    else:
+        items = (latency_s.items() if isinstance(latency_s, dict)
+                 else latency_s)
+        pts = sorted((int(b), float(v)) for b, v in items)
+    if not pts:
+        raise ValueError("empty batch-latency curve")
+    seen = set()
+    for b, v in pts:
+        if b < 1:
+            raise ValueError(f"batch sizes must be >= 1, got {b}")
+        if v <= 0:
+            raise ValueError(f"per-item latency must be positive, got {v}")
+        if b in seen:
+            raise ValueError(f"duplicate batch size {b} in curve")
+        seen.add(b)
+    if len(pts) == 1 and pts[0][0] != 1:
+        raise ValueError(
+            f"a single-point pin must be the batch=1 per-item latency "
+            f"(got batch {pts[0][0]}): the alpha fallback anchors at b=1 — "
+            f"include more batch points to pin a curve instead")
+    lo = math.inf
+    curve = []
+    for b, v in pts:
+        lo = min(lo, v)
+        curve.append((b, lo))
+    for (b0, v0), (b1, v1) in zip(curve, curve[1:]):
+        if b1 * v1 < b0 * v0 * (1 - 1e-9):
+            raise ValueError(
+                f"step latency decreases from batch {b0} ({b0 * v0:.4g}s) "
+                f"to batch {b1} ({b1 * v1:.4g}s): a batched step cannot "
+                f"take less wall time than a smaller one")
+    return tuple(curve)
+
+
+def _curve_per_item(curve: BatchCurve, batch: int) -> float:
+    """Per-item latency at ``batch``, interpolating the measured points.
+
+    Log-log linear between bracketing points — exact for power-law curves
+    (``lat1 * b ** (alpha - 1)``), which is how legacy ``batch_alpha``
+    calibrations migrate without moving any number — and clamped flat
+    outside the measured range (extrapolating a measured curve would claim
+    speedups nobody observed).
+    """
+    if batch <= curve[0][0]:
+        return curve[0][1]
+    if batch >= curve[-1][0]:
+        return curve[-1][1]
+    for (b0, v0), (b1, v1) in zip(curve, curve[1:]):
+        if b0 <= batch <= b1:
+            if batch == b0:
+                return v0
+            if batch == b1:
+                return v1
+            t = (math.log(batch) - math.log(b0)) \
+                / (math.log(b1) - math.log(b0))
+            return math.exp(math.log(v0) + t * (math.log(v1) - math.log(v0)))
+    return curve[-1][1]   # unreachable; curve is sorted
 
 
 @dataclass(frozen=True)
@@ -42,19 +122,22 @@ class ProfileStore:
     """Profile generation + pinned calibration overrides.
 
     ``step_latency`` is the single latency model both the scheduler's
-    estimates and the simulator's actuals consume (DESIGN.md §7). Results
-    are memoized in a bounded LRU keyed by
-    ``(impl, device, n_devices, batch, work)`` — the work signature is the
-    frozen ``Work`` dataclass itself — so repeated planning over the same
-    library/cluster pays the roofline math once.
+    estimates and the simulator's actuals consume (DESIGN.md §7);
+    ``schedule_latency`` composes it into the batched execution schedule of
+    a whole task (full steps + one remainder step, §7.2). Results are
+    memoized in a bounded LRU keyed by ``(impl, device, n_devices, batch,
+    work)`` — the work signature is the frozen ``Work`` dataclass itself —
+    so repeated planning over the same library/cluster pays the roofline
+    math once; remainder steps land in the same cache under their own
+    batch key.
     """
 
     CACHE_MAX = 8192
 
     def __init__(self, library: AgentLibrary):
         self.library = library
-        # (impl, device, n_devices) -> (latency_s per item, power_frac)
-        self._pinned: dict[tuple[str, str, int], tuple[float, float]] = {}
+        # (impl, device, n_devices) -> (batch curve, power_frac)
+        self._pinned: dict[tuple[str, str, int], tuple[BatchCurve, float]] = {}
         self._cache: OrderedDict[tuple, float] = OrderedDict()
         self.cache_enabled = True
         self.cache_hits = 0
@@ -62,20 +145,34 @@ class ProfileStore:
         # bumped on every pin(): downstream caches keyed on estimates (the
         # admission plan cache) include it so calibration invalidates them
         self.version = 0
+        self._alpha_warned: set[tuple[str, str]] = set()
 
     # -- calibration ---------------------------------------------------------
-    def pin(self, impl: str, device: str, n_devices: int, latency_s: float,
+    def pin(self, impl: str, device: str, n_devices: int, latency_s,
             power_frac: float | None = None):
+        """Pin a measured calibration row for (impl, device, count).
+
+        ``latency_s`` is either a scalar — per-item seconds at batch=1, the
+        legacy single-point form — or a per-batch latency curve
+        (``{batch: per_item_s}`` mapping or ``(batch, per_item_s)`` pairs)
+        captured by e.g. ``benchmarks/calibrate_batch_curves.py``. Curves
+        batch by monotone log-log interpolation over the measured points;
+        single-point pins fall back to the deprecated ``batch ** alpha``
+        scalar (and warn the first time a batched step asks for one).
+        Pinned rows take precedence over the analytic roofline, and every
+        pin bumps ``version`` / drops the estimate memo so calibration
+        invalidates cached plans.
+        """
         imp = self.library.impls[impl]
         pf = imp.power_frac if power_frac is None else power_frac
-        self._pinned[(impl, device, n_devices)] = (latency_s, pf)
+        self._pinned[(impl, device, n_devices)] = (_as_curve(latency_s), pf)
         self._cache.clear()     # calibration invalidates memoized estimates
         self.version += 1
 
     # -- queries --------------------------------------------------------------
-    def _pinned_per_item(self, impl: AgentImpl, spec: DeviceSpec,
-                         n_devices: int) -> float | None:
-        """Calibrated per-item latency, or None when only analytic."""
+    def _pinned_curve(self, impl: AgentImpl, spec: DeviceSpec,
+                      n_devices: int) -> BatchCurve | None:
+        """Calibrated batch curve, or None when only analytic."""
         key = (impl.name, spec.name, n_devices)
         if key in self._pinned:
             return self._pinned[key][0]
@@ -83,10 +180,24 @@ class ProfileStore:
         cands = [(n, v) for (i, d, n), v in self._pinned.items()
                  if i == impl.name and d == spec.name]
         if cands:
-            n0, (lat0, _) = min(cands, key=lambda c: abs(
+            n0, (curve, _) = min(cands, key=lambda c: abs(
                 math.log(c[0] / max(n_devices, 1))))
-            return lat0 * (n0 / n_devices) ** 0.9
+            scale = (n0 / n_devices) ** 0.9
+            return tuple((b, v * scale) for b, v in curve)
         return None
+
+    def _warn_alpha_fallback(self, impl: AgentImpl, spec: DeviceSpec):
+        key = (impl.name, spec.name)
+        if key in self._alpha_warned:
+            return
+        self._alpha_warned.add(key)
+        warnings.warn(
+            f"single-point pinned profile for ({impl.name}, {spec.name}): "
+            f"batched steps fall back to the deprecated batch_alpha scalar. "
+            f"Pin a per-batch latency curve instead (ProfileStore.pin with "
+            f"a {{batch: per_item_s}} mapping; capture one with "
+            f"benchmarks/calibrate_batch_curves.py).",
+            DeprecationWarning, stacklevel=3)
 
     def step_latency(self, impl: AgentImpl, spec: DeviceSpec, n_devices: int,
                      work: Work, batch: int = 1) -> float:
@@ -94,8 +205,10 @@ class ProfileStore:
 
         Three regimes, in precedence order:
 
-        - *pinned* (measured) rows carry no FLOP/byte decomposition, so the
-          deprecated ``batch ** alpha`` scalar stays their batch model;
+        - *pinned* (measured) rows batch over their calibrated per-batch
+          latency curve (monotone log-log interpolation); single-point pins
+          carry no batch information, so the deprecated ``batch ** alpha``
+          scalar stays their batch model (with a one-time warning);
         - analytic works *with* a prefill/decode phase split use the
           batch-aware roofline (weights stream amortizes across the batch);
         - analytic works without a split fall back to ``batch ** alpha``.
@@ -108,23 +221,53 @@ class ProfileStore:
                 self.cache_hits += 1
                 return hit
             self.cache_misses += 1
-        pinned = self._pinned_per_item(impl, spec, n_devices)
-        if pinned is not None:
-            step = pinned * batch ** impl.batch_alpha
+        curve = self._pinned_curve(impl, spec, n_devices)
+        b = max(batch, 1)
+        if curve is not None:
+            if len(curve) > 1:
+                step = b * _curve_per_item(curve, b)
+            else:
+                if b > 1:
+                    self._warn_alpha_fallback(impl, spec)
+                step = curve[0][1] * b ** impl.batch_alpha
         elif work.has_phases:
-            step = impl.overhead_s + max(batch, 1) * batch_roofline_latency(
+            step = impl.overhead_s + b * batch_roofline_latency(
                 work, spec, n_devices=n_devices, batch=batch,
                 efficiency=impl.mxu_efficiency)
         else:
             step = (impl.overhead_s + roofline_latency(
                 work.flops, work.hbm_bytes, spec, n_devices=n_devices,
                 collective_bytes=work.coll_bytes,
-                efficiency=impl.mxu_efficiency)) * batch ** impl.batch_alpha
+                efficiency=impl.mxu_efficiency)) * b ** impl.batch_alpha
         if self.cache_enabled:
             self._cache[key] = step
             if len(self._cache) > self.CACHE_MAX:
                 self._cache.popitem(last=False)
         return step
+
+    def schedule_latency(self, impl: AgentImpl, spec: DeviceSpec,
+                         n_devices: int, work: Work, batch: int,
+                         items: int) -> float:
+        """Wall time to run ``items`` work-items in batches of ``batch``.
+
+        The batched execution schedule (DESIGN.md §7.2): ``floor(items/b)``
+        full steps plus — when ``items % b != 0`` — one *remainder* step
+        charged at ``step_latency(items % b)``, not at the full batch's
+        price. ``Scheduler.estimate`` and ``Simulator._duration`` both call
+        this, so estimate/actual parity holds by construction. The schedule
+        never exceeds the legacy ``ceil(items/b)`` full-step charge
+        (``tests/test_batch_schedule.py`` holds the property).
+        """
+        b = max(int(batch), 1)
+        items = max(int(items), 0)
+        if items == 0:
+            return 0.0
+        full, rem = divmod(items, b)
+        total = full * self.step_latency(impl, spec, n_devices, work, b) \
+            if full else 0.0
+        if rem:
+            total += self.step_latency(impl, spec, n_devices, work, rem)
+        return total
 
     def latency(self, impl: AgentImpl, spec: DeviceSpec, n_devices: int,
                 work: Work, batch: int = 1) -> float:
@@ -133,6 +276,7 @@ class ProfileStore:
             / max(batch, 1)
 
     def cache_info(self) -> dict:
+        """Estimate-memo counters: hits, misses, size, cap and hit rate."""
         total = self.cache_hits + self.cache_misses
         return {"hits": self.cache_hits, "misses": self.cache_misses,
                 "size": len(self._cache), "max": self.CACHE_MAX,
@@ -151,8 +295,21 @@ class ProfileStore:
         return sorted(n for (i, d, n) in self._pinned
                       if i == impl_name and d == device)
 
+    def pinned_batches(self, impl_name: str, device: str) -> list[int]:
+        """Calibrated batch sizes for (impl, device), across all pinned
+        counts. Non-empty for measured rows; the joint lever search uses
+        these points as the batch candidate grid (selection over the
+        profile library, mirroring ``pinned_counts``)."""
+        out: set[int] = set()
+        for (i, d, _n), (curve, _pf) in self._pinned.items():
+            if i == impl_name and d == device:
+                out.update(b for b, _ in curve)
+        return sorted(out)
+
     def power_frac(self, impl: AgentImpl, spec: DeviceSpec,
                    n_devices: int) -> float:
+        """Fraction of (active - idle) power drawn while running; pinned
+        rows override the implementation's declared fraction."""
         key = (impl.name, spec.name, n_devices)
         if key in self._pinned:
             return self._pinned[key][1]
@@ -160,6 +317,8 @@ class ProfileStore:
 
     def profile(self, impl_name: str, device: str, n_devices: int,
                 tokens_in: int = 1024, tokens_out: int = 256) -> Profile:
+        """One profile row: per-item latency/energy/$ and quality for an
+        (impl, device, count) triple at the given token footprint."""
         impl = self.library.impls[impl_name]
         spec = CATALOG[device]
         work = impl.work_fn(tokens_in, tokens_out)

@@ -30,7 +30,7 @@ from .agents import AgentImpl, AgentLibrary
 from .cluster import ClusterManager
 from .constraints import Constraint, ConstraintSpec, Objective, as_spec
 from .dag import DAG, TaskNode
-from .energy import CATALOG
+from .energy import CATALOG, knee_batch_grid
 from .profiles import ProfileStore
 
 
@@ -53,11 +53,14 @@ class TaskConfig:
     warm: bool = False            # a warm instance was available
 
     def with_(self, **kw) -> "TaskConfig":
+        """Functional update (the dataclass is frozen)."""
         return replace(self, **kw)
 
 
 @dataclass
 class ExecutionPlan:
+    """Task id -> chosen ``TaskConfig`` for one lowered workflow DAG."""
+
     configs: dict[str, TaskConfig] = field(default_factory=dict)
 
     def __getitem__(self, tid: str) -> TaskConfig:
@@ -71,6 +74,7 @@ class ExecutionPlan:
         return q
 
     def report(self, dag: DAG) -> dict:
+        """Plan-level estimates: critical path, energy, $ and quality."""
         lat = {tid: c.est_latency_s for tid, c in self.configs.items()}
         cp, path = dag.critical_path(lat)
         return {
@@ -93,6 +97,8 @@ def _pow2_range(lo: int, hi: int) -> list[int]:
 
 
 class Scheduler:
+    """The greedy hierarchical lever search over execution profiles."""
+
     def __init__(self, library: AgentLibrary, profiles: ProfileStore,
                  cluster: ClusterManager):
         self.library = library
@@ -101,6 +107,10 @@ class Scheduler:
         self.evals = 0          # estimate() calls (greedy-search footprint)
         self.prune = True       # dominated-config pruning in plan_task
         self.pruned = 0         # candidate configs skipped by pruning
+        # joint (count x batch) level-2 search (DESIGN.md §7.2); False
+        # restores the legacy sequential order (count at batch=1, then one
+        # batch candidate) — kept for benchmarks/planner_bench.py
+        self.joint_batch = True
         self._works: dict[tuple[str, int, int], object] = {}
 
     # -- estimation ------------------------------------------------------------
@@ -116,15 +126,23 @@ class Scheduler:
     def estimate(self, node: TaskNode, impl: AgentImpl, pool: str,
                  n_devices: int, n_instances: int = 1, batch: int = 1,
                  paths: int = 1, warm: bool = False) -> TaskConfig:
+        """Cost out one candidate configuration for ``node``.
+
+        Latency comes from the batched execution schedule
+        (``ProfileStore.schedule_latency``: full steps plus a remainder
+        step charged at its own size, DESIGN.md §7.2) — the same call the
+        simulator's ``_duration`` makes, so estimates and actuals agree by
+        construction. Energy/$ accrue over compute device-seconds;
+        weight-loading is an idle-power period covered by the pool floor.
+        """
         self.evals += 1
         spec = CATALOG[self.cluster.pools[pool].device]
         work = self._work_of(impl, node)
         if spec.kind == "cpu":
             batch = 1     # batching is an accelerator lever (weights reuse)
         items_per_inst = math.ceil(node.work_items / n_instances)
-        steps = math.ceil(items_per_inst / batch)
-        compute = steps * self.profiles.step_latency(impl, spec, n_devices,
-                                                     work, batch)
+        compute = self.profiles.schedule_latency(impl, spec, n_devices,
+                                                 work, batch, items_per_inst)
         lat = compute if warm else compute + impl.load_time_s
         pf = self.profiles.power_frac(impl, spec, n_devices)
         # active energy/$ accrue over compute time; weight-loading is an
@@ -152,38 +170,71 @@ class Scheduler:
         """Comparison key under any accepted constraint form."""
         return as_spec(order).key(cfg)
 
+    def _batch_grid(self, impl: AgentImpl, spec, work,
+                    items: int) -> list[int]:
+        """Batch candidates for the joint (count x batch) search.
+
+        Measured (pinned) rows select among their calibrated batch points —
+        the paper's semantics, mirroring ``pinned_counts`` — plus the
+        largest feasible batch; analytic rows get the knee-derived grid of
+        ``energy.knee_batch_grid`` (1, the knee, a zero-remainder divisor
+        of the item count at/past the knee, and ``min(max_batch, items)``).
+        """
+        if impl.max_batch <= 1 or spec.kind == "cpu" or items <= 1:
+            return [1]
+        bmax = min(impl.max_batch, items)
+        pinned_bs = self.profiles.pinned_batches(impl.name, spec.name)
+        if pinned_bs:
+            return sorted({b for b in pinned_bs if 1 <= b <= bmax}
+                          | {1, bmax})
+        return knee_batch_grid(work, spec, items, impl.max_batch,
+                               impl.mxu_efficiency)
+
     def _dominated(self, node: TaskNode, impl: AgentImpl, pool: str,
-                   counts: list[int], warm: bool, incumbent: TaskConfig,
-                   order: "ConstraintSpec") -> bool:
-        """Dominated-config pruning: can *any* device count in this
-        (impl, pool) group beat the incumbent under ``order``?
+                   counts: list[int], batches: list[int], warm: bool,
+                   incumbent: TaskConfig, order: "ConstraintSpec") -> bool:
+        """Dominated-config pruning: can *any* (device count x batch) in
+        this (impl, pool) group beat the incumbent under ``order``?
 
         Builds one optimistic pseudo-config whose latency/$/energy/quality
         are simultaneous lower bounds over every level-2 candidate in the
-        group. On the analytic roofline, per-item latency is ``overhead +
-        K/n`` — non-increasing in device count — so the latency bound sits
-        at ``max(counts)`` and the device-seconds (hence $/energy) bound at
-        ``min(counts)``; pinned (impl, device) pairs scale off the nearest
-        calibration anchor, which is *not* monotone in ``n``, so those
-        groups evaluate every count exactly (cheap: memoized, short lists).
-        Every objective in the DSL is monotone in those four quantities and
-        the lexicographic key is monotone componentwise, so if even the
-        bound cannot beat the incumbent's key, no real candidate can — the
-        whole ``counts`` loop is skipped without changing the chosen plan.
+        group. On the analytic roofline, per-item latency is non-increasing
+        in both device count (``overhead + K/n``) and batch size (the
+        weights stream amortizes), and the remainder schedule satisfies
+        ``schedule(n, b) >= items * latency(n, b)``, so the latency bound
+        is the grid minimum at ``max(counts)``; per-item device-seconds
+        ``latency * n`` are non-decreasing in count (roofline terms x n are
+        constant, the overhead share grows), so the $/energy bound is the
+        grid minimum at ``min(counts)``. Pinned
+        (impl, device) pairs scale off the nearest calibration anchor,
+        which is *not* monotone in ``n``, so those groups take the exact
+        minimum over the (count x batch) grid (cheap: memoized, short
+        lists). Every objective in the DSL is monotone in those four
+        quantities and the lexicographic key is monotone componentwise, so
+        if even the bound cannot beat the incumbent's key, no real
+        candidate can — the whole candidate loop is skipped without
+        changing the chosen plan.
         """
         spec = CATALOG[self.cluster.pools[pool].device]
         work = self._work_of(impl, node)
         items = node.work_items
         if self.profiles.pinned_counts(impl.name, spec.name):
-            per = [self.profiles.latency(impl, spec, n, work)
+            per = [min(self.profiles.latency(impl, spec, n, work, b)
+                       for b in batches)
                    for n in counts]
             lat_lb = items * min(per)
             dev_s_lb = items * min(p * n for p, n in zip(per, counts))
         else:
-            lat_lb = items * self.profiles.latency(impl, spec, counts[-1],
-                                                   work)
-            dev_s_lb = items * self.profiles.latency(impl, spec, counts[0],
-                                                     work) * counts[0]
+            # min over the (small) batch grid instead of assuming
+            # monotonicity in b: covers the deprecated alpha fallback even
+            # for alpha > 1, where items * latency(b) under-cuts only at
+            # b = 1 (which the grid always contains)
+            lat_lb = items * min(
+                self.profiles.latency(impl, spec, counts[-1], work, b)
+                for b in batches)
+            dev_s_lb = items * counts[0] * min(
+                self.profiles.latency(impl, spec, counts[0], work, b)
+                for b in batches)
         if not warm:
             lat_lb += impl.load_time_s
         pf_lb = min(self.profiles.power_frac(impl, spec, n) for n in counts)
@@ -198,6 +249,28 @@ class Scheduler:
     # -- the greedy hierarchical search -------------------------------------------
     def plan_task(self, node: TaskNode, order,
                   quality_floor: float | dict) -> TaskConfig:
+        """Choose one ``TaskConfig`` for ``node`` under ``order``.
+
+        The greedy hierarchy (paper §3.3c): (1) implementation by quality
+        gate + constraint preference; (2) a *joint* search over device
+        count x batch size per candidate (impl, pool) — the batch grid is
+        knee-derived (``energy.knee_batch_grid``) or, for measured rows,
+        the calibrated batch points, so the count choice sees each pool at
+        its best batch rather than locking the count in at batch=1
+        (DESIGN.md §7.2; ``joint_batch=False`` restores the sequential
+        legacy order); (3) remaining parallelism levers — instance fan-out
+        and execution paths — against free resources right now.
+
+        Level 3 expands *two* seeds when the joint search is on: the joint
+        winner and the batch=1 winner (the sequential hierarchy's level-2
+        choice). Batched and unbatched configs respond differently to
+        fan-out — splitting items across instances shrinks compute but not
+        load time, so a cheap low-load implementation that loses the
+        batched level-2 comparison can still win after fan-out. Expanding
+        both seeds makes the joint search's candidate set a strict
+        superset of the sequential one, so the chosen config is never
+        worse under the constraint order.
+        """
         order = as_spec(order)
         impls = self.library.impls_for(node.agent)
         if not impls:
@@ -219,8 +292,10 @@ class Scheduler:
         warm_set = {(inst.impl, inst.pool)
                     for inst in self.cluster.instances}
 
-        # Level 2 — hardware + device count per candidate implementation.
-        def search(cands) -> TaskConfig | None:
+        # Level 2 — hardware + device count (x batch, when joint) per
+        # candidate implementation.
+        def search(cands, joint: bool) -> TaskConfig | None:
+            """Best (impl, pool, count[, batch]) config under ``order``."""
             best: TaskConfig | None = None
             for impl in cands:
                 for pool_name, st in stats.items():
@@ -236,56 +311,81 @@ class Scheduler:
                     counts = [n for n in self.profiles.pinned_counts(
                                   impl.name, device) if lo <= n <= hi] \
                         or _pow2_range(lo, hi)
+                    if joint:
+                        batches = self._batch_grid(impl, CATALOG[device],
+                                                   self._work_of(impl, node),
+                                                   node.work_items)
+                    else:
+                        batches = [1]
                     if best is not None and self.prune and self._dominated(
-                            node, impl, pool_name, counts, warm, best,
-                            order):
-                        self.pruned += len(counts)
+                            node, impl, pool_name, counts, batches, warm,
+                            best, order):
+                        self.pruned += len(counts) * len(batches)
                         continue
                     for n in counts:
-                        cfg = self.estimate(node, impl, pool_name, n,
-                                            warm=warm)
-                        if best is None or self._key(cfg, order) < \
-                                self._key(best, order):
-                            best = cfg
+                        for b in batches:
+                            cfg = self.estimate(node, impl, pool_name, n,
+                                                batch=b, warm=warm)
+                            if best is None or self._key(cfg, order) < \
+                                    self._key(best, order):
+                                best = cfg
             return best
 
-        best = search(cand_impls)
+        # Level 3 — remaining parallelism levers, given free resources.
+        def expand(best: TaskConfig, legacy_batch: bool) -> TaskConfig:
+            """Grow a level-2 seed through the level-3 parallelism levers."""
+            impl = self.library.impls[best.impl]
+            st = stats[best.pool]
+            free_inst = max(st["free"] // best.n_devices, 1)
+            if legacy_batch and impl.max_batch > 1:
+                # sequential lever order: one batch candidate, tried only
+                # after the count is locked in at batch=1
+                b = min(impl.max_batch, node.work_items)
+                cand = self.estimate(node, impl, best.pool, best.n_devices,
+                                     best.n_instances, b, warm=best.warm)
+                if self._key(cand, order) < self._key(best, order):
+                    best = cand
+            if node.chunkable and node.work_items > 1:
+                for k in _pow2_range(2, min(free_inst, node.work_items)):
+                    cand = self.estimate(node, impl, best.pool,
+                                         best.n_devices, k, best.batch,
+                                         warm=best.warm)
+                    if self._key(cand, order) < self._key(best, order):
+                        best = cand
+            # Execution paths: only when quality leads, on harvestable slack.
+            if order.seeks_quality:
+                harvest = st["harvestable"] // max(
+                    best.n_devices * best.n_instances, 1)
+                for p in (2, 4):
+                    if p - 1 > harvest:
+                        break
+                    cand = self.estimate(node, impl, best.pool,
+                                         best.n_devices, best.n_instances,
+                                         best.batch, paths=p, warm=best.warm)
+                    if self._key(cand, order) < self._key(best, order):
+                        best = cand
+            return best
+
+        best = search(cand_impls, self.joint_batch)
         if best is None:   # quality-gated impls don't fit this cluster
-            best = search(sorted(impls, key=lambda i: -i.quality))
+            cand_impls = sorted(impls, key=lambda i: -i.quality)
+            best = search(cand_impls, self.joint_batch)
         if best is None:
             raise ValueError(
                 f"no (pool x devices) fits agent {node.agent!r}; "
                 f"pools: {list(stats)}")
 
-        # Level 3 — parallelism levers, given free resources right now.
-        impl = self.library.impls[best.impl]
-        st = stats[best.pool]
-        free_inst = max(st["free"] // best.n_devices, 1)
-        if impl.max_batch > 1:   # batching: fewer steps, ~free energy win
-            b = min(impl.max_batch, node.work_items)
-            cand = self.estimate(node, impl, best.pool, best.n_devices,
-                                 best.n_instances, b, warm=best.warm)
-            if self._key(cand, order) < self._key(best, order):
-                best = cand
-        if node.chunkable and node.work_items > 1:
-            for k in _pow2_range(2, min(free_inst, node.work_items)):
-                cand = self.estimate(node, impl, best.pool, best.n_devices,
-                                     k, best.batch, warm=best.warm)
-                if self._key(cand, order) < self._key(best, order):
-                    best = cand
-        # Execution paths: only when quality leads, only on harvestable slack.
-        if order.seeks_quality:
-            harvest = st["harvestable"] // max(
-                best.n_devices * best.n_instances, 1)
-            for p in (2, 4):
-                if p - 1 > harvest:
-                    break
-                cand = self.estimate(node, impl, best.pool, best.n_devices,
-                                     best.n_instances, best.batch, paths=p,
-                                     warm=best.warm)
-                if self._key(cand, order) < self._key(best, order):
-                    best = cand
-        return best
+        final = expand(best, legacy_batch=not self.joint_batch)
+        if self.joint_batch:
+            # second seed: the sequential hierarchy's batch=1 level-2
+            # winner, expanded through the legacy lever order — keeps the
+            # joint candidate set a superset of the sequential one
+            seed = search(cand_impls, joint=False)
+            if seed is not None and seed != best:
+                alt = expand(seed, legacy_batch=True)
+                if self._key(alt, order) < self._key(final, order):
+                    final = alt
+        return final
 
     def split_shares(self, dag: DAG, order,
                      quality_floor: float | dict = 0.85) \
@@ -338,6 +438,16 @@ class Scheduler:
 
     def plan(self, dag: DAG, order,
              quality_floor: float | dict = 0.85) -> ExecutionPlan:
+        """Choose a ``TaskConfig`` for every task of ``dag``.
+
+        ``order`` is any accepted constraint form (seed enum member,
+        sequence, DSL objective, ``ConstraintSpec``); ``quality_floor`` is
+        a scalar or per-interface dict gating level-1 implementation
+        choice. Workflow-level deadline/budget terms are first split
+        across tasks by the critical-path-weighted shares of
+        ``split_shares`` (DESIGN.md §6.1); plain objectives plan each task
+        directly.
+        """
         spec = as_spec(order)
         plan = ExecutionPlan()
         if spec.has_workflow_terms:

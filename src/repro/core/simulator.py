@@ -50,6 +50,8 @@ from .scheduler import ExecutionPlan, TaskConfig
 
 @dataclass(frozen=True)
 class TraceEntry:
+    """One task execution interval in the Fig-3-style trace."""
+
     workflow: str
     task: str
     impl: str
@@ -62,6 +64,8 @@ class TraceEntry:
 
 @dataclass
 class SimReport:
+    """Aggregate outcome of one simulated run (energy, trace, spans)."""
+
     makespan_s: float
     energy_wh: float
     active_wh: float
@@ -74,6 +78,7 @@ class SimReport:
     requeues: int = 0            # task re-executions caused by preemption
 
     def workflow_span(self, wf: str) -> float:
+        """Arrival-to-finish seconds for one workflow (tenant latency)."""
         return self.per_workflow[wf]["finish"] - self.per_workflow[wf]["start"]
 
 
@@ -123,6 +128,8 @@ class _Running:
 
 
 class Simulator:
+    """Discrete-event engine executing plans against the modeled cluster."""
+
     def __init__(self, cluster: ClusterManager, library: AgentLibrary,
                  profiles: ProfileStore):
         self.cluster = cluster
@@ -137,12 +144,11 @@ class Simulator:
         work = impl.work_fn(node.tokens_in, node.tokens_out)
         batch = 1 if spec.kind == "cpu" else cfg.batch
         items = math.ceil(node.work_items / max(n_inst, 1))
-        steps = math.ceil(items / batch)
-        # the same batch-aware step model the scheduler estimates with
-        # (ProfileStore.step_latency): one source of truth for plan vs actual
-        compute = steps * self.profiles.step_latency(impl, spec,
-                                                     cfg.n_devices, work,
-                                                     batch)
+        # the same batched execution schedule the scheduler estimates with
+        # (ProfileStore.schedule_latency: full steps + a remainder step at
+        # its own price): one source of truth for plan vs actual
+        compute = self.profiles.schedule_latency(impl, spec, cfg.n_devices,
+                                                 work, batch, items)
         lat = compute
         if new_instances and not cfg.warm:
             # cfg.warm = provisioned capacity (PTU-style): always-on, no load
@@ -156,6 +162,14 @@ class Simulator:
     def run(self,
             workflows: "dict[str, tuple[DAG, ExecutionPlan, float] | Submission]",
             log: list | None = None, policy=None) -> SimReport:
+        """Execute one or many workflows; returns the ``SimReport``.
+
+        ``workflows`` maps workflow id to either a ``(dag, plan, arrival)``
+        triple or a ``Submission`` (tenant class + optional admission-time
+        ``plan_fn``). ``policy`` selects the admission order
+        (``core.admission``: fcfs | strict-priority | weighted-fair);
+        ``log`` collects human-readable event lines when provided.
+        """
         pol = get_policy(policy)
         wfs: dict[str, _WfState] = {}
         for wid, sub in workflows.items():
@@ -182,6 +196,7 @@ class Simulator:
         t = 0.0
 
         def ready_tasks():
+            """Dispatchable (workflow, task) pairs in admission order."""
             out = []
             admitted = [Admission(wid, st.tenant, st.arrival)
                         for wid, st in wfs.items()
@@ -255,6 +270,7 @@ class Simulator:
             return bool(victims)
 
         def try_start(wid: str, tid: str) -> bool:
+            """Start a ready task if its resources fit right now."""
             st = wfs[wid]
             node = st.dag.nodes[tid]
             cfg = st.plan[tid]

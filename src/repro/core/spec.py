@@ -53,6 +53,7 @@ class ArtifactRegistry:
         self._types: dict[str, Artifact] = {}
 
     def define(self, name: str, description: str = "") -> Artifact:
+        """Register (or redefine) a dataflow type."""
         art = Artifact(name, description)
         self._types[name] = art
         return art
@@ -68,6 +69,7 @@ class ArtifactRegistry:
         return self._types[name]
 
     def names(self) -> list[str]:
+        """All registered artifact type names."""
         return sorted(self._types)
 
 
@@ -125,6 +127,7 @@ def input_units(inputs: Sequence[Any]) -> dict[str, int]:
 
 
 def input_artifacts(inputs: Sequence[Any]) -> set[str]:
+    """The artifact types present across a job's input sets."""
     return {x.artifact for x in inputs if isinstance(x, InputSet)}
 
 
@@ -146,6 +149,7 @@ class CardinalityModel:
     default: int = 1
 
     def items(self, available: Mapping[str, int]) -> int:
+        """Work-item count for a job's merged input units."""
         for u in self.units:
             if u in available:
                 return max(int(available[u]), 1)
@@ -203,15 +207,19 @@ class Scenario:
         field(default_factory=dict)
 
     def args_for(self, interface: str, job) -> dict:
+        """Toolcall args the scenario builds for one interface."""
         builder = self.arg_builders.get(interface)
         return builder(job) if builder is not None else {}
 
 
 class ScenarioRegistry:
+    """Registered workflow shapes, matched by input artifact types."""
+
     def __init__(self):
         self._scenarios: dict[str, Scenario] = {}
 
     def register(self, scenario: Scenario) -> Scenario:
+        """Add a scenario; its input artifact types must be registered."""
         for art in scenario.input_artifacts:
             ARTIFACTS[art]            # raises on unknown artifact types
         self._scenarios[scenario.name] = scenario
@@ -222,6 +230,7 @@ class ScenarioRegistry:
         return self._scenarios[name]
 
     def names(self) -> list[str]:
+        """All registered scenario names (built-ins loaded lazily)."""
         self._ensure_builtin()
         return sorted(self._scenarios)
 

@@ -27,6 +27,8 @@ from .workflow import COMPONENT_ALIASES, ImperativeWorkflow, Job
 
 @dataclass
 class JobResult:
+    """Everything one declarative job execution produced."""
+
     makespan_s: float
     energy_wh: float
     usd: float
@@ -38,10 +40,13 @@ class JobResult:
     log: list[str] = field(default_factory=list)
 
     def trace_str(self) -> str:
+        """ASCII Fig-3-style execution trace of the run."""
         return render_trace(self.sim)
 
 
 class Murakkab:
+    """The integrated system: orchestrator + scheduler + cluster manager."""
+
     PLAN_CACHE_MAX = 256
 
     def __init__(self, cluster: ClusterManager,
@@ -99,15 +104,25 @@ class Murakkab:
 
     # -- declarative path -----------------------------------------------------------
     def lower(self, job: Job) -> DAG:
+        """Decompose a declarative job into the task-DAG IR."""
         return self.planner.lower(job)
 
     def plan(self, job: Job) -> tuple[DAG, ExecutionPlan]:
+        """Lower a job and choose a configuration for every task."""
         dag = self.lower(job)
         plan = self.scheduler.plan(dag, job.constraint_spec,
                                    job.quality_floor)
         return dag, plan
 
     def execute(self, job: Job, arrival: float = 0.0) -> JobResult:
+        """Plan and run one declarative job on the simulated cluster.
+
+        The single-tenant entry point (paper Listing 2): lowers the job,
+        runs the greedy lever search under its constraints and quality
+        floors, executes the plan on the discrete-event engine and returns
+        the full ``JobResult`` (makespan/energy/$, DAG, plan, toolcalls,
+        trace). For multi-tenant workloads use ``execute_many``.
+        """
         dag, plan = self.plan(job)
         return self._run({"job": (dag, plan, arrival)}, dag, plan)
 
@@ -153,7 +168,10 @@ class Murakkab:
         key = (dag.signature(), job.constraint_spec,
                tuple(sorted(floor.items())) if isinstance(floor, dict)
                else floor,
-               self.cluster.digest(), self.profiles.version)
+               self.cluster.digest(), self.profiles.version,
+               # unlike pruning (plan-preserving), the search mode changes
+               # chosen plans — toggling it must not serve cross-mode plans
+               self.scheduler.joint_batch)
         cached = self._plan_cache.get(key)
         if cached is not None:
             self._plan_cache.move_to_end(key)
@@ -170,6 +188,7 @@ class Murakkab:
     # -- imperative (baseline) path ----------------------------------------------------
     def execute_imperative(self, wf: ImperativeWorkflow,
                            inputs=()) -> JobResult:
+        """Run a Listing-1 pinned workflow (the evaluation baseline)."""
         dag, plan = self.lower_imperative(wf, inputs)
         return self._run({"baseline": (dag, plan, 0.0)}, dag, plan)
 

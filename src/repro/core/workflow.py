@@ -48,6 +48,7 @@ class VideoInput:
     artifact = "video"
 
     def units(self) -> dict[str, int]:
+        """Unit breakdown driving interface cardinality models."""
         return {"videos": 1, "scenes": self.scenes,
                 "frames": self.scenes * self.frames_per_scene}
 
@@ -63,6 +64,7 @@ class DocumentInput:
     artifact = "document"
 
     def units(self) -> dict[str, int]:
+        """Unit breakdown driving interface cardinality models."""
         return {"documents": 1, "pages": self.pages,
                 "chunks": self.pages * self.chunks_per_page}
 
@@ -78,6 +80,7 @@ class QueryInput:
     artifact = "query"
 
     def units(self) -> dict[str, int]:
+        """Unit breakdown driving interface cardinality models."""
         return {"queries": 1, "passages": self.candidates}
 
 
@@ -101,6 +104,7 @@ class Job:
 
     @property
     def constraint_spec(self) -> ConstraintSpec:
+        """The job's constraints normalized into a ``ConstraintSpec``."""
         return as_spec(self.constraints)
 
     @property
@@ -142,6 +146,7 @@ class Component:
         return self
 
     def chain(self) -> list["Component"]:
+        """The linked components in dataflow order."""
         out, cur = [], self
         while cur is not None:
             out.append(cur)
@@ -150,14 +155,17 @@ class Component:
 
 
 def Tool(name: str, **kw) -> Component:
+    """A pinned non-model tool component (Listing 1)."""
     return Component(name=name, kind="tool", **kw)
 
 
 def MLModel(name: str, **kw) -> Component:
+    """A pinned (non-LLM) model component (Listing 1)."""
     return Component(name=name, kind="mlmodel", **kw)
 
 
 def LLM(name: str, **kw) -> Component:
+    """A pinned LLM component with prompts (Listing 1)."""
     return Component(name=name, kind="llm", **kw)
 
 
@@ -182,11 +190,14 @@ class ImperativeWorkflow:
     flow: Component
 
     def components(self) -> list[Component]:
+        """The pinned components in execution order."""
         return self.flow.chain()
 
     def execute(self, system, inputs: Sequence[Any] = (), **kw):
+        """Run the pinned sequential flow on the given system."""
         return system.execute_imperative(self, inputs=inputs, **kw)
 
 
 def Workflow(flow: Component) -> ImperativeWorkflow:
+    """Wrap a ``>>``-chained component flow (paper Listing 1)."""
     return ImperativeWorkflow(flow)

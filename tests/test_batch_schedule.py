@@ -1,0 +1,265 @@
+"""Remainder-step schedule + joint (count x batch) search + pinned batch
+curves (DESIGN.md §7.2): edge cases, the never-worse-than-ceil property,
+estimate/actual parity with remainders, curve interpolation, and joint
+search dominating the sequential lever order."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CATALOG, Murakkab, Work
+from repro.core.dag import TaskNode
+from repro.core.energy import knee_batch_grid
+from repro.core.profiles import _as_curve, _curve_per_item
+from repro.core.simulator import Simulator
+
+V5E = CATALOG["tpu-v5e"]
+
+
+def _work(pf, df, pb, db, wb, steps):
+    return Work.two_phase(prefill_flops=pf, decode_flops=df,
+                          prefill_bytes=pb, decode_bytes=db,
+                          weight_bytes=wb, decode_steps=steps)
+
+
+WORK_STRATS = (st.floats(1e9, 1e15), st.floats(1e9, 1e15),
+               st.floats(0.0, 1e12), st.floats(0.0, 1e12),
+               st.floats(1e8, 2e11), st.integers(1, 512))
+
+
+def _store():
+    system = Murakkab.tpu_cluster()
+    return system, system.profiles, system.library.impls["gemma2-9b-digest"]
+
+
+# -- the remainder schedule ---------------------------------------------------
+
+
+def test_schedule_exact_multiple_is_full_steps_only():
+    """items % b == 0: the schedule is exactly items/b full steps."""
+    system, prof, impl = _store()
+    work = impl.work_fn(700, 90)
+    step = prof.step_latency(impl, V5E, 1, work, 8)
+    assert prof.schedule_latency(impl, V5E, 1, work, 8, 64) == \
+        pytest.approx(8 * step, rel=1e-12)
+
+
+def test_schedule_items_below_batch_charges_one_small_step():
+    """items < b: one step at the *items'* price, not the full batch's."""
+    system, prof, impl = _store()
+    work = impl.work_fn(700, 90)
+    got = prof.schedule_latency(impl, V5E, 1, work, 64, 10)
+    assert got == pytest.approx(prof.step_latency(impl, V5E, 1, work, 10),
+                                rel=1e-12)
+    # strictly cheaper than the legacy full-step charge (10 items are
+    # weights-streaming-bound well below the 64-batch compute time)
+    assert got < prof.step_latency(impl, V5E, 1, work, 64)
+
+
+def test_schedule_batch_one_is_per_item_sum():
+    """b == 1: items sequential unbatched steps."""
+    system, prof, impl = _store()
+    work = impl.work_fn(700, 90)
+    assert prof.schedule_latency(impl, V5E, 1, work, 1, 7) == \
+        pytest.approx(7 * prof.step_latency(impl, V5E, 1, work, 1),
+                      rel=1e-12)
+
+
+def test_schedule_zero_items_is_free():
+    system, prof, impl = _store()
+    work = impl.work_fn(700, 90)
+    assert prof.schedule_latency(impl, V5E, 1, work, 8, 0) == 0.0
+
+
+@settings(max_examples=60)
+@given(*WORK_STRATS, st.integers(1, 7), st.integers(1, 300))
+def test_schedule_never_exceeds_ceil_full_step_charge(pf, df, pb, db, wb,
+                                                      steps, log_b, items):
+    """The remainder schedule never exceeds the legacy ``ceil(items/b)``
+    full-step charge it replaces — splitting the tail can only shave."""
+    system, prof, impl = _store()
+    w = _work(pf, df, pb, db, wb, steps)
+    b = 2 ** log_b
+    sched = prof.schedule_latency(impl, V5E, 1, w, b, items)
+    old = math.ceil(items / b) * prof.step_latency(impl, V5E, 1, w, b)
+    assert sched <= old * (1 + 1e-12)
+
+
+def test_remainder_shaves_strictly_below_knee():
+    """A remainder below the knee runs at its own (smaller) step price."""
+    system, prof, impl = _store()
+    work = impl.work_fn(700, 90)
+    b, items = 64, 70       # remainder 6, far below the knee
+    sched = prof.schedule_latency(impl, V5E, 1, work, b, items)
+    old = math.ceil(items / b) * prof.step_latency(impl, V5E, 1, work, b)
+    assert sched < old * 0.99
+
+
+def test_estimate_actual_parity_with_remainder():
+    """Scheduler estimate == simulator actual for a remainder schedule."""
+    system, prof, impl = _store()
+    node = TaskNode(id="t", description="", agent="digest", work_items=70,
+                    chunkable=True, tokens_in=700, tokens_out=90)
+    cfg = system.scheduler.estimate(node, impl, "v5e", 1, batch=32)
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    dur, compute = sim._duration(node, cfg, n_inst=1, new_instances=1)
+    assert dur == pytest.approx(cfg.est_latency_s, rel=1e-12)
+    assert compute == pytest.approx(cfg.est_latency_s - impl.load_time_s,
+                                    rel=1e-12)
+
+
+# -- the knee-derived batch grid ----------------------------------------------
+
+
+def test_knee_grid_contains_endpoints_and_divisor():
+    system, prof, impl = _store()
+    work = impl.work_fn(700, 90)
+    grid = knee_batch_grid(work, V5E, 72, 64, impl.mxu_efficiency)
+    assert grid[0] == 1 and grid[-1] == 64      # endpoints
+    assert all(1 <= b <= 64 for b in grid)
+    # a zero-remainder divisor of 72 at/past the knee made the grid
+    assert any(72 % b == 0 and b > 1 for b in grid)
+    assert grid == sorted(set(grid))
+
+
+def test_knee_grid_degenerate_cases():
+    system, prof, impl = _store()
+    work = impl.work_fn(700, 90)
+    assert knee_batch_grid(work, V5E, 1, 64) == [1]       # single item
+    assert knee_batch_grid(work, V5E, 100, 1) == [1]      # unbatchable
+    tool = system.library.impls["opencv"].work_fn(0, 0)   # no phase split
+    assert knee_batch_grid(tool, V5E, 100, 16) == [1, 16]
+
+
+# -- pinned batch curves ------------------------------------------------------
+
+
+def test_pinned_curve_interpolates_power_law_exactly():
+    """Log-log interpolation through power-law points reproduces the legacy
+    alpha model at every batch size — calibrations migrate loss-free."""
+    system, prof, impl = _store()
+    alpha = 0.15
+    curve = {b: 0.5 * b ** (alpha - 1) for b in (1, 8, 128)}
+    prof.pin(impl.name, "tpu-v5e", 1, curve)
+    work = impl.work_fn(700, 90)
+    for b in (1, 3, 8, 20, 77, 128):
+        assert prof.step_latency(impl, V5E, 1, work, b) == \
+            pytest.approx(0.5 * b ** alpha, rel=1e-9)
+    # clamped flat (per-item) beyond the measured range
+    assert prof.step_latency(impl, V5E, 1, work, 256) == \
+        pytest.approx(256 * 0.5 * 128 ** (alpha - 1), rel=1e-9)
+
+
+def test_single_point_pin_must_anchor_at_batch_one():
+    """A lone measurement at batch != 1 cannot feed the alpha fallback
+    (it would be misread as the batch-1 anchor and misprice every step)."""
+    with pytest.raises(ValueError):
+        _as_curve({4: 0.5})
+
+
+def test_plan_cache_keyed_on_search_mode():
+    """Toggling joint_batch must not serve stale cross-mode plans."""
+    from repro.core import MIN_LATENCY
+    from repro.configs.workflow_docingest import make_docingest_job
+    system = Murakkab.tpu_cluster(v5e=16, v5p=0, v4_harvest=0,
+                                  host_cores=32)
+    job = make_docingest_job(MIN_LATENCY)
+    dag = system.lower(job)
+    system.plan_admitted(dag, job)
+    system.scheduler.joint_batch = False
+    system.plan_admitted(dag, job)
+    assert system.plan_cache_hits == 0
+    assert system.plan_cache_misses == 2
+
+
+def test_pinned_curve_normalizes_noise_and_rejects_superlinear():
+    # a noisy bump is absorbed by the running minimum
+    assert _as_curve({1: 1.0, 4: 0.5, 8: 0.6}) == ((1, 1.0), (4, 0.5),
+                                                   (8, 0.5))
+    with pytest.raises(ValueError):
+        _as_curve({1: 1.0, 8: 0.05})    # 8x batch in 0.4x wall time
+    with pytest.raises(ValueError):
+        _as_curve({})
+    with pytest.raises(ValueError):
+        _as_curve({0: 1.0})
+    assert _curve_per_item(((1, 1.0), (4, 0.5)), 2) == \
+        pytest.approx(math.exp(math.log(1.0) / 2 + math.log(0.5) / 2))
+
+
+def test_single_point_pin_warns_on_batched_step():
+    system, prof, impl = _store()
+    prof.pin(impl.name, "tpu-v5e", 1, 0.5)
+    work = impl.work_fn(700, 90)
+    with pytest.warns(DeprecationWarning):
+        prof.step_latency(impl, V5E, 1, work, 4)
+    # curve pins do not warn
+    prof.pin(impl.name, "tpu-v5p", 1, {1: 0.5, 8: 0.1})
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        prof.step_latency(impl, CATALOG["tpu-v5p"], 1, work, 4)
+
+
+def test_pinned_batches_feed_the_search_grid():
+    system, prof, impl = _store()
+    prof.pin(impl.name, "tpu-v5e", 1, {1: 0.5, 8: 0.2, 32: 0.1})
+    assert prof.pinned_batches(impl.name, "tpu-v5e") == [1, 8, 32]
+    grid = system.scheduler._batch_grid(impl, V5E, impl.work_fn(700, 90),
+                                        72)
+    assert set(grid) >= {1, 8, 32, 64}   # calibrated points + max batch
+
+
+# -- joint vs sequential search -----------------------------------------------
+
+
+def _remainder_node(items=70):
+    return TaskNode(id="t", description="", agent="digest",
+                    work_items=items, chunkable=False, tokens_in=700,
+                    tokens_out=90)
+
+
+def test_joint_search_never_worse_and_shaves_remainder():
+    """The joint (count x batch) search meets or beats the sequential lever
+    order on the primary objective, and strictly wins on a remainder-heavy
+    item count (the divisor schedule avoids a below-knee remainder step)."""
+    from repro.core import MIN_COST, MIN_ENERGY, MIN_LATENCY
+    for constraint in (MIN_LATENCY, MIN_COST, MIN_ENERGY):
+        for items in (70, 72, 64, 100):
+            joint_sys = Murakkab.tpu_cluster(v5e=16, v5p=0, v4_harvest=0,
+                                             host_cores=32)
+            seq_sys = Murakkab.tpu_cluster(v5e=16, v5p=0, v4_harvest=0,
+                                           host_cores=32)
+            seq_sys.scheduler.joint_batch = False
+            node = _remainder_node(items)
+            j = joint_sys.scheduler.plan_task(node, (constraint,), 0.85)
+            s = seq_sys.scheduler.plan_task(node, (constraint,), 0.85)
+            obj = joint_sys.scheduler._objective
+            assert obj(j, constraint) <= obj(s, constraint) * (1 + 1e-9), \
+                (constraint, items)
+    # the strict win: 70 items, max batch 64 -> sequential charges a
+    # 6-item below-knee remainder the joint divisor schedule avoids
+    joint_sys = Murakkab.tpu_cluster(v5e=16, v5p=0, v4_harvest=0,
+                                     host_cores=32)
+    seq_sys = Murakkab.tpu_cluster(v5e=16, v5p=0, v4_harvest=0,
+                                   host_cores=32)
+    seq_sys.scheduler.joint_batch = False
+    node = _remainder_node(70)
+    j = joint_sys.scheduler.plan_task(node, (MIN_LATENCY,), 0.85)
+    s = seq_sys.scheduler.plan_task(node, (MIN_LATENCY,), 0.85)
+    assert j.est_latency_s < s.est_latency_s
+
+
+def test_joint_search_unchanged_when_items_divide_batch():
+    """No remainder, knee far below the max batch: both orders land on the
+    same max-batch configuration (the joint search is a superset)."""
+    from repro.core import MIN_COST
+    joint_sys = Murakkab.tpu_cluster(v5e=16, v5p=0, v4_harvest=0,
+                                     host_cores=32)
+    seq_sys = Murakkab.tpu_cluster(v5e=16, v5p=0, v4_harvest=0,
+                                   host_cores=32)
+    seq_sys.scheduler.joint_batch = False
+    node = _remainder_node(64)
+    j = joint_sys.scheduler.plan_task(node, (MIN_COST,), 0.85)
+    s = seq_sys.scheduler.plan_task(node, (MIN_COST,), 0.85)
+    assert j.est_usd <= s.est_usd * (1 + 1e-9)
