@@ -11,8 +11,12 @@ regresses when it moves in its *bad* direction by more than ``tolerance``
 
 - names containing ``quality``, ``saving``, ``warm_hit`` or ``hit_rate``
   are higher-is-better;
-- everything else (makespan/span/energy/$/preemptions/requeues) is
-  lower-is-better.
+- names containing ``resumed`` are *neutral*: reported, never gated —
+  more salvaged work-items usually means more preemptions happened, so
+  neither direction is a regression on its own (``wasted_dev_s`` is the
+  gated lower-is-better signal for the checkpoint/resume path);
+- everything else (makespan/span/energy/$/preemptions/requeues/
+  ``wasted_dev_s``) is lower-is-better.
 
 Integer-valued metrics (event counts: preemptions, requeues) get one unit
 of absolute slack on top of the relative tolerance — a 1→2 preemption move
@@ -31,10 +35,18 @@ import json
 import sys
 
 HIGHER_IS_BETTER = ("quality", "saving", "warm_hit", "hit_rate")
+# reported but never gated: value tracks event counts (e.g. work-items
+# salvaged by resume scales with how many preemptions occurred), so no
+# direction is inherently bad
+NEUTRAL = ("resumed",)
 
 
 def better_higher(name: str) -> bool:
     return any(tok in name for tok in HIGHER_IS_BETTER)
+
+
+def neutral(name: str) -> bool:
+    return any(tok in name for tok in NEUTRAL)
 
 
 def compare(baseline: dict, current: dict, tolerance: float) \
@@ -52,6 +64,9 @@ def compare(baseline: dict, current: dict, tolerance: float) \
         if base == cur:
             continue
         delta = cur - base
+        if neutral(name):
+            notes.append(f"{name}: {base} -> {cur} (neutral, not gated)")
+            continue
         bad = -delta if better_higher(name) else delta
         slack = tolerance * abs(base)
         if base.is_integer() and cur.is_integer():

@@ -121,7 +121,17 @@ def validate_tenant(tenant: str) -> str:
 
 @dataclass
 class ServedLedger:
-    """Device-seconds served per tenant class (feeds weighted-fair)."""
+    """Device-seconds served per tenant class (feeds weighted-fair).
+
+    Preemption refunds charge negative device-seconds. With work-item
+    checkpoint/resume (DESIGN.md §6.4) the refund is step-granular: the
+    victim keeps the charge for its completed batch steps and is refunded
+    the rest, so a resumed task's served total across attempts equals one
+    clean run — virtual time under ``weighted-fair`` is not distorted by
+    preemption. A refund never exceeds the task's original charge, so
+    class totals stay non-negative (a hypothesis property in
+    ``tests/test_checkpoint_resume.py``).
+    """
 
     served: dict[str, float] = field(default_factory=dict)
 

@@ -202,6 +202,40 @@ class ClusterManager:
         if inst.lease is not None and inst.lease.id in self._leases:
             self.release(inst.lease, t)
 
+    def audit(self):
+        """Assert the instance/lease bookkeeping invariants.
+
+        Used by tests around the preemption/eviction paths: (1) per-pool
+        usage equals the sum of live lease sizes and never exceeds
+        capacity; (2) every instance's lease, when still live, belongs to
+        the lease table and matches the instance's pool and device count;
+        (3) no two instances share a lease. Raises ``AssertionError`` with
+        the violated fact otherwise.
+        """
+        by_pool: dict[str, int] = {name: 0 for name in self.pools}
+        for lease in self._leases.values():
+            by_pool[lease.pool] += lease.n_devices
+        for name, p in self.pools.items():
+            assert self._used[name] == by_pool[name], (
+                f"pool {name}: used={self._used[name]} but live leases "
+                f"hold {by_pool[name]}")
+            assert 0 <= self._used[name] <= p.capacity, (
+                f"pool {name}: used={self._used[name]} outside "
+                f"[0, {p.capacity}]")
+        seen: set[int] = set()
+        for inst in self.instances:
+            if inst.lease is None:
+                continue
+            assert inst.lease.id not in seen, (
+                f"lease {inst.lease.id} held by two instances")
+            seen.add(inst.lease.id)
+            assert inst.lease.id in self._leases, (
+                f"instance {inst.impl}@{inst.pool} holds released lease "
+                f"{inst.lease.id} (dangling warm shell)")
+            assert self._leases[inst.lease.id] is inst.lease
+            assert inst.lease.pool == inst.pool
+            assert inst.lease.n_devices == inst.n_devices
+
     def utilization(self) -> dict[str, float]:
         """Allocated fraction per pool (0..1)."""
         return {name: self._used[name] / p.capacity

@@ -269,6 +269,38 @@ class ProfileStore:
             total += self.step_latency(impl, spec, n_devices, work, rem)
         return total
 
+    def completed_items(self, impl: AgentImpl, spec: DeviceSpec,
+                        n_devices: int, work: Work, batch: int, items: int,
+                        elapsed_s: float) -> tuple[int, float]:
+        """Invert the ``schedule_latency`` step schedule at ``elapsed_s``.
+
+        Returns ``(items_done, wall_s)``: how many work-items' batch steps
+        had *fully completed* after ``elapsed_s`` seconds of the schedule,
+        and the wall time those completed steps took. A step checkpoints
+        only at its end — a preempted in-flight step is discarded work —
+        so full steps complete every ``step_latency(batch)`` seconds and
+        the remainder step only at the schedule's very end. The simulator
+        uses this to salvage a preempted task's finished items
+        (DESIGN.md §6.4): re-running the residual then costs exactly
+        ``schedule_latency(items) - wall_s``, which is what keeps the
+        step-granular refund and estimate/actual parity exact.
+        """
+        b = max(int(batch), 1)
+        items = max(int(items), 0)
+        if items == 0 or elapsed_s <= 0:
+            return 0, 0.0
+        step_b = self.step_latency(impl, spec, n_devices, work, b)
+        full, rem = divmod(items, b)
+        # 1e-9 of slack so a preemption landing exactly on a step boundary
+        # credits the step that just finished
+        steps = min(int((elapsed_s + 1e-9) / max(step_b, 1e-12)), full)
+        done, wall = steps * b, steps * step_b
+        if steps == full and rem:
+            rem_lat = self.step_latency(impl, spec, n_devices, work, rem)
+            if elapsed_s + 1e-9 >= wall + rem_lat:
+                done, wall = items, wall + rem_lat
+        return done, wall
+
     def latency(self, impl: AgentImpl, spec: DeviceSpec, n_devices: int,
                 work: Work, batch: int = 1) -> float:
         """Per-work-item latency within a batch of ``batch`` items."""

@@ -125,14 +125,19 @@ class Scheduler:
 
     def estimate(self, node: TaskNode, impl: AgentImpl, pool: str,
                  n_devices: int, n_instances: int = 1, batch: int = 1,
-                 paths: int = 1, warm: bool = False) -> TaskConfig:
+                 paths: int = 1, warm: bool = False,
+                 items_done: int = 0) -> TaskConfig:
         """Cost out one candidate configuration for ``node``.
 
         Latency comes from the batched execution schedule
         (``ProfileStore.schedule_latency``: full steps plus a remainder
         step charged at its own size, DESIGN.md §7.2) — the same call the
         simulator's ``_duration`` makes, so estimates and actuals agree by
-        construction. Energy/$ accrue over compute device-seconds;
+        construction. ``items_done`` prices a *residual* attempt of a
+        preempted-and-checkpointed task (DESIGN.md §6.4): only the
+        remaining ``work_items - items_done`` items are scheduled, again
+        exactly mirroring ``_duration``, so parity also holds for resumed
+        tasks. Energy/$ accrue over compute device-seconds;
         weight-loading is an idle-power period covered by the pool floor.
         """
         self.evals += 1
@@ -140,7 +145,8 @@ class Scheduler:
         work = self._work_of(impl, node)
         if spec.kind == "cpu":
             batch = 1     # batching is an accelerator lever (weights reuse)
-        items_per_inst = math.ceil(node.work_items / n_instances)
+        remaining = max(node.work_items - items_done, 0)
+        items_per_inst = math.ceil(remaining / n_instances)
         compute = self.profiles.schedule_latency(impl, spec, n_devices,
                                                  work, batch, items_per_inst)
         lat = compute if warm else compute + impl.load_time_s
@@ -259,7 +265,11 @@ class Scheduler:
         its best batch rather than locking the count in at batch=1
         (DESIGN.md §7.2; ``joint_batch=False`` restores the sequential
         legacy order); (3) remaining parallelism levers — instance fan-out
-        and execution paths — against free resources right now.
+        and execution paths — against free resources right now. The
+        fan-out loop re-derives the batch grid per candidate ``k``: with
+        ``k`` instances the per-instance item count (and its remainder
+        step) changes, so the level-2 winner's batch size is no longer
+        knee/divisor-aligned.
 
         Level 3 expands *two* seeds when the joint search is on: the joint
         winner and the batch=1 winner (the sequential hierarchy's level-2
@@ -345,13 +355,35 @@ class Scheduler:
                                      best.n_instances, b, warm=best.warm)
                 if self._key(cand, order) < self._key(best, order):
                     best = cand
-            if node.chunkable and node.work_items > 1:
-                for k in _pow2_range(2, min(free_inst, node.work_items)):
-                    cand = self.estimate(node, impl, best.pool,
-                                         best.n_devices, k, best.batch,
-                                         warm=best.warm)
-                    if self._key(cand, order) < self._key(best, order):
-                        best = cand
+            # fan-out candidates are capped by what fits concurrently right
+            # now; guard the cap explicitly — _pow2_range(2, 1) would fall
+            # back to [2], offering a two-instance config the cluster
+            # cannot place (the simulator would degrade it to one instance,
+            # breaking estimate/actual parity)
+            hi_k = min(free_inst, node.work_items)
+            if node.chunkable and hi_k >= 2:
+                spec = CATALOG[self.cluster.pools[best.pool].device]
+                work = self._work_of(impl, node)
+                for k in _pow2_range(2, hi_k):
+                    if legacy_batch:
+                        batches = [best.batch]
+                    else:
+                        # re-derive the batch grid per fan-out candidate:
+                        # with k instances the per-instance item count (and
+                        # its remainder step) changes, so the level-2
+                        # winner's batch size is no longer knee/divisor-
+                        # aligned (DESIGN.md §7.2); keeping best.batch in
+                        # the grid preserves the old candidate set
+                        per_inst = math.ceil(node.work_items / k)
+                        batches = sorted(set(
+                            self._batch_grid(impl, spec, work, per_inst))
+                            | {min(best.batch, max(per_inst, 1))})
+                    for b in batches:
+                        cand = self.estimate(node, impl, best.pool,
+                                             best.n_devices, k, b,
+                                             warm=best.warm)
+                        if self._key(cand, order) < self._key(best, order):
+                            best = cand
             # Execution paths: only when quality leads, on harvestable slack.
             if order.seeks_quality:
                 harvest = st["harvestable"] // max(

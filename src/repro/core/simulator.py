@@ -27,9 +27,21 @@ Multi-tenant semantics (core/admission.py):
 - Harvest-class tenants hold preemptible leases. When a priority tenant
   cannot allocate, the engine reclaims harvest leases via
   ``ClusterManager.preempt_harvest``: the victims' in-flight tasks are
-  cancelled (energy/$ for the unexecuted remainder refunded), re-enqueued,
-  and both the truncated run (``note="preempted"``) and the re-execution
-  (``note="requeue"``) appear in the trace.
+  cancelled, re-enqueued, and both the truncated run (``note="preempted"``)
+  and the re-execution appear in the trace.
+- Work-item checkpoint/resume (DESIGN.md §6.4): a *chunkable* victim's
+  completed batch steps survive preemption — ``cancel_task`` inverts the
+  ``ProfileStore.schedule_latency`` step schedule over the compute window
+  (``ProfileStore.completed_items``), records the surviving item count on
+  the workflow state, and the requeued attempt executes only the residual
+  (``note="resume"``, composed with warmth as e.g. ``"resume+cold"``).
+  Refunds are step-granular: completed steps stay charged (their items are
+  never re-executed), the in-flight step is refunded (its items ride the
+  residual, which re-charges them), so a resumed task's total charge is
+  exactly ``schedule_latency(total items)`` across attempts. Non-chunkable
+  tasks keep the restart-from-scratch path: time-fraction refund of the
+  unexecuted remainder, ``note="requeue"``. Discarded-but-executed compute
+  accrues in ``SimReport.wasted_dev_s`` either way.
 """
 from __future__ import annotations
 
@@ -76,6 +88,8 @@ class SimReport:
     pool_busy_device_s: dict[str, float]
     preemptions: int = 0
     requeues: int = 0            # task re-executions caused by preemption
+    resumed_items: int = 0       # work-items salvaged by checkpoint/resume
+    wasted_dev_s: float = 0.0    # executed-then-discarded device-seconds
 
     def workflow_span(self, wf: str) -> float:
         """Arrival-to-finish seconds for one workflow (tenant latency)."""
@@ -109,6 +123,8 @@ class _WfState:
     started: set[str] = field(default_factory=set)
     finish: float = 0.0
     attempt: dict[str, int] = field(default_factory=dict)
+    # work-items checkpointed per task: survived preemption, never re-run
+    items_done: dict[str, int] = field(default_factory=dict)
 
 
 @dataclass
@@ -125,35 +141,55 @@ class _Running:
     dev_s: float
     pf: float
     note: str
+    n_inst: int               # instances actually acquired (may be < plan)
+    batch: int                # effective batch (CPU pools force 1)
+    items_done0: int          # items already checkpointed before this run
+    items_per_inst: int       # the split _duration charged (refund inverts it)
+    resumable: bool           # chunkable: completed steps survive preempt
 
 
 class Simulator:
     """Discrete-event engine executing plans against the modeled cluster."""
 
     def __init__(self, cluster: ClusterManager, library: AgentLibrary,
-                 profiles: ProfileStore):
+                 profiles: ProfileStore, resume: bool = True):
         self.cluster = cluster
         self.library = library
         self.profiles = profiles
+        # work-item checkpoint/resume of preempted chunkable tasks
+        # (DESIGN.md §6.4); False restores restart-from-scratch for every
+        # victim (the pre-resume baseline benchmarks compare against)
+        self.resume = resume
 
     # -- duration under actual warmth ------------------------------------------
     def _duration(self, node, cfg: TaskConfig, n_inst: int,
-                  new_instances: int) -> float:
+                  new_instances: int, items_done: int = 0) \
+            -> tuple[float, float, int]:
+        """Wall/compute seconds (and per-instance item count) of one run.
+
+        Returns ``(latency, compute, items_per_inst)``; the item split is
+        returned so ``cancel_task``'s refund inverts *exactly* the schedule
+        charged here (stored on ``_Running.items_per_inst``) rather than
+        re-deriving it.
+        """
         impl = self.library.impls[cfg.impl]
         spec = CATALOG[self.cluster.pools[cfg.pool].device]
         work = impl.work_fn(node.tokens_in, node.tokens_out)
         batch = 1 if spec.kind == "cpu" else cfg.batch
-        items = math.ceil(node.work_items / max(n_inst, 1))
+        remaining = max(node.work_items - items_done, 0)
+        items = math.ceil(remaining / max(n_inst, 1))
         # the same batched execution schedule the scheduler estimates with
         # (ProfileStore.schedule_latency: full steps + a remainder step at
-        # its own price): one source of truth for plan vs actual
+        # its own price): one source of truth for plan vs actual. A resumed
+        # attempt prices only the residual items (Scheduler.estimate takes
+        # the same items_done, preserving estimate/actual parity).
         compute = self.profiles.schedule_latency(impl, spec, cfg.n_devices,
                                                  work, batch, items)
         lat = compute
         if new_instances and not cfg.warm:
             # cfg.warm = provisioned capacity (PTU-style): always-on, no load
             lat += impl.load_time_s
-        return lat, compute
+        return lat, compute, items
 
     def _is_model(self, impl) -> bool:
         return impl.load_time_s > 0 or impl.arch is not None
@@ -189,6 +225,8 @@ class Simulator:
         running: dict[tuple[str, str], _Running] = {}
         lease_owner: dict[int, tuple[str, str]] = {}
         requeues = 0
+        resumed_items = 0
+        wasted_dev_s = 0.0
         events: list[tuple[float, int, str, object]] = []
         ctr = itertools.count()
         for wid, st in wfs.items():
@@ -212,9 +250,10 @@ class Simulator:
             return out
 
         def cancel_task(vwid: str, vtid: str):
-            """Preemption: roll a task back to pending, refund the unearned
-            energy/$ and release whatever it still holds."""
-            nonlocal requeues
+            """Preemption: roll a task back to pending, checkpoint the work
+            already finished (chunkable tasks), refund the unearned energy/$
+            and release whatever it still holds."""
+            nonlocal requeues, resumed_items, wasted_dev_s
             rec = running.pop((vwid, vtid), None)
             if rec is None:
                 return
@@ -231,26 +270,60 @@ class Simulator:
                 if inst in self.cluster.instances:
                     self.cluster.evict_instance(inst, t)
             spec = CATALOG[self.cluster.pools[rec.cfg.pool].device]
-            # refund the *compute* not yet executed: the charged dev_s covers
-            # compute only (weights-load is an idle-power period), so the
-            # fraction is measured over the compute window [compute_begin,
-            # end], not the whole run — a victim preempted mid-load gets a
-            # full refund
-            frac = (rec.end - max(t, rec.compute_begin)) / \
-                max(rec.end - rec.compute_begin, 1e-12)
-            frac = min(max(frac, 0.0), 1.0)
-            ledger.charge_active(spec, -rec.dev_s * frac,
+            # the charged dev_s covers compute only (weights-load is an
+            # idle-power period), so progress is measured over the compute
+            # window [compute_begin, end] — a victim preempted mid-load
+            # gets a full refund either way
+            window = max(rec.end - rec.compute_begin, 1e-12)
+            elapsed = min(max(t - rec.compute_begin, 0.0), window)
+            # executed device-seconds so far; dev_s spreads uniformly over
+            # the window (paths run concurrently, so the rate is
+            # ndev * paths even when the wall clock is path-multiplied)
+            exec_dev_s = rec.dev_s * (elapsed / window)
+            if rec.resumable and self.resume:
+                # checkpoint/resume: invert the step schedule over the
+                # compute window — completed batch steps survive, the
+                # in-flight step is discarded
+                impl = self.library.impls[rec.cfg.impl]
+                node = vst.dag.nodes[vtid]
+                work = impl.work_fn(node.tokens_in, node.tokens_out)
+                done, wall = self.profiles.completed_items(
+                    impl, spec, rec.cfg.n_devices, work, rec.batch,
+                    rec.items_per_inst, elapsed)
+                kept_items = min(done * rec.n_inst,
+                                 node.work_items - rec.items_done0)
+                if kept_items:
+                    vst.items_done[vtid] = rec.items_done0 + kept_items
+                    resumed_items += kept_items
+                # step-granular refund: completed steps stay charged (their
+                # items never re-run); the in-flight step is refunded — its
+                # items ride the residual requeue, which re-charges them,
+                # so the task's total charge across attempts is exactly
+                # schedule_latency(total items)
+                kept_dev_s = wall * rec.ndev * rec.cfg.paths
+                refund = max(rec.dev_s - kept_dev_s, 0.0)
+                wasted_dev_s += max(exec_dev_s - kept_dev_s, 0.0)
+            else:
+                # restart from scratch (non-chunkable / resume disabled):
+                # refund only the unexecuted remainder — the executed
+                # compute stays charged (that energy was really burned)
+                # and is all wasted, since the requeue re-runs everything
+                refund = rec.dev_s * (1.0 - elapsed / window)
+                wasted_dev_s += exec_dev_s
+            ledger.charge_active(spec, -refund,
                                  utilization=rec.pf, pool=rec.cfg.pool)
-            busy[rec.cfg.pool] = busy.get(rec.cfg.pool, 0.0) \
-                - rec.dev_s * frac
-            served.charge(vst.tenant, -rec.dev_s * frac)
+            busy[rec.cfg.pool] = busy.get(rec.cfg.pool, 0.0) - refund
+            served.charge(vst.tenant, -refund)
             requeues += 1
             trace.append(TraceEntry(vwid, vtid, rec.cfg.impl, rec.cfg.pool,
                                     rec.ndev, rec.start, t,
                                     note="preempted"))
             if log is not None:
+                kept = vst.items_done.get(vtid, 0)
                 log.append(f"[{t:8.1f}s] preempt {vwid}:{vtid} "
-                           f"({rec.ndev}x{rec.cfg.pool}); requeued")
+                           f"({rec.ndev}x{rec.cfg.pool}); requeued"
+                           + (f" ({kept} items checkpointed)" if kept
+                              else ""))
 
         def try_preempt(pool: str, n_needed: int) -> bool:
             """Reclaim harvest-class leases for a priority tenant."""
@@ -260,10 +333,14 @@ class Simulator:
             victims = self.cluster.preempt_harvest(pool, deficit, t)
             for lease in victims:
                 # idle warm instance on a preempted lease: drop the shell
+                # through the manager's eviction path so its bookkeeping
+                # (instance list + lease table) stays consistent; the lease
+                # itself was already released by preempt_harvest, which
+                # evict_instance tolerates
                 for inst in [i for i in self.cluster.instances
                              if i.lease is not None
                              and i.lease.id == lease.id]:
-                    self.cluster.instances.remove(inst)
+                    self.cluster.evict_instance(inst, t)
                 owner = lease_owner.pop(lease.id, None)
                 if owner is not None:
                     cancel_task(*owner)
@@ -355,7 +432,9 @@ class Simulator:
                         return False
                 leases.append(lease)
 
-            dur, compute = self._duration(node, cfg, n_inst, new_inst)
+            items_done = st.items_done.get(tid, 0) if self.resume else 0
+            dur, compute, per_inst = self._duration(node, cfg, n_inst,
+                                                    new_inst, items_done)
             pmult = cfg.paths if cfg.paths > 1 and not node.chunkable else 1.0
             dur *= pmult
             end = t + dur
@@ -371,8 +450,13 @@ class Simulator:
             served.charge(st.tenant, dev_s)
             st.started.add(tid)
             attempt = st.attempt.get(tid, 0)
-            note = ("requeue" if attempt else
-                    "cold" if new_inst else ("warm" if insts else ""))
+            # compose the note: restart kind + warmth, so preemption
+            # analysis sees a requeue that also paid a cold weights load
+            # ("requeue+cold") rather than losing the restart cost
+            restart = ("resume" if attempt and items_done else
+                       "requeue" if attempt else "")
+            warmth = "cold" if new_inst else ("warm" if insts else "")
+            note = "+".join(s for s in (restart, warmth) if s)
             for lease in leases:
                 lease_owner[lease.id] = (wid, tid)
             for inst in insts:
@@ -380,13 +464,18 @@ class Simulator:
                     lease_owner[inst.lease.id] = (wid, tid)
             running[(wid, tid)] = _Running(cfg, leases, insts, t, end,
                                            compute_begin, ndev, dev_s, pf,
-                                           note)
+                                           note, n_inst=n_inst,
+                                           batch=(1 if spec.kind == "cpu"
+                                                  else cfg.batch),
+                                           items_done0=items_done,
+                                           items_per_inst=per_inst,
+                                           resumable=node.chunkable)
             heapq.heappush(events, (end, next(ctr), "finish",
                                     (wid, tid, attempt)))
             if log is not None:
                 log.append(f"[{t:8.1f}s] start {wid}:{tid} on "
                            f"{ndev}x{cfg.pool} ({cfg.impl})"
-                           + (" [requeue]" if attempt else ""))
+                           + (f" [{restart}]" if restart else ""))
             return True
 
         while events:
@@ -473,6 +562,8 @@ class Simulator:
             pool_busy_device_s=busy,
             preemptions=self.cluster.preemptions - preempt0,
             requeues=requeues,
+            resumed_items=resumed_items,
+            wasted_dev_s=wasted_dev_s,
         )
 
     def _relabel_lease(self, inst: Instance, harvest: bool, t: float):

@@ -128,7 +128,8 @@ class Murakkab:
 
     def execute_many(self, jobs: dict[str, tuple[Job, float]],
                      policy: str | None = "fcfs",
-                     log: list | None = None) -> SimReport:
+                     log: list | None = None,
+                     resume: bool = True) -> SimReport:
         """Multi-tenant submission: {id: (job, arrival_s)}.
 
         Jobs enter an admission queue ordered by ``policy`` (core/admission:
@@ -137,7 +138,9 @@ class Murakkab:
         arrival (warm instances, devices held by earlier tenants) instead of
         planning every job upfront against an empty cluster. Each job's
         ``tenant_class`` decides its queue rank and whether its allocations
-        are preemptible (harvest class).
+        are preemptible (harvest class). ``resume=False`` disables work-item
+        checkpoint/resume of preempted tasks (DESIGN.md §6.4) — every
+        victim restarts from scratch, the pre-resume baseline.
 
         Admission-time planning goes through a plan cache keyed by (DAG
         structural signature, constraint spec, quality floor, cluster-state
@@ -153,7 +156,8 @@ class Murakkab:
 
             subs[wid] = Submission(dag=dag, plan=None, arrival=arrival,
                                    tenant=job.tenant_class, plan_fn=_plan)
-        sim = Simulator(self.cluster, self.library, self.profiles)
+        sim = Simulator(self.cluster, self.library, self.profiles,
+                        resume=resume)
         return sim.run(subs, log=log, policy=policy)
 
     def plan_admitted(self, dag: DAG, job: Job) -> ExecutionPlan:

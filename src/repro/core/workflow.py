@@ -95,7 +95,10 @@ class Job:
     # min acceptable impl quality: one float, or per-interface dict
     quality_floor: float | dict = 0.85
     # multi-tenant class: "priority" | "standard" | "harvest"
-    # (core/admission.py; harvest-class allocations are preemptible)
+    # (core/admission.py). Harvest-class allocations are preemptible; a
+    # preempted task's completed batch steps are checkpointed and the
+    # requeue resumes from the residual work-items (DESIGN.md §6.4), so
+    # harvest jobs lose at most one in-flight step per preemption.
     tenant_class: str = "standard"
 
     def __post_init__(self):

@@ -103,7 +103,7 @@ def test_estimate_actual_parity_with_remainder():
                     chunkable=True, tokens_in=700, tokens_out=90)
     cfg = system.scheduler.estimate(node, impl, "v5e", 1, batch=32)
     sim = Simulator(system.cluster, system.library, system.profiles)
-    dur, compute = sim._duration(node, cfg, n_inst=1, new_instances=1)
+    dur, compute, _ = sim._duration(node, cfg, n_inst=1, new_instances=1)
     assert dur == pytest.approx(cfg.est_latency_s, rel=1e-12)
     assert compute == pytest.approx(cfg.est_latency_s - impl.load_time_s,
                                     rel=1e-12)

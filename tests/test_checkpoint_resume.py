@@ -1,0 +1,281 @@
+"""Work-item checkpoint/resume of preempted harvest tasks (DESIGN.md §6.4).
+
+Covers the schedule inversion (``ProfileStore.completed_items``), the
+step-granular energy/$ refund, estimate/actual parity for resumed
+residuals, the resume-vs-restart win, the eviction bookkeeping of dropped
+warm shells, and hypothesis properties over random preemption times
+(ledger never negative, exact total charge, resume never slower).
+"""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CATALOG, MIN_LATENCY, Murakkab, Submission
+from repro.core.dag import DAG, TaskNode
+from repro.core.scheduler import ExecutionPlan
+from repro.core.simulator import Simulator
+
+V5E = CATALOG["tpu-v5e"]
+
+
+def _summarize_node(tid="t", items=12, chunkable=True):
+    return TaskNode(id=tid, description="", agent="summarize",
+                    work_items=items, chunkable=chunkable,
+                    tokens_in=900, tokens_out=120)
+
+
+def _summarize_dag(tid, items, chunkable=True):
+    return DAG([_summarize_node(tid, items, chunkable)])
+
+
+def _system(v5e=8, cores=16):
+    return Murakkab.tpu_cluster(v5e=v5e, v5p=0, v4_harvest=0,
+                                host_cores=cores)
+
+
+def _pinned_plan(system, node, n_devices=4, batch=1):
+    """A single-config plan (n_instances=1) so requeues reuse the exact
+    configuration and the accounting properties are checkable in closed
+    form."""
+    impl = max(system.library.impls_for(node.agent), key=lambda i: i.quality)
+    cfg = system.scheduler.estimate(node, impl, "v5e", n_devices,
+                                    n_instances=1, batch=batch)
+    return ExecutionPlan({node.id: cfg})
+
+
+def _preempt_at(system, plan_h, dag_h, arrival_p, resume=True,
+                items_p=4, plan_p=None):
+    """Run a harvest task preempted by a priority arrival at ``arrival_p``."""
+    dag_p = _summarize_dag("quick", items_p)
+    if plan_p is not None:
+        sub_p = Submission(dag_p, plan_p, arrival_p, tenant="priority")
+    else:
+        sub_p = Submission(dag_p, None, arrival_p, tenant="priority",
+                           plan_fn=lambda: system.scheduler.plan(
+                               dag_p, (MIN_LATENCY,), 0.8))
+    sim = Simulator(system.cluster, system.library, system.profiles,
+                    resume=resume)
+    rep = sim.run({
+        "h": Submission(dag_h, plan_h, 0.0, tenant="harvest"),
+        "p": sub_p,
+    }, policy="strict-priority")
+    return rep
+
+
+# -- schedule inversion -------------------------------------------------------
+
+
+def test_completed_items_inverts_schedule():
+    system = _system()
+    impl = system.library.impls["nvlm-72b"]
+    work = impl.work_fn(900, 120)
+    step4 = system.profiles.step_latency(impl, V5E, 4, work, 4)
+    # 10 items at batch 4: 2 full steps + a 2-item remainder step
+    done, wall = system.profiles.completed_items(impl, V5E, 4, work, 4, 10,
+                                                 0.0)
+    assert (done, wall) == (0, 0.0)
+    done, wall = system.profiles.completed_items(impl, V5E, 4, work, 4, 10,
+                                                 0.5 * step4)
+    assert (done, wall) == (0, 0.0)      # in-flight step is discarded
+    done, wall = system.profiles.completed_items(impl, V5E, 4, work, 4, 10,
+                                                 1.5 * step4)
+    assert done == 4 and wall == pytest.approx(step4)
+    # landing exactly on a boundary credits the step that just finished
+    done, wall = system.profiles.completed_items(impl, V5E, 4, work, 4, 10,
+                                                 2.0 * step4)
+    assert done == 8 and wall == pytest.approx(2 * step4)
+    # the remainder step only completes at the schedule's very end
+    rem = system.profiles.step_latency(impl, V5E, 4, work, 2)
+    done, _ = system.profiles.completed_items(impl, V5E, 4, work, 4, 10,
+                                              2 * step4 + 0.9 * rem)
+    assert done == 8
+    done, wall = system.profiles.completed_items(impl, V5E, 4, work, 4, 10,
+                                                 2 * step4 + rem)
+    assert done == 10 and wall == pytest.approx(2 * step4 + rem)
+
+
+def test_completed_items_caps_at_full_steps():
+    """Elapsed beyond the schedule never over-credits items."""
+    system = _system()
+    impl = system.library.impls["nvlm-72b"]
+    work = impl.work_fn(900, 120)
+    done, wall = system.profiles.completed_items(impl, V5E, 4, work, 4, 8,
+                                                 1e9)
+    sched = system.profiles.schedule_latency(impl, V5E, 4, work, 4, 8)
+    assert done == 8 and wall == pytest.approx(sched)
+
+
+# -- estimate/actual parity for residuals ------------------------------------
+
+
+def test_residual_estimate_matches_simulator_duration():
+    """Scheduler.estimate(items_done=d) and Simulator._duration price the
+    residual through the same schedule_latency call — parity by
+    construction, including the warm (no-load) case."""
+    system = _system()
+    node = _summarize_node(items=11)
+    impl = max(system.library.impls_for("summarize"),
+               key=lambda i: i.quality)
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    for d in (0, 1, 4, 7, 10):
+        est = system.scheduler.estimate(node, impl, "v5e", 4, batch=4,
+                                        warm=True, items_done=d)
+        dur, compute, _ = sim._duration(node, est, n_inst=1,
+                                        new_instances=0, items_done=d)
+        assert dur == pytest.approx(est.est_latency_s)
+        assert compute == pytest.approx(system.profiles.schedule_latency(
+            impl, V5E, 4, impl.work_fn(900, 120), 4, 11 - d))
+
+
+# -- end-to-end resume --------------------------------------------------------
+
+
+def test_resume_executes_residual_only():
+    system = _system()
+    dag_h = _summarize_dag("long", 400)
+    plan_h = system.scheduler.plan(dag_h, (MIN_LATENCY,), 0.8)
+    rep = _preempt_at(system, plan_h, dag_h, arrival_p=10.0)
+    assert rep.preemptions >= 1
+    assert rep.resumed_items > 0
+    notes = {e.note.split("+")[0] for e in rep.trace}
+    assert "resume" in notes and "requeue" not in notes
+    assert rep.per_workflow["h"]["finish"] > 0
+    assert rep.wasted_dev_s >= 0.0
+    system.cluster.audit()
+
+
+def test_nonchunkable_task_restarts_from_scratch():
+    """Non-chunkable victims keep the legacy restart path: no checkpoint,
+    note stays a requeue, wasted covers all executed compute."""
+    system = _system()
+    dag_h = _summarize_dag("long", 400, chunkable=False)
+    plan_h = system.scheduler.plan(dag_h, (MIN_LATENCY,), 0.8)
+    rep = _preempt_at(system, plan_h, dag_h, arrival_p=10.0)
+    assert rep.preemptions >= 1
+    assert rep.resumed_items == 0
+    notes = {e.note.split("+")[0] for e in rep.trace}
+    assert "requeue" in notes and "resume" not in notes
+    assert rep.wasted_dev_s > 0.0
+
+
+def test_requeue_note_composes_cold_start():
+    """A requeued task that pays a fresh weights load reports both facts
+    ("resume+cold"/"requeue+cold"), not just the requeue."""
+    system = _system(v5e=8)
+    dag_h = _summarize_dag("long", 400)
+    plan_h = system.scheduler.plan(dag_h, (MIN_LATENCY,), 0.8)
+    # priority job large enough that the victim's warm instance is evicted
+    # while it waits, forcing a cold restart of the resumed attempt
+    rep = _preempt_at(system, plan_h, dag_h, arrival_p=10.0, items_p=64)
+    restarts = [e.note for e in rep.trace
+                if e.note.split("+")[0] in ("resume", "requeue")]
+    assert restarts
+    assert all("+" in n for n in restarts), restarts
+    assert any(n.endswith("+cold") or n.endswith("+warm")
+               for n in restarts)
+
+
+def test_resume_beats_restart_wasted_and_span():
+    """The headline claim: checkpoint/resume strictly reduces wasted
+    device-seconds and never lengthens the victim's span."""
+    def run(resume):
+        system = _system()
+        dag_h = _summarize_dag("long", 400)
+        plan_h = system.scheduler.plan(dag_h, (MIN_LATENCY,), 0.8)
+        return _preempt_at(system, plan_h, dag_h, 10.0, resume=resume)
+
+    with_resume, restart = run(True), run(False)
+    assert with_resume.preemptions == restart.preemptions >= 1
+    assert with_resume.wasted_dev_s < restart.wasted_dev_s
+    assert with_resume.workflow_span("h") <= restart.workflow_span("h") + 1e-9
+    # the priority tenant is untouched by the victim's resume path
+    assert with_resume.workflow_span("p") == \
+        pytest.approx(restart.workflow_span("p"))
+
+
+def test_dropped_warm_shell_keeps_cluster_consistent():
+    """Preempting the lease under an *idle* warm instance routes through
+    evict_instance: no dangling shell, usage matches live leases."""
+    system = _system()
+    dag_h = _summarize_dag("long", 8)       # short: finishes, stays warm
+    plan_h = system.scheduler.plan(dag_h, (MIN_LATENCY,), 0.8)
+    dag_p = _summarize_dag("quick", 64)
+    sim = Simulator(system.cluster, system.library, system.profiles)
+    rep = sim.run({
+        "h": Submission(dag_h, plan_h, 0.0, tenant="harvest"),
+        "p": Submission(dag_p, None, 30.0, tenant="priority",
+                        plan_fn=lambda: system.scheduler.plan(
+                            dag_p, (MIN_LATENCY,), 0.8)),
+    }, policy="strict-priority")
+    assert rep.per_workflow["p"]["finish"] > 0
+    system.cluster.audit()
+    # no instance survived on a released lease
+    for inst in system.cluster.instances:
+        assert inst.lease is None or \
+            system.cluster.lease_active(inst.lease)
+
+
+# -- hypothesis: random preemption times --------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.5, 30.0), st.integers(2, 64), st.booleans())
+def test_preemption_accounting_properties(arrival, batch, resume):
+    """Over random preemption times: (1) refunds never drive pool busy
+    device-seconds negative; (2) a resumed run charges exactly
+    schedule_latency(total items) worth of compute across attempts;
+    (3) resume is never slower than restart."""
+    system = _system()
+    node = _summarize_node("long", items=200)
+    node_p = _summarize_node("quick", items=4)
+    plan_h = _pinned_plan(system, node, n_devices=4, batch=batch)
+    plan_p = _pinned_plan(system, node_p, n_devices=4, batch=1)
+    dag_h = DAG([node])
+    rep = _preempt_at(system, plan_h, dag_h, arrival_p=arrival,
+                      resume=resume, plan_p=plan_p)
+    assert all(v >= -1e-9 for v in rep.pool_busy_device_s.values()), \
+        rep.pool_busy_device_s
+    assert rep.wasted_dev_s >= -1e-9
+    assert math.isclose(rep.energy_wh, rep.active_wh + rep.idle_wh,
+                        rel_tol=1e-9)
+    system.cluster.audit()
+    if resume:
+        # exact charge: with both configs pinned (n_instances=1, fixed
+        # count/batch), the pool's total busy device-seconds equal one
+        # clean run of each task's full schedule — the preempted victim's
+        # kept steps + residual re-charge sum to exactly
+        # schedule_latency(total items), never more, never less
+        impl = system.library.impls[plan_h[node.id].impl]
+        work = impl.work_fn(node.tokens_in, node.tokens_out)
+        expected_h = system.profiles.schedule_latency(
+            impl, V5E, 4, work, batch, node.work_items) * 4
+        impl_p = system.library.impls[plan_p[node_p.id].impl]
+        work_p = impl_p.work_fn(node_p.tokens_in, node_p.tokens_out)
+        expected_p = system.profiles.schedule_latency(
+            impl_p, V5E, 4, work_p, 1, node_p.work_items) * 4
+        v5e_busy = rep.pool_busy_device_s.get("v5e", 0.0)
+        assert math.isclose(v5e_busy, expected_h + expected_p,
+                            rel_tol=1e-9, abs_tol=1e-9), \
+            (v5e_busy, expected_h, expected_p, rep.preemptions)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.5, 30.0), st.integers(2, 64))
+def test_resume_never_slower_than_restart(arrival, batch):
+    """Same preemption point, same config: the resumed victim finishes no
+    later than the restarted one."""
+    spans = {}
+    for resume in (True, False):
+        system = _system()
+        node = _summarize_node("long", items=200)
+        plan_h = _pinned_plan(system, node, n_devices=4, batch=batch)
+        rep = _preempt_at(system, plan_h, DAG([node]), arrival_p=arrival,
+                          resume=resume)
+        spans[resume] = (rep.workflow_span("h"), rep.preemptions,
+                         rep.wasted_dev_s)
+    assert spans[True][1] == spans[False][1]      # same preemption count
+    assert spans[True][0] <= spans[False][0] + 1e-9
+    if spans[True][1]:
+        assert spans[True][2] <= spans[False][2] + 1e-9

@@ -147,14 +147,19 @@ def test_priority_preempts_harvest_lease():
     assert rep.requeues >= 1
     notes = [e.note for e in rep.trace]
     assert "preempted" in notes         # the truncated harvest run
-    assert "requeue" in notes           # its re-execution
+    # its re-execution: the chunkable victim resumes from its checkpoint
+    # (note composes the restart kind with warmth, e.g. "resume+warm")
+    resumed = [n for n in notes if n.split("+")[0] == "resume"]
+    assert resumed
+    assert rep.resumed_items > 0
     # the priority task ran immediately at its arrival
     quick = [e for e in rep.trace if e.workflow == "p"][0]
     assert quick.start == pytest.approx(10.0)
     # the harvest workflow still finished (re-enqueued, not dropped)
     assert rep.per_workflow["h"]["finish"] > 0
     pre = [e for e in rep.trace if e.note == "preempted"][0]
-    req = [e for e in rep.trace if e.note == "requeue"][0]
+    req = [e for e in rep.trace
+           if e.note.split("+")[0] in ("resume", "requeue")][0]
     assert pre.end <= req.start + 1e-9  # requeue strictly after preemption
 
 
