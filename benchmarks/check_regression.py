@@ -9,12 +9,16 @@ Compares the ``metrics`` maps of two benchmark JSON files (written by
 regresses when it moves in its *bad* direction by more than ``tolerance``
 (relative, default 20%):
 
-- names containing ``quality``, ``saving``, ``warm_hit`` or ``hit_rate``
-  are higher-is-better;
-- names containing ``resumed`` are *neutral*: reported, never gated —
-  more salvaged work-items usually means more preemptions happened, so
-  neither direction is a regression on its own (``wasted_dev_s`` is the
-  gated lower-is-better signal for the checkpoint/resume path);
+- names containing ``quality``, ``saving``, ``warm_hit``, ``hit_rate``,
+  ``attainment``, ``goodput`` or ``completed`` are higher-is-better
+  (serving: SLO attainment, goodput, workflows drained at fixed offered
+  load);
+- names containing ``resumed`` or ``scale_actions`` are *neutral*:
+  reported, never gated — more salvaged work-items usually means more
+  preemptions happened, and autoscaler activity tracks the policy's
+  tick/cooldown interplay, so neither direction is a regression on its
+  own (``wasted_dev_s`` is the gated lower-is-better signal for the
+  checkpoint/resume path, energy/attainment for autoscaling);
 - everything else (makespan/span/energy/$/preemptions/requeues/
   ``wasted_dev_s``) is lower-is-better.
 
@@ -34,11 +38,13 @@ import argparse
 import json
 import sys
 
-HIGHER_IS_BETTER = ("quality", "saving", "warm_hit", "hit_rate")
+HIGHER_IS_BETTER = ("quality", "saving", "warm_hit", "hit_rate",
+                    "attainment", "goodput", "completed")
 # reported but never gated: value tracks event counts (e.g. work-items
-# salvaged by resume scales with how many preemptions occurred), so no
+# salvaged by resume scales with how many preemptions occurred, scale
+# actions with the autoscaler's tick/cooldown interplay), so no
 # direction is inherently bad
-NEUTRAL = ("resumed",)
+NEUTRAL = ("resumed", "scale_actions")
 
 
 def better_higher(name: str) -> bool:

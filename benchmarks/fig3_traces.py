@@ -2,15 +2,25 @@
 
 Baseline (fixed, sequential) vs the three Murakkab STT configurations.
 Emits ASCII traces + the speedup headline (~3.4x).
+
+``--trace-limit`` caps each rendered trace at N evenly-subsampled task
+rows (``render_trace``'s ``max_rows``); 0 disables the cap. Open-loop
+serving runs produce tens of thousands of trace rows — the cap keeps the
+ASCII view readable and O(limit) instead of O(events).
 """
 from __future__ import annotations
+
+import argparse
 
 from repro.core.simulator import render_trace
 
 from .paper_eval import PAPER_TARGETS, run_all
 
+DEFAULT_TRACE_LIMIT = 200
 
-def run(verbose: bool = True) -> list[tuple[str, float, str]]:
+
+def run(verbose: bool = True,
+        trace_limit: int = DEFAULT_TRACE_LIMIT) -> list[tuple[str, float, str]]:
     res = run_all()
     rows: list[tuple[str, float, str]] = []
     for name, (mk, wh, rep) in res.items():
@@ -20,12 +30,17 @@ def run(verbose: bool = True) -> list[tuple[str, float, str]]:
         if verbose:
             sim = rep.sim if hasattr(rep, "sim") else rep
             print(f"\n=== {name} ===")
-            print(render_trace(sim))
+            print(render_trace(sim, max_rows=trace_limit))
     speed = res["baseline"][0] / res["cpu"][0]
     rows.append(("fig3/speedup_x", round(speed, 2), "paper~3.4x"))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace-limit", type=int, default=DEFAULT_TRACE_LIMIT,
+                    help="max task rows per rendered trace, evenly "
+                         "subsampled (0 = no cap)")
+    args = ap.parse_args()
+    for r in run(trace_limit=args.trace_limit):
         print(",".join(map(str, r)))

@@ -61,3 +61,13 @@ def make_docingest_job(constraints=None, documents=PAPER_DOCS):
         inputs=documents,
         constraints=MIN_COST if constraints is None else constraints,
         quality_floor={"parse_doc": 0.85, "digest": 0.85, "embed": 0.85})
+
+
+# -- open-loop serving preset (core/arrivals.py) ------------------------------
+# Document ingest is throughput-oriented batch work (unloaded ~21 s): a
+# moderate share with a looser SLO than RAG — ingest can queue.
+from ..core.arrivals import ServingPreset, register_preset  # noqa: E402
+
+SERVING_PRESET = register_preset(ServingPreset(
+    scenario="docingest", make_job=make_docingest_job, weight=0.25,
+    base_slo_s=120.0))

@@ -73,3 +73,12 @@ def make_rag_job(constraints=None, queries=RAG_QUERIES):
         # the retrieve floor to force the dense/hybrid route.
         quality_floor={"retrieve": 0.8, "rerank": 0.85, "synthesize": 0.85,
                        "embed": 0.85})
+
+
+# -- open-loop serving preset (core/arrivals.py) ------------------------------
+# RAG is the interactive majority of the serving mix: short spans (unloaded
+# ~21 s), tight SLO, highest arrival share.
+from ..core.arrivals import ServingPreset, register_preset  # noqa: E402
+
+SERVING_PRESET = register_preset(ServingPreset(
+    scenario="rag", make_job=make_rag_job, weight=0.60, base_slo_s=90.0))

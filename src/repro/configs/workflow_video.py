@@ -151,3 +151,14 @@ def make_declarative_job(constraints=None):
         quality_floor={"speech_to_text": 0.97, "object_detect": 0.90,
                        "summarize": 0.96, "frame_extract": 0.9,
                        "embed": 0.9})
+
+
+# -- open-loop serving preset (core/arrivals.py) ------------------------------
+# Video understanding is the heavy tail of the serving mix: long chunkable
+# pipelines that dominate device-seconds, so it gets a small arrival share
+# and a generous span SLO (unloaded makespan ~105 s on the 64x v5e cluster).
+from ..core.arrivals import ServingPreset, register_preset  # noqa: E402
+
+SERVING_PRESET = register_preset(ServingPreset(
+    scenario="video", make_job=make_declarative_job, weight=0.15,
+    base_slo_s=360.0))

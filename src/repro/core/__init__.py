@@ -15,6 +15,11 @@ from .admission import (POLICIES, TENANT_CLASSES, Admission, AdmissionPolicy,
                         FCFS, StrictPriority, WeightedFair, get_policy)
 from .agents import (AgentImpl, AgentInterface, AgentLibrary, Work,
                      default_library)
+from .arrivals import (DEFAULT_TENANT_SHARES, SERVING_PRESETS, ArrivalEvent,
+                       ArrivalProcess, MMPPArrivals, PoissonArrivals,
+                       ServingPreset, TraceArrivals, default_mix,
+                       register_preset)
+from .autoscale import Autoscaler, PoolPolicy, ScaleAction
 from .cluster import ClusterManager, Instance, Pool
 from .constraints import (Budget, Constraint, ConstraintSpec, Deadline,
                           Lexicographic, MaxQuality, MinCost, MinEnergy,
@@ -25,8 +30,8 @@ from .energy import (CATALOG, DeviceSpec, EnergyLedger, batch_knee,
 from .orchestrator import LLMPlanner, RulePlanner, dag_creation_overhead
 from .profiles import Profile, ProfileStore
 from .scheduler import ExecutionPlan, Scheduler, TaskConfig
-from .simulator import (SimReport, Simulator, Submission, TraceEntry,
-                        render_trace)
+from .simulator import (OpenLoopReport, SimReport, Simulator, Submission,
+                        TraceEntry, render_trace)
 from .spec import (ARTIFACTS, SCENARIOS, Artifact, ArtifactRegistry,
                    CardinalityModel, InputSet, Scenario, ScenarioRegistry,
                    TaskSpec, TokenModel, build_node, input_artifacts,
@@ -45,7 +50,12 @@ __all__ = [
     "batch_roofline_latency", "roofline_latency",
     "LLMPlanner", "RulePlanner", "dag_creation_overhead",
     "Profile", "ProfileStore", "ExecutionPlan", "Scheduler", "TaskConfig",
-    "SimReport", "Simulator", "Submission", "TraceEntry", "render_trace",
+    "OpenLoopReport", "SimReport", "Simulator", "Submission", "TraceEntry",
+    "render_trace",
+    "DEFAULT_TENANT_SHARES", "SERVING_PRESETS", "ArrivalEvent",
+    "ArrivalProcess", "MMPPArrivals", "PoissonArrivals", "ServingPreset",
+    "TraceArrivals", "default_mix", "register_preset",
+    "Autoscaler", "PoolPolicy", "ScaleAction",
     "JobResult", "Murakkab",
     "ARTIFACTS", "SCENARIOS", "Artifact", "ArtifactRegistry",
     "CardinalityModel", "InputSet", "Scenario", "ScenarioRegistry",

@@ -44,6 +44,11 @@ class AdmissionPolicy:
     """Orders ready work across tenants; subclasses define the key."""
 
     name = "base"
+    # dynamic policies derive keys from state that moves between dispatch
+    # passes (e.g. WFQ virtual time); static policies key on immutable
+    # admission facts, so the event engine may sort each workflow once at
+    # admission and keep it in a persistent heap (DESIGN.md §8)
+    dynamic = False
 
     def key(self, adm: Admission, served: dict[str, float]) -> tuple:
         """Sort key for one admission; lower dispatches first."""
@@ -78,6 +83,7 @@ class WeightedFair(AdmissionPolicy):
     virtual time (device-seconds served / weight) goes first."""
 
     name = "weighted-fair"
+    dynamic = True
 
     def __init__(self, weights: dict[str, float] | None = None):
         self.weights = dict(weights or

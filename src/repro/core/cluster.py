@@ -36,20 +36,40 @@ class Pool:
         return CATALOG[self.device]
 
 
-@dataclass(frozen=True)
 class Lease:
-    """A granted device allocation (preemptible when ``harvest``)."""
+    """A granted device allocation (preemptible when ``harvest``).
 
-    id: int
-    pool: str
-    n_devices: int
-    t_start: float
-    harvest: bool = False      # preemptible allocation
+    A plain ``__slots__`` class rather than a frozen dataclass: the engine
+    mints one per allocation on its hot path, and slot assignment is several
+    times cheaper than the frozen-dataclass ``object.__setattr__`` chain.
+    Only ``harvest`` is ever reassigned (the engine's lease relabeling);
+    treat everything else as immutable.
+    """
+
+    __slots__ = ("id", "pool", "n_devices", "t_start", "harvest")
+
+    def __init__(self, id: int, pool: str, n_devices: int, t_start: float,
+                 harvest: bool = False):
+        self.id = id
+        self.pool = pool
+        self.n_devices = n_devices
+        self.t_start = t_start
+        self.harvest = harvest            # preemptible allocation
+
+    def __repr__(self):
+        return (f"Lease(id={self.id}, pool={self.pool!r}, "
+                f"n_devices={self.n_devices}, t_start={self.t_start}, "
+                f"harvest={self.harvest})")
 
 
-@dataclass
+@dataclass(eq=False, slots=True)
 class Instance:
-    """A warm model instance: weights resident on a device group."""
+    """A warm model instance: weights resident on a device group.
+
+    Identity equality (``eq=False``): instances are unique live objects,
+    and the eviction path removes them from lists — value equality would
+    make every ``list.remove`` compare all fields of every element.
+    """
 
     impl: str
     pool: str
@@ -71,6 +91,33 @@ class ClusterManager:
         self._dags: dict[str, DAG] = {}
         self._done: dict[str, set[str]] = {}
         self.preemptions: int = 0
+        # dirty-flag-cached digest (DESIGN.md §8): recomputed only after a
+        # mutation that the planner could observe (alloc/release/instance
+        # add/evict/capacity change) instead of on every admission
+        self._digest: tuple | None = None
+        # per-pool availability epoch: bumped whenever a blocked task could
+        # newly fit (devices freed, capacity raised, preemptible supply
+        # appeared). The simulator's dispatch memo skips re-attempting
+        # tasks whose pool epoch hasn't moved since they last failed.
+        self.free_epoch: dict[str, int] = {p.name: 0 for p in pools}
+        # sum of all per-pool epoch bumps: lets the dispatcher prove a
+        # whole re-scan pass would be a no-op (nothing became available)
+        self.epoch_total: int = 0
+        # capacity timeline per pool: [(t, capacity), ...] — the idle-power
+        # floor integrates over this (autoscaled pools stop paying idle for
+        # capacity they scaled away)
+        self._cap_log: dict[str, list[tuple[float, int]]] = {
+            p.name: [(0.0, p.capacity)] for p in pools}
+        # warm-instance index: (impl, pool, n_devices) -> instances, so the
+        # engine's reuse scan is O(matching) not O(all instances)
+        self._inst_index: dict[tuple[str, str, int], list[Instance]] = {}
+        # incrementally-maintained pending-task count per agent interface
+        # (upcoming_demand used to rescan every registered DAG)
+        self._demand: dict[str, int] = {}
+        # set when some interface's pending count just hit zero — the only
+        # moment rebalance() can newly reclaim instances, so the engine
+        # gates its per-finish rebalance call on this
+        self.demand_zeroed: bool = False
 
     # -- allocation ------------------------------------------------------------
     def free(self, pool: str) -> int:
@@ -81,11 +128,17 @@ class ClusterManager:
     def alloc(self, pool: str, n: int, t: float,
               harvest: bool = False) -> Lease | None:
         """Grant ``n`` devices, or None when they don't fit."""
-        if n <= 0 or self.free(pool) < n:
+        if n <= 0 or self.pools[pool].capacity - self._used[pool] < n:
             return None
         self._used[pool] += n
         lease = Lease(next(self._ids), pool, n, t, harvest=harvest)
         self._leases[lease.id] = lease
+        self._digest = None
+        if harvest:
+            # new preemptible supply: a blocked priority task that could
+            # not preempt its way in before may fit now
+            self.free_epoch[pool] += 1
+            self.epoch_total += 1
         return lease
 
     def release(self, lease: Lease, t: float):
@@ -94,6 +147,46 @@ class ClusterManager:
             raise KeyError(f"double release of lease {lease.id}")
         del self._leases[lease.id]
         self._used[lease.pool] -= lease.n_devices
+        self._digest = None
+        self.free_epoch[lease.pool] += 1
+        self.epoch_total += 1
+
+    # -- elastic capacity (core/autoscale.py) -----------------------------------
+    def set_capacity(self, pool: str, capacity: int, t: float) -> int:
+        """Resize a pool (autoscaler lever); returns the applied capacity.
+
+        Never shrinks below the devices currently allocated (live leases are
+        pinned demand — the autoscaler cannot preempt by resizing), and
+        records the change on the capacity timeline so the idle-power floor
+        integrates capacity *over time* instead of charging the final size
+        for the whole run.
+        """
+        p = self.pools[pool]
+        capacity = max(int(capacity), self._used[pool])
+        if capacity == p.capacity:
+            return capacity
+        grew = capacity > p.capacity
+        p.capacity = capacity
+        self._cap_log[pool].append((t, capacity))
+        self._digest = None
+        if grew:
+            self.free_epoch[pool] += 1
+            self.epoch_total += 1
+        return capacity
+
+    def capacity_device_seconds(self, pool: str, until: float) -> float:
+        """∫ capacity dt over [0, until] (the idle-floor integral)."""
+        log = self._cap_log[pool]
+        total = 0.0
+        for (t0, cap), (t1, _) in zip(log, log[1:]):
+            total += cap * (min(t1, until) - min(t0, until))
+        t_last, cap_last = log[-1]
+        total += cap_last * max(until - t_last, 0.0)
+        return total
+
+    def capacity_log(self, pool: str) -> list[tuple[float, int]]:
+        """The pool's capacity timeline [(t, capacity), ...]."""
+        return list(self._cap_log[pool])
 
     def lease_active(self, lease: Lease) -> bool:
         """True while the lease still holds devices (not yet released)."""
@@ -144,32 +237,51 @@ class ClusterManager:
         makes the admission-time plan cache sound (DESIGN.md §7). Instance
         busy-times and lease identities are deliberately excluded — the
         planner never reads them.
+
+        Cached behind a dirty flag: ``alloc``/``release`` (which covers
+        ``preempt_harvest`` and ``evict_instance``), ``add_instance`` and
+        ``set_capacity`` invalidate; every other read returns the memo, so
+        admission-time plan-cache lookups stop rescanning pools/instances.
+        Pool capacities are part of the digest because the autoscaler makes
+        them dynamic and the planner reads them.
         """
-        return (tuple(sorted(self._used.items())),
+        if self._digest is None:
+            self._digest = (
+                tuple(sorted(self._used.items())),
+                tuple(sorted((name, p.capacity)
+                             for name, p in self.pools.items())),
                 frozenset((i.impl, i.pool) for i in self.instances))
+        return self._digest
 
     # -- workflow awareness ------------------------------------------------------
     def register_workflow(self, wf_id: str, dag: DAG):
         """Announce an admitted workflow's DAG (feeds upcoming_demand)."""
         self._dags[wf_id] = dag
         self._done[wf_id] = set()
+        d = self._demand
+        for node in dag.nodes.values():
+            d[node.agent] = d.get(node.agent, 0) + 1
 
     def complete_task(self, wf_id: str, task_id: str):
         """Mark a task done; fully-done workflows stop counting as demand."""
-        if wf_id in self._done:
-            self._done[wf_id].add(task_id)
-            if self._done[wf_id] >= set(self._dags[wf_id].nodes):
+        done = self._done.get(wf_id)
+        if done is not None and task_id not in done:
+            done.add(task_id)
+            agent = self._dags[wf_id].nodes[task_id].agent
+            self._demand[agent] -= 1
+            if self._demand[agent] == 0:
+                self.demand_zeroed = True
+            if len(done) >= len(self._dags[wf_id].nodes):
                 del self._dags[wf_id], self._done[wf_id]
 
     def upcoming_demand(self) -> dict[str, int]:
-        """Pending task count per agent interface, across registered DAGs."""
-        demand: dict[str, int] = {}
-        for wf_id, dag in self._dags.items():
-            done = self._done[wf_id]
-            for tid, node in dag.nodes.items():
-                if tid not in done:
-                    demand[node.agent] = demand.get(node.agent, 0) + 1
-        return demand
+        """Pending task count per agent interface, across registered DAGs.
+
+        Maintained incrementally (+1 per node at ``register_workflow``, -1
+        at ``complete_task``) — the seed rescanned every registered DAG on
+        each call, which the open-loop rebalance cadence can't afford.
+        """
+        return {agent: n for agent, n in self._demand.items() if n > 0}
 
     # -- warm instances ------------------------------------------------------------
     def find_instance(self, impl: str, t: float) -> Instance | None:
@@ -177,20 +289,34 @@ class ClusterManager:
         cands = [i for i in self.instances if i.impl == impl]
         return min(cands, key=lambda i: i.busy_until) if cands else None
 
+    def warm_instances(self, impl: str, pool: str,
+                       n_devices: int) -> list[Instance]:
+        """Instances matching (impl, pool, n_devices) exactly — O(matching)
+        via the instance index (the simulator's reuse scan)."""
+        return self._inst_index.get((impl, pool, n_devices), ())
+
     def add_instance(self, inst: Instance):
         """Track a newly-provisioned warm model instance."""
         self.instances.append(inst)
+        key = (inst.impl, inst.pool, inst.n_devices)
+        self._inst_index.setdefault(key, []).append(inst)
+        self._digest = None
 
     def rebalance(self, library, t: float) -> list[str]:
         """Reclaim warm instances for interfaces with no upcoming demand.
 
         Returns a log of actions (tested; the paper's Whisper->Llama example).
         """
-        demand = self.upcoming_demand()
+        # only interfaces whose pending count sits at zero can lose
+        # instances — when none do (the common case), skip the scan
+        dead = {iface for iface, n in self._demand.items() if n <= 0}
+        if not dead:
+            return []
         actions = []
+        impls = library.impls
         for inst in list(self.instances):
-            iface = library.impls[inst.impl].interface
-            if demand.get(iface, 0) == 0 and inst.busy_until <= t:
+            iface = impls[inst.impl].interface
+            if iface in dead and inst.busy_until <= t:
                 self.evict_instance(inst, t)
                 actions.append(f"reclaim {inst.impl} ({inst.n_devices} dev "
                                f"of {inst.pool}): no upcoming {iface} demand")
@@ -199,6 +325,8 @@ class ClusterManager:
     def evict_instance(self, inst: Instance, t: float):
         """Remove a warm instance and free its devices."""
         self.instances.remove(inst)
+        self._inst_index[(inst.impl, inst.pool, inst.n_devices)].remove(inst)
+        self._digest = None
         if inst.lease is not None and inst.lease.id in self._leases:
             self.release(inst.lease, t)
 
@@ -235,6 +363,15 @@ class ClusterManager:
             assert self._leases[inst.lease.id] is inst.lease
             assert inst.lease.pool == inst.pool
             assert inst.lease.n_devices == inst.n_devices
+        # instance index mirrors the instance list exactly
+        indexed = [i for group in self._inst_index.values() for i in group]
+        assert len(indexed) == len(self.instances), (
+            f"instance index holds {len(indexed)} entries but "
+            f"{len(self.instances)} instances are live")
+        for inst in self.instances:
+            assert inst in self._inst_index.get(
+                (inst.impl, inst.pool, inst.n_devices), ()), (
+                f"instance {inst.impl}@{inst.pool} missing from index")
 
     def utilization(self) -> dict[str, float]:
         """Allocated fraction per pool (0..1)."""

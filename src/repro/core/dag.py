@@ -45,6 +45,18 @@ class DAG:
                     raise ValueError(f"{n.id!r} depends on unknown {d!r}")
         self._topo = self._toposort()
         self._sig: tuple | None = None
+        # successor adjacency + topo rank, precomputed once: the event
+        # engine's indexed ready-set walks successors on every finish and
+        # orders candidates by topo rank — both must be O(1) lookups, not
+        # per-call scans over all nodes
+        self._succ: dict[str, tuple[str, ...]] = {i: () for i in self.nodes}
+        succ_acc: dict[str, list[str]] = {i: [] for i in self.nodes}
+        for n in self.nodes.values():
+            for d in n.deps:
+                succ_acc[d].append(n.id)
+        self._succ = {i: tuple(v) for i, v in succ_acc.items()}
+        self._topo_idx: dict[str, int] = {
+            tid: k for k, tid in enumerate(self._topo)}
 
     # -- structure -----------------------------------------------------------
     def _toposort(self) -> tuple[str, ...]:
@@ -89,8 +101,16 @@ class DAG:
         return self._sig
 
     def successors(self, node_id: str) -> list[str]:
-        """Tasks that directly depend on ``node_id``."""
-        return [n.id for n in self.nodes.values() if node_id in n.deps]
+        """Tasks that directly depend on ``node_id`` (precomputed)."""
+        return list(self._succ[node_id])
+
+    def succ(self, node_id: str) -> tuple[str, ...]:
+        """:meth:`successors` without the defensive copy (hot path)."""
+        return self._succ[node_id]
+
+    def topo_index(self, node_id: str) -> int:
+        """Rank of ``node_id`` in :attr:`topo_order` (O(1))."""
+        return self._topo_idx[node_id]
 
     def roots(self) -> list[str]:
         """Tasks with no dependencies (ready at arrival)."""

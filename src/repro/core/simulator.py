@@ -15,7 +15,8 @@ Semantics notes:
   gracefully to what fits (>=1) rather than deadlocking; if none fit, it
   waits for the next completion event.
 - Energy: active increments per task; the idle floor for every metered pool
-  is integrated over the makespan at ``finalize`` (paper Table-2 semantics).
+  is integrated over the *capacity timeline* at finalize (paper Table-2
+  semantics; under autoscaling the floor follows ``set_capacity`` changes).
 
 Multi-tenant semantics (core/admission.py):
 - Workflows may arrive as ``Submission`` objects carrying a tenant class
@@ -42,14 +43,28 @@ Multi-tenant semantics (core/admission.py):
   tasks keep the restart-from-scratch path: time-fraction refund of the
   unexecuted remainder, ``note="requeue"``. Discarded-but-executed compute
   accrues in ``SimReport.wasted_dev_s`` either way.
+
+Event-engine fast path (DESIGN.md §8): the dispatch loop keeps an *indexed
+ready-set* per workflow — roots enter at admission, successors enter when
+their last dependency finishes, preemption victims re-enter on cancel — so
+each pass touches only genuinely ready tasks instead of rescanning every
+workflow's whole DAG. Tasks that failed to start are skipped while their
+pool's availability epoch is unchanged (``ClusterManager.free_epoch``): a
+failed ``try_start`` depends only on (impl, pool, n_devices, n_instances,
+tenant) and pool state, so identical-key retries under unchanged state fail
+identically and may be elided without changing the schedule. The seed's
+full rescan survives as ``fast_dispatch=False`` — the reference the
+equivalence tests compare byte-identical traces against.
 """
 from __future__ import annotations
 
+import bisect
 import heapq
 import itertools
 import math
+import time
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Iterable, Iterator
 
 from .admission import Admission, ServedLedger, get_policy
 from .agents import AgentLibrary
@@ -97,12 +112,32 @@ class SimReport:
 
 
 @dataclass
+class OpenLoopReport(SimReport):
+    """SimReport + steady-state serving metrics from ``run_open_loop``."""
+
+    horizon_s: float = 0.0       # arrival window length
+    warmup_s: float = 0.0        # arrivals before this are trimmed
+    offered_rps: float = 0.0     # arrivals / horizon
+    arrivals: int = 0            # workflows admitted
+    completed: int = 0           # workflows finished
+    measured: int = 0            # completions past warmup (metric base)
+    goodput_rps: float = 0.0     # SLO-met completions / measured seconds
+    per_class: dict = field(default_factory=dict)
+    n_events: int = 0            # heap events processed
+    n_attempts: int = 0          # dispatch attempts (try_start calls)
+    wall_s: float = 0.0
+    events_per_s: float = 0.0    # (n_events + n_attempts) / wall_s
+    scale_actions: list = field(default_factory=list)
+
+
+@dataclass(slots=True)
 class Submission:
     """One tenant's workflow submission to the multi-tenant engine.
 
     ``plan`` may be ``None`` with a ``plan_fn`` instead: the engine calls it
     when the workflow is admitted (its arrival event fires), so scheduling
-    sees the live cluster state.
+    sees the live cluster state. ``slo_s``/``scenario`` feed the open-loop
+    SLO-attainment metrics and are ignored by the closed-loop ``run``.
     """
 
     dag: DAG
@@ -110,9 +145,11 @@ class Submission:
     arrival: float
     tenant: str = "standard"
     plan_fn: "Callable[[], ExecutionPlan] | None" = None
+    slo_s: float | None = None
+    scenario: str = ""
 
 
-@dataclass
+@dataclass(slots=True)
 class _WfState:
     dag: DAG
     plan: ExecutionPlan | None
@@ -125,9 +162,15 @@ class _WfState:
     attempt: dict[str, int] = field(default_factory=dict)
     # work-items checkpointed per task: survived preemption, never re-run
     items_done: dict[str, int] = field(default_factory=dict)
+    slo_s: float | None = None
+    scenario: str = ""
+    # indexed ready set: (topo_rank, task_id), kept sorted by insort
+    ready: list = field(default_factory=list)
+    adm: Admission | None = None
+    sort_key: tuple | None = None     # static-policy dispatch key
 
 
-@dataclass
+@dataclass(slots=True)
 class _Running:
     """Book-keeping for an in-flight task (needed to preempt it)."""
 
@@ -148,11 +191,567 @@ class _Running:
     resumable: bool           # chunkable: completed steps survive preempt
 
 
+class _Engine:
+    """One run's event-loop state, shared by ``run`` and ``run_open_loop``.
+
+    The seed kept all of this in closures inside ``run``; hoisting it lets
+    the open-loop mode reuse admission, preemption, dispatch and accounting
+    verbatim (identical float-op order — the golden tests pin it).
+    """
+
+    def __init__(self, sim: "Simulator", pol, log: list | None,
+                 collect_trace: bool = True):
+        self.sim = sim
+        self.cluster = sim.cluster
+        self.pol = pol
+        self.log = log
+        self.collect_trace = collect_trace
+        # hot-path caches: pool -> device spec (device SKUs never change
+        # mid-run; capacities may) and impl name -> "is a model" (vs tool)
+        self.specs = {name: p.spec for name, p in sim.cluster.pools.items()}
+        self.impls = sim.library.impls
+        self.is_model = {name: sim._is_model(impl)
+                         for name, impl in sim.library.impls.items()}
+        self.wfs: dict[str, _WfState] = {}
+        self.ledger = EnergyLedger()
+        self.served = ServedLedger()
+        self.preempt0 = sim.cluster.preemptions
+        self.trace: list[TraceEntry] = []
+        self.busy: dict[str, float] = {}
+        self.running: dict[tuple[str, str], _Running] = {}
+        self.lease_owner: dict[int, tuple[str, str]] = {}
+        self.requeues = 0
+        self.resumed_items = 0
+        self.wasted_dev_s = 0.0
+        self.events: list[tuple[float, int, str, object]] = []
+        self.ctr = itertools.count()
+        self.t = 0.0
+        self.n_events = 0
+        self.n_attempts = 0
+        # dispatch-order index over admitted, incomplete workflows:
+        # static policies keep a key-sorted list (keys are immutable
+        # admission facts); weighted-fair re-sorts per pass (virtual time
+        # moves between passes)
+        self.active: list[tuple[tuple, str]] = []    # static: (key, wid)
+        self.active_dyn: list[str] = []              # dynamic: wids
+        # static policies only: the subset of ``active`` whose ready set is
+        # nonempty, kept key-sorted — dispatch passes iterate this instead
+        # of filtering every active workflow (invariant: (key, wid) here
+        # ⟺ wfs[wid].ready nonempty)
+        self.active_ready: list[tuple[tuple, str]] = []
+        # blocked-group memo: (impl, pool, n_devices, n_instances, tenant)
+        # -> pool free_epoch at last failed attempt. Skip while unchanged.
+        self.blocked: dict[tuple, int] = {}
+        # root (topo_rank, tid) pairs per distinct DAG object (id-keyed;
+        # the DAGs are kept alive by wfs entries)
+        self._roots: dict[int, list] = {}
+
+    # -- submissions / admission ------------------------------------------------
+    def add_submission(self, wid: str, sub: Submission):
+        """Queue a workflow's arrival event."""
+        self.wfs[wid] = _WfState(sub.dag, sub.plan, sub.arrival, sub.tenant,
+                                 sub.plan_fn, slo_s=sub.slo_s,
+                                 scenario=sub.scenario)
+        heapq.heappush(self.events,
+                       (sub.arrival, next(self.ctr), "arrive", wid))
+
+    def admit(self, wid: str):
+        """Arrive event: resolve the plan and index the workflow's roots."""
+        st = self.wfs[wid]
+        if st.plan is None:
+            if st.plan_fn is None:
+                raise ValueError(f"workflow {wid!r} submitted without a "
+                                 f"plan or plan_fn")
+            # admission-time planning: the scheduler sees the live cluster
+            # (warm instances, free devices)
+            st.plan = st.plan_fn()
+        st.adm = Admission(wid, st.tenant, st.arrival)
+        dag = st.dag
+        roots = self._roots.get(id(dag))
+        if roots is None:
+            # open-loop submissions share one DAG per scenario: compute
+            # the root (topo_rank, tid) pairs once per distinct DAG
+            roots = self._roots[id(dag)] = [
+                (dag.topo_index(tid), tid) for tid in dag.topo_order
+                if not dag.nodes[tid].deps]
+        st.ready.extend(roots)
+        if self.pol.dynamic:
+            self.active_dyn.append(wid)
+        else:
+            st.sort_key = self.pol.key(st.adm, self.served.served)
+            bisect.insort(self.active, (st.sort_key, wid))
+            if st.ready:
+                bisect.insort(self.active_ready, (st.sort_key, wid))
+
+    def _deactivate(self, wid: str, st: _WfState):
+        if self.pol.dynamic:
+            self.active_dyn.remove(wid)
+        else:
+            i = bisect.bisect_left(self.active, (st.sort_key, wid))
+            del self.active[i]
+
+    def _push_ready(self, wid: str, st: _WfState, tid: str):
+        if not st.ready and not self.pol.dynamic:
+            bisect.insort(self.active_ready, (st.sort_key, wid))
+        bisect.insort(st.ready, (st.dag.topo_index(tid), tid))
+
+    # -- dispatch candidates -----------------------------------------------------
+    def _ready_scan(self) -> list[tuple[str, str]]:
+        """The seed's full rescan: every workflow, every task, every pass.
+
+        Kept verbatim as the ``fast_dispatch=False`` reference path; the
+        equivalence tests assert the indexed ready-set produces
+        byte-identical traces against this.
+        """
+        out = []
+        t = self.t
+        admitted = [Admission(wid, st.tenant, st.arrival)
+                    for wid, st in self.wfs.items()
+                    if t >= st.arrival and st.plan is not None]
+        for adm in sorted(admitted,
+                          key=lambda a: self.pol.key(a, self.served.served)):
+            st = self.wfs[adm.workflow]
+            for tid in st.dag.topo_order:
+                if tid in st.done or tid in st.started:
+                    continue
+                if all(d in st.done for d in st.dag.nodes[tid].deps):
+                    out.append((adm.workflow, tid))
+        return out
+
+    def _candidates(self) -> list[tuple[str, str]]:
+        """Ready (workflow, task) pairs in admission-policy order, from the
+        incremental index: O(active + ready) instead of O(total tasks)."""
+        out = []
+        wfs = self.wfs
+        if self.pol.dynamic:
+            served = self.served.served
+            # filtering to ready-nonempty before the sort commutes with it
+            order = sorted((w for w in self.active_dyn if wfs[w].ready),
+                           key=lambda w: self.pol.key(wfs[w].adm, served))
+            for wid in order:
+                out.extend((wid, tid) for _, tid in wfs[wid].ready)
+            return out
+        for _, wid in self.active_ready:
+            out.extend((wid, tid) for _, tid in wfs[wid].ready)
+        return out
+
+    def dispatch(self):
+        """Start whatever is ready and fits, repeating while progress."""
+        if not self.sim.fast_dispatch:
+            progress = True
+            while progress:
+                progress = False
+                for wid, tid in self._ready_scan():
+                    self.n_attempts += 1
+                    if self.try_start(wid, tid):
+                        progress = True
+            return
+        cluster = self.cluster
+        epochs = cluster.free_epoch
+        progress = True
+        while progress:
+            progress = False
+            epoch_snap = cluster.epoch_total
+            for wid, tid in self._candidates():
+                st = self.wfs[wid]
+                if tid in st.started or tid in st.done:
+                    continue
+                cfg = st.plan.configs[tid]
+                key = (cfg.impl, cfg.pool, cfg.n_devices, cfg.n_instances,
+                       st.tenant)
+                # a failed start depends only on this key and pool state;
+                # while the pool epoch hasn't moved since the last failure,
+                # a retry fails identically — skip it (DESIGN.md §8)
+                if self.blocked.get(key) == epochs[cfg.pool]:
+                    continue
+                self.n_attempts += 1
+                if self.try_start(wid, tid):
+                    progress = True
+                else:
+                    # record *post*-attempt epoch: a failing attempt may
+                    # itself evict idle instances (bumping the epoch), and
+                    # those evictions don't make this key startable
+                    cfg2 = st.plan.configs[tid]   # degrade may have moved it
+                    key2 = (cfg2.impl, cfg2.pool, cfg2.n_devices,
+                            cfg2.n_instances, st.tenant)
+                    self.blocked[key2] = epochs[cfg2.pool]
+            # a re-scan pass can only start something if availability
+            # moved during this pass (preemption, eviction, release,
+            # harvest supply): every survivor is memoized at the current
+            # epoch, and new ready entries only appear via cancel_task,
+            # which releases (bumping the epoch). No movement ⟹ the next
+            # pass is provably a no-op — skip it.
+            if progress and cluster.epoch_total == epoch_snap:
+                break
+        return
+
+    # -- preemption ---------------------------------------------------------------
+    def cancel_task(self, vwid: str, vtid: str):
+        """Preemption: roll a task back to pending, checkpoint the work
+        already finished (chunkable tasks), refund the unearned energy/$
+        and release whatever it still holds."""
+        t = self.t
+        rec = self.running.pop((vwid, vtid), None)
+        if rec is None:
+            return
+        vst = self.wfs[vwid]
+        vst.started.discard(vtid)
+        self._push_ready(vwid, vst, vtid)
+        vst.attempt[vtid] = vst.attempt.get(vtid, 0) + 1
+        for lease in rec.leases:
+            self.lease_owner.pop(lease.id, None)
+            if self.cluster.lease_active(lease):
+                self.cluster.release(lease, t)
+        for inst in rec.insts:
+            if inst.lease is not None:
+                self.lease_owner.pop(inst.lease.id, None)
+            if inst in self.cluster.instances:
+                self.cluster.evict_instance(inst, t)
+        spec = CATALOG[self.cluster.pools[rec.cfg.pool].device]
+        # the charged dev_s covers compute only (weights-load is an
+        # idle-power period), so progress is measured over the compute
+        # window [compute_begin, end] — a victim preempted mid-load
+        # gets a full refund either way
+        window = max(rec.end - rec.compute_begin, 1e-12)
+        elapsed = min(max(t - rec.compute_begin, 0.0), window)
+        # executed device-seconds so far; dev_s spreads uniformly over
+        # the window (paths run concurrently, so the rate is
+        # ndev * paths even when the wall clock is path-multiplied)
+        exec_dev_s = rec.dev_s * (elapsed / window)
+        if rec.resumable and self.sim.resume:
+            # checkpoint/resume: invert the step schedule over the
+            # compute window — completed batch steps survive, the
+            # in-flight step is discarded
+            impl = self.sim.library.impls[rec.cfg.impl]
+            node = vst.dag.nodes[vtid]
+            work = impl.work_fn(node.tokens_in, node.tokens_out)
+            done, wall = self.sim.profiles.completed_items(
+                impl, spec, rec.cfg.n_devices, work, rec.batch,
+                rec.items_per_inst, elapsed)
+            kept_items = min(done * rec.n_inst,
+                             node.work_items - rec.items_done0)
+            if kept_items:
+                vst.items_done[vtid] = rec.items_done0 + kept_items
+                self.resumed_items += kept_items
+            # step-granular refund: completed steps stay charged (their
+            # items never re-run); the in-flight step is refunded — its
+            # items ride the residual requeue, which re-charges them,
+            # so the task's total charge across attempts is exactly
+            # schedule_latency(total items)
+            kept_dev_s = wall * rec.ndev * rec.cfg.paths
+            refund = max(rec.dev_s - kept_dev_s, 0.0)
+            self.wasted_dev_s += max(exec_dev_s - kept_dev_s, 0.0)
+        else:
+            # restart from scratch (non-chunkable / resume disabled):
+            # refund only the unexecuted remainder — the executed
+            # compute stays charged (that energy was really burned)
+            # and is all wasted, since the requeue re-runs everything
+            refund = rec.dev_s * (1.0 - elapsed / window)
+            self.wasted_dev_s += exec_dev_s
+        self.ledger.charge_active(spec, -refund,
+                                  utilization=rec.pf, pool=rec.cfg.pool)
+        self.busy[rec.cfg.pool] = self.busy.get(rec.cfg.pool, 0.0) - refund
+        self.served.charge(vst.tenant, -refund)
+        self.requeues += 1
+        if self.collect_trace:
+            self.trace.append(TraceEntry(vwid, vtid, rec.cfg.impl,
+                                         rec.cfg.pool, rec.ndev, rec.start,
+                                         t, note="preempted"))
+        if self.log is not None:
+            kept = vst.items_done.get(vtid, 0)
+            self.log.append(f"[{t:8.1f}s] preempt {vwid}:{vtid} "
+                            f"({rec.ndev}x{rec.cfg.pool}); requeued"
+                            + (f" ({kept} items checkpointed)" if kept
+                               else ""))
+
+    def try_preempt(self, pool: str, n_needed: int) -> bool:
+        """Reclaim harvest-class leases for a priority tenant."""
+        t = self.t
+        deficit = n_needed - self.cluster.free(pool)
+        if deficit <= 0 or self.cluster.harvest_devices(pool) < deficit:
+            return False
+        victims = self.cluster.preempt_harvest(pool, deficit, t)
+        for lease in victims:
+            # idle warm instance on a preempted lease: drop the shell
+            # through the manager's eviction path so its bookkeeping
+            # (instance list + lease table) stays consistent; the lease
+            # itself was already released by preempt_harvest, which
+            # evict_instance tolerates
+            for inst in [i for i in self.cluster.instances
+                         if i.lease is not None
+                         and i.lease.id == lease.id]:
+                self.cluster.evict_instance(inst, t)
+            owner = self.lease_owner.pop(lease.id, None)
+            if owner is not None:
+                self.cancel_task(*owner)
+        return bool(victims)
+
+    # -- task start ----------------------------------------------------------------
+    def _alloc_or_evict(self, cluster, cfg, n: int, t: float,
+                        harvest: bool):
+        """Allocate ``n`` devices, evicting idle other-impl warm instances
+        (LRU by warm_since) until the allocation fits or nothing is left."""
+        lease = cluster.alloc(cfg.pool, n, t, harvest=harvest)
+        if lease is None:
+            idle = sorted(
+                (i for i in cluster.instances
+                 if i.pool == cfg.pool and i.busy_until <= t
+                 and i.impl != cfg.impl),
+                key=lambda i: i.warm_since)
+            for victim in idle:
+                cluster.evict_instance(victim, t)
+                lease = cluster.alloc(cfg.pool, n, t, harvest=harvest)
+                if lease is not None:
+                    break
+        return lease
+
+    def _acquire(self, cluster, cfg, t: float, harvest: bool,
+                 insts: list) -> int:
+        """Fill ``insts`` up to ``cfg.n_instances`` — reusing idle warm
+        instances first (first-fit in index order), then provisioning new
+        ones; returns how many were newly provisioned."""
+        new_inst = 0
+        need = cfg.n_instances - len(insts)
+        for i in cluster.warm_instances(cfg.impl, cfg.pool, cfg.n_devices):
+            if need <= 0:
+                break
+            if i.busy_until <= t and i not in insts:
+                insts.append(i)
+                need -= 1
+        while len(insts) < cfg.n_instances:
+            lease = self._alloc_or_evict(cluster, cfg, cfg.n_devices, t,
+                                         harvest)
+            if lease is None:
+                break
+            inst = Instance(cfg.impl, cfg.pool, cfg.n_devices,
+                            warm_since=t, lease=lease)
+            cluster.add_instance(inst)
+            insts.append(inst)
+            new_inst += 1
+        return new_inst
+
+    def try_start(self, wid: str, tid: str) -> bool:
+        """Start a ready task if its resources fit right now."""
+        t = self.t
+        st = self.wfs[wid]
+        cluster = self.cluster
+        node = st.dag.nodes[tid]
+        cfg = st.plan.configs[tid]
+        impl = self.impls[cfg.impl]
+        spec = self.specs[cfg.pool]
+        harvest = st.tenant == "harvest"
+        priority = st.tenant == "priority"
+        leases: list[Lease] = []
+        insts: list[Instance] = []
+        new_inst = 0
+        # degrade configs planned for a larger cluster (elasticity)
+        cap = cluster.pools[cfg.pool].capacity
+        if cfg.n_devices > cap:
+            if cap < self.sim._pool_limit(cfg.pool):
+                # the pool is autoscaled below its limit right now: wait
+                # for the scale-up instead of permanently degrading the
+                # plan to the shrunken size
+                return False
+            lo = impl.min_devices.get(spec.kind, 1)
+            n = 1
+            while n * 2 <= cap:
+                n *= 2
+            if n < lo:
+                raise RuntimeError(
+                    f"{cfg.impl} needs >= {lo} {spec.kind} devices; "
+                    f"pool {cfg.pool} has {cap}")
+            cfg = cfg.with_(n_devices=n, n_instances=1)
+            # copy-on-write: amortized open-loop submissions share one
+            # template plan per scenario; take a private copy before the
+            # only in-place plan mutation the engine ever performs
+            st.plan = ExecutionPlan(dict(st.plan.configs))
+            st.plan.configs[tid] = cfg
+
+        if self.is_model[cfg.impl]:
+            new_inst = self._acquire(cluster, cfg, t, harvest, insts)
+            if not insts and priority and \
+                    self.try_preempt(cfg.pool, cfg.n_devices):
+                new_inst += self._acquire(cluster, cfg, t, harvest, insts)
+            if not insts:
+                return False
+            for inst in insts:
+                lease = inst.lease
+                if lease is not None and lease.harvest != harvest:
+                    self.sim._relabel_lease(inst, harvest, t)
+            n_inst = len(insts)
+        else:
+            total = cfg.n_devices * cfg.n_instances
+            lease = cluster.alloc(cfg.pool, total, t, harvest=harvest)
+            n_inst = cfg.n_instances
+            if lease is None:
+                lease = self._alloc_or_evict(cluster, cfg, cfg.n_devices,
+                                             t, harvest)
+                n_inst = 1
+                if lease is None and priority and \
+                        self.try_preempt(cfg.pool, cfg.n_devices):
+                    lease = self._alloc_or_evict(cluster, cfg,
+                                                 cfg.n_devices, t, harvest)
+                if lease is None:
+                    return False
+            leases.append(lease)
+
+        items_done = st.items_done.get(tid, 0) if self.sim.resume else 0
+        dur, compute, per_inst = self.sim._duration(node, cfg, n_inst,
+                                                    new_inst, items_done)
+        pmult = cfg.paths if cfg.paths > 1 and not node.chunkable else 1.0
+        dur *= pmult
+        end = t + dur
+        # the tail of the run is compute; any lead-in is weights load
+        compute_begin = end - compute * pmult
+        for inst in insts:
+            inst.busy_until = end
+        ndev = cfg.n_devices * n_inst
+        dev_s = compute * ndev * cfg.paths
+        pf = self.sim.profiles.power_frac(impl, spec, cfg.n_devices)
+        self.ledger.charge_active(spec, dev_s, utilization=pf,
+                                  pool=cfg.pool)
+        self.busy[cfg.pool] = self.busy.get(cfg.pool, 0.0) + dev_s
+        self.served.charge(st.tenant, dev_s)
+        st.started.add(tid)
+        i = bisect.bisect_left(st.ready, (st.dag.topo_index(tid), tid))
+        if i < len(st.ready) and st.ready[i][1] == tid:
+            del st.ready[i]
+            if not st.ready and not self.pol.dynamic:
+                j = bisect.bisect_left(self.active_ready,
+                                       (st.sort_key, wid))
+                if j < len(self.active_ready) and \
+                        self.active_ready[j][1] == wid:
+                    del self.active_ready[j]
+        attempt = st.attempt.get(tid, 0)
+        # compose the note: restart kind + warmth, so preemption
+        # analysis sees a requeue that also paid a cold weights load
+        # ("requeue+cold") rather than losing the restart cost
+        restart = ("resume" if attempt and items_done else
+                   "requeue" if attempt else "")
+        warmth = "cold" if new_inst else ("warm" if insts else "")
+        note = (restart + "+" + warmth if restart and warmth
+                else restart or warmth)
+        for lease in leases:
+            self.lease_owner[lease.id] = (wid, tid)
+        for inst in insts:
+            if inst.lease is not None:
+                self.lease_owner[inst.lease.id] = (wid, tid)
+        self.running[(wid, tid)] = _Running(cfg, leases, insts, t, end,
+                                            compute_begin, ndev, dev_s, pf,
+                                            note, n_inst=n_inst,
+                                            batch=(1 if spec.kind == "cpu"
+                                                   else cfg.batch),
+                                            items_done0=items_done,
+                                            items_per_inst=per_inst,
+                                            resumable=node.chunkable)
+        heapq.heappush(self.events, (end, next(self.ctr), "finish",
+                                     (wid, tid, attempt)))
+        if self.log is not None:
+            self.log.append(f"[{t:8.1f}s] start {wid}:{tid} on "
+                            f"{ndev}x{cfg.pool} ({cfg.impl})"
+                            + (f" [{restart}]" if restart else ""))
+        return True
+
+    # -- finish -------------------------------------------------------------------
+    def on_finish(self, payload) -> bool:
+        """Finish event; returns True when the whole workflow completed."""
+        t = self.t
+        wid, tid, attempt = payload
+        st = self.wfs[wid]
+        if st.attempt.get(tid, 0) != attempt:
+            return False    # stale: this execution was preempted
+        rec = self.running.pop((wid, tid))
+        cluster = self.cluster
+        st.done.add(tid)
+        if t > st.finish:
+            st.finish = t
+        cluster.complete_task(wid, tid)
+        cfg = rec.cfg
+        model = self.is_model[cfg.impl]
+        lease_owner = self.lease_owner
+        for lease in rec.leases:
+            # model instances keep their devices (stay warm); tools
+            # release. Instance devices are reclaimed by rebalance.
+            lease_owner.pop(lease.id, None)
+            if not model:
+                cluster.release(lease, t)
+        for inst in rec.insts:
+            if inst.lease is not None:
+                lease_owner.pop(inst.lease.id, None)
+        # the task's instances just went idle: blocked tasks keyed on this
+        # pool may now reuse (or evict) them, so the availability epoch
+        # must move even though no lease was released (model path)
+        cluster.free_epoch[cfg.pool] += 1
+        cluster.epoch_total += 1
+        if self.collect_trace:
+            self.trace.append(TraceEntry(wid, tid, rec.cfg.impl,
+                                         rec.cfg.pool, rec.ndev,
+                                         rec.start, t, note=rec.note))
+        # index newly-ready successors (their last dependency just finished)
+        done = st.done
+        nodes = st.dag.nodes
+        for succ in st.dag.succ(tid):
+            if succ in done or succ in st.started:
+                continue
+            if all(d in done for d in nodes[succ].deps):
+                self._push_ready(wid, st, succ)
+        finished = len(done) == len(nodes)
+        if finished:
+            self._deactivate(wid, st)
+        # workflow-aware reclamation once demand disappears. Gated on the
+        # demand-hit-zero flag: rebalance can only newly reclaim at the
+        # instant some interface's pending count reaches 0 (an interface
+        # with zero demand has no running tasks either, so its instances
+        # were all idle — and evicted — the moment it zeroed), which makes
+        # skipping the other calls a pure no-op elision.
+        if self.cluster.demand_zeroed:
+            self.cluster.demand_zeroed = False
+            for action in self.cluster.rebalance(self.sim.library, t):
+                if self.log is not None:
+                    self.log.append(f"[{t:8.1f}s] rebalance: {action}")
+        return finished
+
+    # -- accounting ---------------------------------------------------------------
+    def finalize(self, makespan: float):
+        """Integrate the idle-power floor over each pool's capacity log."""
+        for pool, p in self.cluster.pools.items():
+            spec = p.spec
+            log = self.cluster.capacity_log(pool)
+            if len(log) == 1:
+                # constant capacity: the seed's exact expression (golden
+                # traces pin the float op order)
+                self.ledger.charge_idle(spec, p.capacity, makespan)
+            else:
+                dev_s = self.cluster.capacity_device_seconds(pool, makespan)
+                self.ledger.charge_idle(spec, 1, dev_s)
+
+    def report(self, makespan: float) -> SimReport:
+        per_wf = {wid: {"start": st.arrival, "finish": st.finish,
+                        "tasks": len(st.dag), "tenant": st.tenant}
+                  for wid, st in self.wfs.items()}
+        return SimReport(
+            makespan_s=makespan,
+            energy_wh=self.ledger.wh,
+            active_wh=self.ledger.active_joules / 3600.0,
+            idle_wh=self.ledger.idle_joules / 3600.0,
+            usd=self.ledger.usd,
+            trace=sorted(self.trace,
+                         key=lambda e: (e.start, e.end, e.workflow)),
+            per_workflow=per_wf,
+            pool_busy_device_s=self.busy,
+            preemptions=self.cluster.preemptions - self.preempt0,
+            requeues=self.requeues,
+            resumed_items=self.resumed_items,
+            wasted_dev_s=self.wasted_dev_s,
+        )
+
+
 class Simulator:
     """Discrete-event engine executing plans against the modeled cluster."""
 
     def __init__(self, cluster: ClusterManager, library: AgentLibrary,
-                 profiles: ProfileStore, resume: bool = True):
+                 profiles: ProfileStore, resume: bool = True,
+                 fast_dispatch: bool = True):
         self.cluster = cluster
         self.library = library
         self.profiles = profiles
@@ -160,6 +759,23 @@ class Simulator:
         # (DESIGN.md §6.4); False restores restart-from-scratch for every
         # victim (the pre-resume baseline benchmarks compare against)
         self.resume = resume
+        # indexed ready-set + blocked-group dispatch (DESIGN.md §8);
+        # False selects the seed's full-rescan reference path, which the
+        # equivalence tests compare byte-identical traces against
+        self.fast_dispatch = fast_dispatch
+        # autoscale limits per pool (run_open_loop fills this; closed-loop
+        # runs treat current capacity as the limit)
+        self._scale_limits: dict[str, int] = {}
+        # duration memo: open-loop serving re-runs identical (config, node
+        # workload) pairs thousands of times; keyed on everything
+        # _duration reads, including the profile-store version (pin()
+        # bumps it, invalidating stale latencies)
+        self._dur_memo: dict[tuple, tuple[float, float, int]] = {}
+
+    def _pool_limit(self, pool: str) -> int:
+        """Max capacity a pool may scale to (its size when not scaled)."""
+        return self._scale_limits.get(pool,
+                                      self.cluster.pools[pool].capacity)
 
     # -- duration under actual warmth ------------------------------------------
     def _duration(self, node, cfg: TaskConfig, n_inst: int,
@@ -172,6 +788,12 @@ class Simulator:
         charged here (stored on ``_Running.items_per_inst``) rather than
         re-deriving it.
         """
+        key = (cfg.impl, cfg.pool, cfg.n_devices, cfg.batch, cfg.warm,
+               n_inst, bool(new_instances), items_done, node.work_items,
+               node.tokens_in, node.tokens_out, self.profiles.version)
+        memo = self._dur_memo.get(key)
+        if memo is not None:
+            return memo
         impl = self.library.impls[cfg.impl]
         spec = CATALOG[self.cluster.pools[cfg.pool].device]
         work = impl.work_fn(node.tokens_in, node.tokens_out)
@@ -189,12 +811,14 @@ class Simulator:
         if new_instances and not cfg.warm:
             # cfg.warm = provisioned capacity (PTU-style): always-on, no load
             lat += impl.load_time_s
-        return lat, compute, items
+        out = (lat, compute, items)
+        self._dur_memo[key] = out
+        return out
 
     def _is_model(self, impl) -> bool:
         return impl.load_time_s > 0 or impl.arch is not None
 
-    # -- engine ------------------------------------------------------------------
+    # -- closed-loop engine ------------------------------------------------------
     def run(self,
             workflows: "dict[str, tuple[DAG, ExecutionPlan, float] | Submission]",
             log: list | None = None, policy=None) -> SimReport:
@@ -207,279 +831,19 @@ class Simulator:
         ``log`` collects human-readable event lines when provided.
         """
         pol = get_policy(policy)
-        wfs: dict[str, _WfState] = {}
+        eng = _Engine(self, pol, log)
         for wid, sub in workflows.items():
             if not isinstance(sub, Submission):
                 dag, plan, arrival = sub
                 sub = Submission(dag, plan, arrival)
-            wfs[wid] = _WfState(sub.dag, sub.plan, sub.arrival, sub.tenant,
-                                sub.plan_fn)
-        for wid, st in wfs.items():
+            eng.add_submission(wid, sub)
+        for wid, st in eng.wfs.items():
             self.cluster.register_workflow(wid, st.dag)
 
-        ledger = EnergyLedger()
-        served = ServedLedger()
-        preempt0 = self.cluster.preemptions
-        trace: list[TraceEntry] = []
-        busy: dict[str, float] = {}
-        running: dict[tuple[str, str], _Running] = {}
-        lease_owner: dict[int, tuple[str, str]] = {}
-        requeues = 0
-        resumed_items = 0
-        wasted_dev_s = 0.0
-        events: list[tuple[float, int, str, object]] = []
-        ctr = itertools.count()
-        for wid, st in wfs.items():
-            heapq.heappush(events, (st.arrival, next(ctr), "arrive", wid))
-        t = 0.0
-
-        def ready_tasks():
-            """Dispatchable (workflow, task) pairs in admission order."""
-            out = []
-            admitted = [Admission(wid, st.tenant, st.arrival)
-                        for wid, st in wfs.items()
-                        if t >= st.arrival and st.plan is not None]
-            for adm in sorted(admitted,
-                              key=lambda a: pol.key(a, served.served)):
-                st = wfs[adm.workflow]
-                for tid in st.dag.topo_order:
-                    if tid in st.done or tid in st.started:
-                        continue
-                    if all(d in st.done for d in st.dag.nodes[tid].deps):
-                        out.append((adm.workflow, tid))
-            return out
-
-        def cancel_task(vwid: str, vtid: str):
-            """Preemption: roll a task back to pending, checkpoint the work
-            already finished (chunkable tasks), refund the unearned energy/$
-            and release whatever it still holds."""
-            nonlocal requeues, resumed_items, wasted_dev_s
-            rec = running.pop((vwid, vtid), None)
-            if rec is None:
-                return
-            vst = wfs[vwid]
-            vst.started.discard(vtid)
-            vst.attempt[vtid] = vst.attempt.get(vtid, 0) + 1
-            for lease in rec.leases:
-                lease_owner.pop(lease.id, None)
-                if self.cluster.lease_active(lease):
-                    self.cluster.release(lease, t)
-            for inst in rec.insts:
-                if inst.lease is not None:
-                    lease_owner.pop(inst.lease.id, None)
-                if inst in self.cluster.instances:
-                    self.cluster.evict_instance(inst, t)
-            spec = CATALOG[self.cluster.pools[rec.cfg.pool].device]
-            # the charged dev_s covers compute only (weights-load is an
-            # idle-power period), so progress is measured over the compute
-            # window [compute_begin, end] — a victim preempted mid-load
-            # gets a full refund either way
-            window = max(rec.end - rec.compute_begin, 1e-12)
-            elapsed = min(max(t - rec.compute_begin, 0.0), window)
-            # executed device-seconds so far; dev_s spreads uniformly over
-            # the window (paths run concurrently, so the rate is
-            # ndev * paths even when the wall clock is path-multiplied)
-            exec_dev_s = rec.dev_s * (elapsed / window)
-            if rec.resumable and self.resume:
-                # checkpoint/resume: invert the step schedule over the
-                # compute window — completed batch steps survive, the
-                # in-flight step is discarded
-                impl = self.library.impls[rec.cfg.impl]
-                node = vst.dag.nodes[vtid]
-                work = impl.work_fn(node.tokens_in, node.tokens_out)
-                done, wall = self.profiles.completed_items(
-                    impl, spec, rec.cfg.n_devices, work, rec.batch,
-                    rec.items_per_inst, elapsed)
-                kept_items = min(done * rec.n_inst,
-                                 node.work_items - rec.items_done0)
-                if kept_items:
-                    vst.items_done[vtid] = rec.items_done0 + kept_items
-                    resumed_items += kept_items
-                # step-granular refund: completed steps stay charged (their
-                # items never re-run); the in-flight step is refunded — its
-                # items ride the residual requeue, which re-charges them,
-                # so the task's total charge across attempts is exactly
-                # schedule_latency(total items)
-                kept_dev_s = wall * rec.ndev * rec.cfg.paths
-                refund = max(rec.dev_s - kept_dev_s, 0.0)
-                wasted_dev_s += max(exec_dev_s - kept_dev_s, 0.0)
-            else:
-                # restart from scratch (non-chunkable / resume disabled):
-                # refund only the unexecuted remainder — the executed
-                # compute stays charged (that energy was really burned)
-                # and is all wasted, since the requeue re-runs everything
-                refund = rec.dev_s * (1.0 - elapsed / window)
-                wasted_dev_s += exec_dev_s
-            ledger.charge_active(spec, -refund,
-                                 utilization=rec.pf, pool=rec.cfg.pool)
-            busy[rec.cfg.pool] = busy.get(rec.cfg.pool, 0.0) - refund
-            served.charge(vst.tenant, -refund)
-            requeues += 1
-            trace.append(TraceEntry(vwid, vtid, rec.cfg.impl, rec.cfg.pool,
-                                    rec.ndev, rec.start, t,
-                                    note="preempted"))
-            if log is not None:
-                kept = vst.items_done.get(vtid, 0)
-                log.append(f"[{t:8.1f}s] preempt {vwid}:{vtid} "
-                           f"({rec.ndev}x{rec.cfg.pool}); requeued"
-                           + (f" ({kept} items checkpointed)" if kept
-                              else ""))
-
-        def try_preempt(pool: str, n_needed: int) -> bool:
-            """Reclaim harvest-class leases for a priority tenant."""
-            deficit = n_needed - self.cluster.free(pool)
-            if deficit <= 0 or self.cluster.harvest_devices(pool) < deficit:
-                return False
-            victims = self.cluster.preempt_harvest(pool, deficit, t)
-            for lease in victims:
-                # idle warm instance on a preempted lease: drop the shell
-                # through the manager's eviction path so its bookkeeping
-                # (instance list + lease table) stays consistent; the lease
-                # itself was already released by preempt_harvest, which
-                # evict_instance tolerates
-                for inst in [i for i in self.cluster.instances
-                             if i.lease is not None
-                             and i.lease.id == lease.id]:
-                    self.cluster.evict_instance(inst, t)
-                owner = lease_owner.pop(lease.id, None)
-                if owner is not None:
-                    cancel_task(*owner)
-            return bool(victims)
-
-        def try_start(wid: str, tid: str) -> bool:
-            """Start a ready task if its resources fit right now."""
-            st = wfs[wid]
-            node = st.dag.nodes[tid]
-            cfg = st.plan[tid]
-            impl = self.library.impls[cfg.impl]
-            spec = CATALOG[self.cluster.pools[cfg.pool].device]
-            harvest = st.tenant == "harvest"
-            priority = st.tenant == "priority"
-            leases: list[Lease] = []
-            insts: list[Instance] = []
-            new_inst = 0
-            # degrade configs planned for a larger cluster (elasticity)
-            cap = self.cluster.pools[cfg.pool].capacity
-            if cfg.n_devices > cap:
-                lo = impl.min_devices.get(spec.kind, 1)
-                n = 1
-                while n * 2 <= cap:
-                    n *= 2
-                if n < lo:
-                    raise RuntimeError(
-                        f"{cfg.impl} needs >= {lo} {spec.kind} devices; "
-                        f"pool {cfg.pool} has {cap}")
-                cfg = cfg.with_(n_devices=n, n_instances=1)
-                st.plan.configs[tid] = cfg
-
-            def _alloc_or_evict(n):
-                lease = self.cluster.alloc(cfg.pool, n, t, harvest=harvest)
-                if lease is None:
-                    # evict idle warm instances of *other* impls (LRU)
-                    idle = sorted(
-                        (i for i in self.cluster.instances
-                         if i.pool == cfg.pool and i.busy_until <= t
-                         and i.impl != cfg.impl),
-                        key=lambda i: i.warm_since)
-                    for victim in idle:
-                        self.cluster.evict_instance(victim, t)
-                        lease = self.cluster.alloc(cfg.pool, n, t,
-                                                   harvest=harvest)
-                        if lease is not None:
-                            break
-                return lease
-
-            if self._is_model(impl):
-                def _acquire():
-                    nonlocal new_inst
-                    # reuse idle warm instances on the right pool/size first
-                    avail = [i for i in self.cluster.instances
-                             if i.impl == cfg.impl and i.pool == cfg.pool
-                             and i.n_devices == cfg.n_devices
-                             and i.busy_until <= t and i not in insts]
-                    insts.extend(avail[:cfg.n_instances - len(insts)])
-                    while len(insts) < cfg.n_instances:
-                        lease = _alloc_or_evict(cfg.n_devices)
-                        if lease is None:
-                            break
-                        inst = Instance(cfg.impl, cfg.pool, cfg.n_devices,
-                                        warm_since=t, lease=lease)
-                        self.cluster.add_instance(inst)
-                        insts.append(inst)
-                        new_inst += 1
-
-                _acquire()
-                if not insts and priority and \
-                        try_preempt(cfg.pool, cfg.n_devices):
-                    _acquire()
-                if not insts:
-                    return False
-                for inst in insts:
-                    self._relabel_lease(inst, harvest, t)
-                n_inst = len(insts)
-            else:
-                total = cfg.n_devices * cfg.n_instances
-                lease = self.cluster.alloc(cfg.pool, total, t,
-                                           harvest=harvest)
-                n_inst = cfg.n_instances
-                if lease is None:
-                    lease = _alloc_or_evict(cfg.n_devices)
-                    n_inst = 1
-                    if lease is None and priority and \
-                            try_preempt(cfg.pool, cfg.n_devices):
-                        lease = _alloc_or_evict(cfg.n_devices)
-                    if lease is None:
-                        return False
-                leases.append(lease)
-
-            items_done = st.items_done.get(tid, 0) if self.resume else 0
-            dur, compute, per_inst = self._duration(node, cfg, n_inst,
-                                                    new_inst, items_done)
-            pmult = cfg.paths if cfg.paths > 1 and not node.chunkable else 1.0
-            dur *= pmult
-            end = t + dur
-            # the tail of the run is compute; any lead-in is weights load
-            compute_begin = end - compute * pmult
-            for inst in insts:
-                inst.busy_until = end
-            ndev = cfg.n_devices * n_inst
-            dev_s = compute * ndev * cfg.paths
-            pf = self.profiles.power_frac(impl, spec, cfg.n_devices)
-            ledger.charge_active(spec, dev_s, utilization=pf, pool=cfg.pool)
-            busy[cfg.pool] = busy.get(cfg.pool, 0.0) + dev_s
-            served.charge(st.tenant, dev_s)
-            st.started.add(tid)
-            attempt = st.attempt.get(tid, 0)
-            # compose the note: restart kind + warmth, so preemption
-            # analysis sees a requeue that also paid a cold weights load
-            # ("requeue+cold") rather than losing the restart cost
-            restart = ("resume" if attempt and items_done else
-                       "requeue" if attempt else "")
-            warmth = "cold" if new_inst else ("warm" if insts else "")
-            note = "+".join(s for s in (restart, warmth) if s)
-            for lease in leases:
-                lease_owner[lease.id] = (wid, tid)
-            for inst in insts:
-                if inst.lease is not None:
-                    lease_owner[inst.lease.id] = (wid, tid)
-            running[(wid, tid)] = _Running(cfg, leases, insts, t, end,
-                                           compute_begin, ndev, dev_s, pf,
-                                           note, n_inst=n_inst,
-                                           batch=(1 if spec.kind == "cpu"
-                                                  else cfg.batch),
-                                           items_done0=items_done,
-                                           items_per_inst=per_inst,
-                                           resumable=node.chunkable)
-            heapq.heappush(events, (end, next(ctr), "finish",
-                                    (wid, tid, attempt)))
-            if log is not None:
-                log.append(f"[{t:8.1f}s] start {wid}:{tid} on "
-                           f"{ndev}x{cfg.pool} ({cfg.impl})"
-                           + (f" [{restart}]" if restart else ""))
-            return True
-
+        events = eng.events
         while events:
             t, _, kind, payload = heapq.heappop(events)
+            eng.t = t
             # drain every event sharing this timestamp before dispatching:
             # simultaneous arrivals are all admitted (and planned) before
             # any of them starts work, so admission-policy order holds for
@@ -489,81 +853,217 @@ class Simulator:
             while events and events[0][0] == t:
                 _, _, k, p = heapq.heappop(events)
                 batch.append((k, p))
+            eng.n_events += len(batch)
             for kind, payload in batch:
                 if kind == "arrive":
-                    st = wfs[payload]
-                    if st.plan is None:
-                        if st.plan_fn is None:
-                            raise ValueError(
-                                f"workflow {payload!r} submitted without a "
-                                f"plan or plan_fn")
-                        # admission-time planning: the scheduler sees the
-                        # live cluster (warm instances, free devices)
-                        st.plan = st.plan_fn()
+                    eng.admit(payload)
                 elif kind == "finish":
-                    wid, tid, attempt = payload
-                    st = wfs[wid]
-                    if st.attempt.get(tid, 0) != attempt:
-                        continue    # stale: this execution was preempted
-                    rec = running.pop((wid, tid))
-                    st.done.add(tid)
-                    st.finish = max(st.finish, t)
-                    self.cluster.complete_task(wid, tid)
-                    impl = self.library.impls[rec.cfg.impl]
-                    for lease in rec.leases:
-                        # model instances keep their devices (stay warm);
-                        # tools release. Instance devices are reclaimed by
-                        # rebalance.
-                        lease_owner.pop(lease.id, None)
-                        if not self._is_model(impl):
-                            self.cluster.release(lease, t)
-                    for inst in rec.insts:
-                        if inst.lease is not None:
-                            lease_owner.pop(inst.lease.id, None)
-                    trace.append(TraceEntry(wid, tid, rec.cfg.impl,
-                                            rec.cfg.pool, rec.ndev,
-                                            rec.start, t, note=rec.note))
-                    # workflow-aware reclamation once demand disappears
-                    for action in self.cluster.rebalance(self.library, t):
-                        if log is not None:
-                            log.append(f"[{t:8.1f}s] rebalance: {action}")
-            # start whatever is now ready and fits
-            progress = True
-            while progress:
-                progress = False
-                for wid, tid in ready_tasks():
-                    if try_start(wid, tid):
-                        progress = True
+                    eng.on_finish(payload)
+            eng.dispatch()
 
-        stuck = [(wid, tid) for wid, s in wfs.items()
+        stuck = [(wid, tid) for wid, s in eng.wfs.items()
                  for tid in s.dag.nodes
                  if tid not in s.done]
         if stuck:
             raise RuntimeError(f"deadlocked tasks (resources never fit): "
                                f"{stuck[:8]}")
-        makespan = max((st.finish for st in wfs.values()), default=0.0)
+        makespan = max((st.finish for st in eng.wfs.values()), default=0.0)
         # instances still holding devices release at makespan (accounted as
         # idle power via the pool floor below).
-        for pool, p in self.cluster.pools.items():
-            spec = p.spec
-            ledger.charge_idle(spec, p.capacity, makespan)
+        eng.finalize(makespan)
+        return eng.report(makespan)
 
-        per_wf = {wid: {"start": st.arrival, "finish": st.finish,
-                        "tasks": len(st.dag), "tenant": st.tenant}
-                  for wid, st in wfs.items()}
-        return SimReport(
-            makespan_s=makespan,
-            energy_wh=ledger.wh,
-            active_wh=ledger.active_joules / 3600.0,
-            idle_wh=ledger.idle_joules / 3600.0,
-            usd=ledger.usd,
-            trace=sorted(trace, key=lambda e: (e.start, e.end, e.workflow)),
-            per_workflow=per_wf,
-            pool_busy_device_s=busy,
-            preemptions=self.cluster.preemptions - preempt0,
-            requeues=requeues,
-            resumed_items=resumed_items,
-            wasted_dev_s=wasted_dev_s,
+    # -- open-loop engine --------------------------------------------------------
+    def run_open_loop(self,
+                      source: "Iterable[tuple[str, Submission]]",
+                      horizon_s: float,
+                      *,
+                      warmup_s: float = 0.0,
+                      policy=None,
+                      autoscaler=None,
+                      log: list | None = None,
+                      collect_trace: bool = True) -> OpenLoopReport:
+        """Serve an open-loop arrival stream for ``horizon_s`` seconds.
+
+        ``source`` yields ``(workflow_id, Submission)`` pairs with
+        non-decreasing arrival times (``core.arrivals`` generators qualify);
+        arrivals are pulled lazily — one look-ahead submission lives in the
+        event heap at a time, so a 10k-workflow sweep never materializes
+        its whole future. Arrivals past ``horizon_s`` are not admitted;
+        admitted work drains to completion.
+
+        Steady-state metrics trim the warmup: only workflows arriving in
+        ``[warmup_s, horizon_s]`` count toward per-class SLO attainment,
+        goodput, and the span percentiles. ``autoscaler`` (an
+        ``core.autoscale.Autoscaler``) is consulted on periodic ``scale``
+        events and applies pool resizes through
+        ``ClusterManager.set_capacity`` — scale-ups after the policy lag,
+        scale-downs immediately (cooldown permitting).
+        """
+        wall0 = time.perf_counter()
+        pol = get_policy(policy)
+        eng = _Engine(self, pol, log, collect_trace=collect_trace)
+        stream: Iterator[tuple[str, Submission]] = iter(source)
+        arrivals = 0
+        last_arrival = 0.0
+        exhausted = False
+
+        def _pull() -> bool:
+            """Admit the next submission into the heap (one look-ahead)."""
+            nonlocal arrivals, last_arrival, exhausted
+            if exhausted:
+                return False
+            for wid, sub in stream:
+                if sub.arrival > horizon_s:
+                    # past the arrival window: stop pulling (the source may
+                    # be an infinite generator)
+                    exhausted = True
+                    return False
+                if sub.arrival < last_arrival:
+                    raise ValueError(
+                        f"open-loop source must be time-ordered: "
+                        f"{wid!r} arrives at {sub.arrival} after "
+                        f"{last_arrival}")
+                last_arrival = sub.arrival
+                eng.add_submission(wid, sub)
+                arrivals += 1
+                return True
+            exhausted = True
+            return False
+
+        _pull()
+        if autoscaler is not None:
+            self._scale_limits = autoscaler.limits()
+            autoscaler.validate(self.cluster)
+            heapq.heappush(eng.events,
+                           (autoscaler.interval_s, next(eng.ctr),
+                            "scale", None))
+        scale_actions: list[tuple] = []
+        events = eng.events
+        heappop = heapq.heappop
+        try:
+            while events:
+                t, _, kind, payload = heappop(events)
+                eng.t = t
+                n = 1
+                # drain every same-t event (including ones the handlers
+                # chain in: zero-lag applies, same-t arrivals pulled from
+                # the stream) before dispatching once for the timestamp.
+                # Same-t events pop in push-counter order, so handling
+                # them as they pop matches handling them as a batch.
+                while True:
+                    if kind == "arrive":
+                        eng.admit(payload)
+                        # keep exactly one future arrival in the heap
+                        self.cluster.register_workflow(
+                            payload, eng.wfs[payload].dag)
+                        _pull()
+                    elif kind == "finish":
+                        eng.on_finish(payload)
+                    elif kind == "scale":
+                        for act in autoscaler.decide(
+                                self.cluster, self._demand_by_pool(eng), t):
+                            if act.lag_s > 0:
+                                heapq.heappush(
+                                    events, (t + act.lag_s, next(eng.ctr),
+                                             "scale_apply", act))
+                            else:
+                                autoscaler.apply(self.cluster, act, t)
+                                scale_actions.append(
+                                    (t, act.pool, act.capacity))
+                        if events or eng.running or \
+                                any(st.ready for st in eng.wfs.values()):
+                            heapq.heappush(
+                                events, (t + autoscaler.interval_s,
+                                         next(eng.ctr), "scale", None))
+                    elif kind == "scale_apply":
+                        autoscaler.apply(self.cluster, payload, t)
+                        scale_actions.append(
+                            (t, payload.pool, payload.capacity))
+                    if events and events[0][0] == t:
+                        _, _, kind, payload = heappop(events)
+                        n += 1
+                    else:
+                        break
+                eng.n_events += n
+                eng.dispatch()
+        finally:
+            self._scale_limits = {}
+
+        makespan = max((st.finish for st in eng.wfs.values()), default=0.0)
+        eng.finalize(makespan)
+        rep = eng.report(makespan)
+        wall = time.perf_counter() - wall0
+        return self._steady_state(rep, eng, horizon_s, warmup_s, arrivals,
+                                  wall, scale_actions)
+
+    def _demand_by_pool(self, eng: _Engine) -> dict[str, int]:
+        """Devices wanted right now per pool: held + queued (ready) work."""
+        demand = dict(self.cluster._used)
+        for st in eng.wfs.values():
+            if st.plan is None:
+                continue
+            for _, tid in st.ready:
+                cfg = st.plan.configs[tid]
+                demand[cfg.pool] = demand.get(cfg.pool, 0) + \
+                    cfg.n_devices * cfg.n_instances
+        return demand
+
+    def _steady_state(self, rep: SimReport, eng: _Engine, horizon_s: float,
+                      warmup_s: float, arrivals: int, wall: float,
+                      scale_actions: list) -> OpenLoopReport:
+        """Fold steady-state serving metrics into an OpenLoopReport."""
+        completed = 0
+        per_class: dict[str, dict] = {}
+        spans: dict[str, list[float]] = {}
+        met: dict[str, int] = {}
+        measured = 0
+        goodput_n = 0
+        for wid, st in eng.wfs.items():
+            done = len(st.done) == len(st.dag.nodes)
+            if done:
+                completed += 1
+            if st.arrival < warmup_s or not done:
+                continue
+            measured += 1
+            span = st.finish - st.arrival
+            spans.setdefault(st.tenant, []).append(span)
+            if st.slo_s is not None:
+                ok = span <= st.slo_s
+                met[st.tenant] = met.get(st.tenant, 0) + (1 if ok else 0)
+                if ok:
+                    goodput_n += 1
+        for tenant, ss in sorted(spans.items()):
+            ss.sort()
+            n = len(ss)
+            per_class[tenant] = {
+                "n": n,
+                "p50_s": ss[int(0.50 * (n - 1))],
+                "p99_s": ss[int(0.99 * (n - 1))],
+                "mean_s": sum(ss) / n,
+                "slo_attainment": (met[tenant] / n if tenant in met
+                                   else None),
+            }
+        elapsed = max(rep.makespan_s - warmup_s, 1e-9)
+        n_ev = eng.n_events + eng.n_attempts
+        return OpenLoopReport(
+            **{f: getattr(rep, f) for f in (
+                "makespan_s", "energy_wh", "active_wh", "idle_wh", "usd",
+                "trace", "per_workflow", "pool_busy_device_s",
+                "preemptions", "requeues", "resumed_items", "wasted_dev_s")},
+            horizon_s=horizon_s,
+            warmup_s=warmup_s,
+            offered_rps=arrivals / max(horizon_s, 1e-9),
+            arrivals=arrivals,
+            completed=completed,
+            measured=measured,
+            goodput_rps=goodput_n / elapsed,
+            per_class=per_class,
+            n_events=eng.n_events,
+            n_attempts=eng.n_attempts,
+            wall_s=wall,
+            events_per_s=n_ev / max(wall, 1e-9),
+            scale_actions=scale_actions,
         )
 
     def _relabel_lease(self, inst: Instance, harvest: bool, t: float):
@@ -576,23 +1076,46 @@ class Simulator:
         if not self.cluster.lease_active(lease):
             inst.lease = None
             return
-        self.cluster.release(lease, t)
-        inst.lease = self.cluster.alloc(inst.pool, inst.n_devices, t,
-                                        harvest=harvest)
+        # flip the flag in place (the lease keeps its id and devices; the
+        # seed's release-then-realloc round trip was an artifact of Lease
+        # being frozen). Flipping *to* harvest adds preemptible supply, so
+        # the pool's availability epoch must move — a blocked priority
+        # task may now preempt its way in; flipping away removes supply
+        # and can never unblock anything.
+        lease.harvest = harvest
+        if harvest:
+            self.cluster.free_epoch[lease.pool] += 1
+            self.cluster.epoch_total += 1
 
 
-def render_trace(report: SimReport, width: int = 72) -> str:
-    """ASCII Fig-3-style execution trace."""
+def render_trace(report: SimReport, width: int = 72,
+                 max_rows: int = 200) -> str:
+    """ASCII Fig-3-style execution trace.
+
+    Long runs are subsampled to ``max_rows`` evenly-spaced task rows (an
+    open-loop sweep has tens of thousands — the full dump was unreadable
+    and O(events) lines); a footer notes how many rows were elided.
+    ``max_rows <= 0`` disables the cap.
+    """
     if not report.trace:
         return "(empty trace)"
     span = max(report.makespan_s, 1e-9)
+    entries = report.trace
+    elided = 0
+    if 0 < max_rows < len(entries):
+        step = len(entries) / max_rows
+        entries = [entries[int(i * step)] for i in range(max_rows)]
+        elided = len(report.trace) - len(entries)
     lines = [f"{'task':<28s} {'pool':<10s} {'t':>7s}  timeline"]
-    for e in report.trace:
+    for e in entries:
         a = int(e.start / span * width)
         b = max(int(e.end / span * width), a + 1)
         bar = " " * a + "#" * (b - a)
         lines.append(f"{e.workflow + ':' + e.task:<28.28s} {e.pool:<10.10s} "
                      f"{e.end - e.start:7.1f}  |{bar:<{width}s}|")
+    if elided:
+        lines.append(f"... {elided} of {len(report.trace)} rows elided "
+                     f"(raise max_rows to see more)")
     lines.append(f"makespan={report.makespan_s:.1f}s "
                  f"energy={report.energy_wh:.1f}Wh "
                  f"(active {report.active_wh:.1f} + idle {report.idle_wh:.1f})"

@@ -20,7 +20,9 @@ from .dag import DAG
 from .orchestrator import RulePlanner
 from .profiles import ProfileStore
 from .scheduler import ExecutionPlan, Scheduler
-from .simulator import SimReport, Simulator, Submission, render_trace
+from .arrivals import SERVING_PRESETS, ArrivalProcess
+from .simulator import (OpenLoopReport, SimReport, Simulator, Submission,
+                        render_trace)
 from .spec import build_node, input_units
 from .workflow import COMPONENT_ALIASES, ImperativeWorkflow, Job
 
@@ -159,6 +161,85 @@ class Murakkab:
         sim = Simulator(self.cluster, self.library, self.profiles,
                         resume=resume)
         return sim.run(subs, log=log, policy=policy)
+
+    def open_loop(self, process: ArrivalProcess, horizon_s: float, *,
+                  warmup_s: float = 0.0, presets: dict | None = None,
+                  policy: str | None = "strict-priority", autoscaler=None,
+                  log: list | None = None, collect_trace: bool = True,
+                  resume: bool = True, fast_dispatch: bool = True,
+                  plan_mode: str = "amortized") -> OpenLoopReport:
+        """Serve an open-loop arrival stream (DESIGN.md §8).
+
+        ``process`` is a ``core.arrivals`` generator (Poisson / MMPP /
+        trace replay); each :class:`ArrivalEvent` is turned into a
+        ``Submission`` via the scenario's :class:`ServingPreset` (job
+        factory + per-class SLO). Scenario DAGs are lowered once and
+        shared across arrivals — sound because the engine only mutates
+        private plan copies and per-workflow state — so a 10k-arrival
+        sweep pays one lowering, not 10k.
+
+        ``plan_mode`` picks the planning amortization:
+
+        - ``"amortized"`` (default): each scenario is planned once, on its
+          first arrival, and later arrivals reuse a private copy of that
+          plan. This is the serving posture — plans are compiled per
+          workflow template, not per request — and what makes a
+          10k-arrival sweep feasible (the admission-time plan cache is
+          keyed by the cluster digest, which differs at almost every
+          open-loop arrival, so per-request planning re-runs the search).
+        - ``"admission"``: the closed-loop semantics — every arrival plans
+          against the live cluster digest through ``plan_admitted``.
+
+        ``autoscaler`` is a ``core.autoscale.Autoscaler``; steady-state
+        metrics trim the first ``warmup_s`` of arrivals.
+        """
+        if plan_mode not in ("amortized", "admission"):
+            raise ValueError(f"plan_mode must be 'amortized' or "
+                             f"'admission', got {plan_mode!r}")
+        presets = presets if presets is not None else SERVING_PRESETS
+        if not presets:
+            raise RuntimeError(
+                "no serving presets available — import repro.configs "
+                "(workflow_video/rag/docingest) or pass presets=")
+        lowered: dict[str, tuple[DAG, Job]] = {}
+        plans: dict[str, ExecutionPlan] = {}
+
+        def _stream():
+            for i, ev in enumerate(process.events()):
+                if ev.t > horizon_s:
+                    break     # the engine stops pulling here anyway
+                preset = presets[ev.scenario]
+                pair = lowered.get(ev.scenario)
+                if pair is None:
+                    job = (preset.make_job(preset.constraints)
+                           if preset.constraints is not None
+                           else preset.make_job())
+                    pair = lowered[ev.scenario] = (self.lower(job), job)
+                dag, job = pair
+                plan = plan_fn = None
+                if plan_mode == "amortized":
+                    tmpl = plans.get(ev.scenario)
+                    if tmpl is None:
+                        tmpl = plans[ev.scenario] = \
+                            self.plan_admitted(dag, job)
+                    # submissions share the template: the engine's only
+                    # in-place plan mutation (capacity degrade) takes a
+                    # copy-on-write private plan first
+                    plan = tmpl
+                else:
+                    def plan_fn(dag=dag, job=job):
+                        return self.plan_admitted(dag, job)
+
+                yield f"w{i:06d}", Submission(
+                    dag=dag, plan=plan, arrival=ev.t, tenant=ev.tenant,
+                    plan_fn=plan_fn, slo_s=preset.slo_for(ev.tenant),
+                    scenario=ev.scenario)
+
+        sim = Simulator(self.cluster, self.library, self.profiles,
+                        resume=resume, fast_dispatch=fast_dispatch)
+        return sim.run_open_loop(_stream(), horizon_s, warmup_s=warmup_s,
+                                 policy=policy, autoscaler=autoscaler,
+                                 log=log, collect_trace=collect_trace)
 
     def plan_admitted(self, dag: DAG, job: Job) -> ExecutionPlan:
         """Plan one admitted workflow against live cluster state, reusing a

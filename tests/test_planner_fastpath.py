@@ -142,6 +142,55 @@ def test_cluster_digest_tracks_planner_visible_state():
     assert system.cluster.digest() == d0
 
 
+def _recomputed_digest(cluster):
+    """Force the uncached path: drop the memo, recompute, restore."""
+    memo = cluster._digest
+    cluster._digest = None
+    fresh = cluster.digest()
+    cluster._digest = memo
+    return fresh
+
+
+def test_digest_cache_byte_identical_to_recompute():
+    """Satellite: the dirty-flag memo must equal a from-scratch recompute
+    after every mutation class that can touch planner-visible state —
+    alloc, release, instance add/evict, capacity resize, preemption."""
+    from repro.core.cluster import Instance
+    system = _system()
+    cluster = system.cluster
+    assert cluster.digest() == _recomputed_digest(cluster)
+
+    lease = cluster.alloc("v5e", 4, t=0.0)
+    assert cluster.digest() == _recomputed_digest(cluster)
+
+    inst = Instance("gemma2-9b", "v5e", 4, lease=lease)
+    cluster.add_instance(inst)
+    assert cluster.digest() == _recomputed_digest(cluster)
+
+    cluster.set_capacity("v4_harvest", 8, t=1.0)
+    assert cluster.digest() == _recomputed_digest(cluster)
+
+    h = cluster.alloc("v4_harvest", 4, t=2.0, harvest=True)
+    assert cluster.digest() == _recomputed_digest(cluster)
+    assert cluster.preempt_harvest("v4_harvest", 4, t=3.0)
+    assert h.id not in cluster._leases
+    assert cluster.digest() == _recomputed_digest(cluster)
+
+    cluster.evict_instance(inst, t=4.0)     # also releases the lease
+    assert cluster.digest() == _recomputed_digest(cluster)
+
+
+def test_digest_cached_object_reused_between_reads():
+    """No mutation between two reads ⟹ the same memoized tuple comes back
+    (identity, not just equality — the cache actually short-circuits)."""
+    system = _system()
+    cluster = system.cluster
+    cluster.alloc("v5e", 2, t=0.0)
+    d1 = cluster.digest()
+    d2 = cluster.digest()
+    assert d1 is d2
+
+
 def test_pinned_counts_respect_max_devices():
     """Satellite fix: a calibration point above impl.max_devices must not
     become selectable — the filter caps at hi = min(max_devices, cap)."""
