@@ -37,7 +37,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 
 from repro.core import CATALOG, Murakkab
 from repro.core.energy import batch_knee
-from repro.core.profiles import ProfileStore
+from repro.core.profiles import CostQuery, ProfileStore
 
 
 def batch_grid(impl, spec, tokens_in: int = 1024, tokens_out: int = 256,
@@ -79,7 +79,9 @@ def capture_curve(library, impl_name: str, device: str, n_devices: int,
     store = ProfileStore(library)
     work = impl.work_fn(tokens_in, tokens_out)
     bs = batches or batch_grid(impl, spec, tokens_in, tokens_out)
-    return {b: store.latency(impl, spec, n_devices, work, b) for b in bs}
+    return {b: store.step_latency(CostQuery(
+        impl=impl, spec=spec, n_devices=n_devices, work=work,
+        batch=b)) / b for b in bs}
 
 
 def pin_curves(store: ProfileStore, curves: dict) -> int:

@@ -155,6 +155,12 @@ class AgentImpl:
     # §7.2) batch over their calibration instead.
     max_batch: int = 1
     batch_alpha: float = 1.0
+    # KV-cache bytes one context token keeps resident (2 * kv_heads *
+    # head_dim * layers * 2 B for bf16 K+V). Zero means the impl never
+    # caches prefixes (tools, encoder models) — the serving engine only
+    # builds a prefix ledger for impls that declare a footprint
+    # (DESIGN.md §9).
+    kv_bytes_per_token: float = 0.0
 
 
 @functools.lru_cache(maxsize=None)
@@ -293,8 +299,10 @@ def default_library() -> AgentLibrary:
         schema={"texts": "list"},
         keywords=("embed", "vector", "index", "insert"),
         produces="vectors",
-        consumes=("summary", "grounded_answer", "chunk_summaries"),
-        cardinality=CardinalityModel(("scenes", "chunks", "queries"))))
+        consumes=("summary", "grounded_answer", "chunk_summaries",
+                  "chat_reply"),
+        cardinality=CardinalityModel(("scenes", "chunks", "queries",
+                                      "turns"))))
     lib.register_interface(AgentInterface(
         "qa", "Answer questions over retrieved context",
         schema={"question": "str", "top_k": "int"},
@@ -340,6 +348,24 @@ def default_library() -> AgentLibrary:
         produces="chunk_summaries", consumes=("text_chunks",),
         cardinality=CardinalityModel(("chunks",)),
         tokens=TokenModel(tokens_in=700, tokens_out=90)))
+
+    # ---- multi-turn chat interface (the stateful-serving scenario) ----
+    # the prompt grows with the conversation (in_units adds the history to
+    # tokens_in) and that same history is the session-shared prefix a
+    # resident KV cache can serve (prefix_units, DESIGN.md §9)
+    lib.register_interface(AgentInterface(
+        "chat_respond", "Generate the assistant's reply for one chat turn",
+        schema={"message": "str", "max_tokens": "int"},
+        keywords=("chat", "respond", "reply", "assistant", "converse"),
+        produces="chat_reply", consumes=("chat_turn",),
+        cardinality=CardinalityModel(("turns",)),
+        # tool-calling-agent geometry: a fat prompt (user message plus
+        # retrieved/tool context) and a short structured reply, so turn
+        # latency is prefill-compute-bound — the regime where a resident
+        # session prefix actually moves the roofline (DESIGN.md §9)
+        tokens=TokenModel(tokens_in=640, tokens_out=24,
+                          in_units="history_tokens",
+                          prefix_units="history_tokens")))
 
     # ---- tools ----
     lib.register_impl(AgentImpl(
@@ -531,4 +557,25 @@ def default_library() -> AgentLibrary:
             max_devices={"tpu": 64, "gpu": 8}, power_frac=0.65,
             load_time_s=45.0 if big else 8.0, arch=arch, params_bytes=pbytes,
             max_batch=64, batch_alpha=0.15, overhead_s=0.3))
+
+    # ---- chat tiers (zoo ladder with declared KV footprints) ----
+    # kv_bytes_per_token ~ 2 (K+V) * 2 B (bf16) * layers * kv_heads *
+    # head_dim (GQA keeps it ~1e5 for the small tiers); min 2 devices so
+    # weights + a useful prefix budget fit the smallest SKU. overhead_s is
+    # low: these run in a high-QPS serving stack, not a batch harness.
+    for arch, quality, hw, kvb in [
+        ("deepseek-7b", 0.86, ("gpu", "tpu"), 1.3e5),
+        ("gemma2-9b", 0.90, ("gpu", "tpu"), 1.7e5),
+        ("command-r-plus-104b", 0.97, ("tpu",), 4.1e5),
+    ]:
+        wfn, pbytes = _lm_work(arch)
+        big = pbytes > 60e9
+        lib.register_impl(AgentImpl(
+            f"{arch}-chat", "chat_respond", quality=quality, hw_kinds=hw,
+            work_fn=wfn,
+            min_devices={"tpu": 8 if big else 2, "gpu": 8 if big else 2},
+            max_devices={"tpu": 64, "gpu": 8}, power_frac=0.65,
+            load_time_s=45.0 if big else 8.0, arch=arch, params_bytes=pbytes,
+            kv_bytes_per_token=kvb, max_batch=32, batch_alpha=0.15,
+            overhead_s=0.05))
     return lib

@@ -14,6 +14,10 @@ show up under a generated arrival stream. Three seeded processes:
 - :class:`TraceArrivals` — replay of a recorded schedule, round-tripping a
   JSONL file (one ``{"t": ..., "scenario": ..., "tenant": ...}`` object
   per line), so production traces can be fed straight into the engine.
+- :class:`SessionArrivals` — multi-turn chat/agent sessions (DESIGN.md
+  §9): Poisson session starts, geometric turn counts, exponential think
+  time between turns. Each event carries the session id and turn index,
+  so the engine can route turns to KV-cache-resident instances.
 
 Every process yields :class:`ArrivalEvent` rows in non-decreasing time
 order and is fully determined by its seed — two iterations of the same
@@ -23,6 +27,8 @@ arrival from weight maps, so one stream carries a heterogeneous mix.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import json
 import random
 from dataclasses import dataclass, field
@@ -38,11 +44,18 @@ DEFAULT_TENANT_SHARES = {"priority": 0.2, "standard": 0.5, "harvest": 0.3}
 
 @dataclass(frozen=True)
 class ArrivalEvent:
-    """One workflow arrival: when, which scenario, which tenant class."""
+    """One workflow arrival: when, which scenario, which tenant class.
+
+    ``session``/``turn`` identify multi-turn serving sessions (empty /
+    0 for the stateless processes — the wire format omits them then, so
+    pre-session traces round-trip unchanged).
+    """
 
     t: float
     scenario: str
     tenant: str = "standard"
+    session: str = ""
+    turn: int = 0
 
 
 def _normalize(weights: dict[str, float], what: str) -> list[tuple[str, float]]:
@@ -190,11 +203,18 @@ class TraceArrivals(ArrivalProcess):
 
     # -- JSONL round trip ----------------------------------------------------
     def to_jsonl(self) -> str:
-        """One JSON object per line: {"t", "scenario", "tenant"}."""
-        return "\n".join(
-            json.dumps({"t": e.t, "scenario": e.scenario,
-                        "tenant": e.tenant}, sort_keys=True)
-            for e in self._events)
+        """One JSON object per line: {"t", "scenario", "tenant"} plus
+        {"session", "turn"} for session-carrying events only (the
+        sessionless wire format is byte-stable across this addition)."""
+        rows = []
+        for e in self._events:
+            row: dict = {"t": e.t, "scenario": e.scenario,
+                         "tenant": e.tenant}
+            if e.session:
+                row["session"] = e.session
+                row["turn"] = e.turn
+            rows.append(json.dumps(row, sort_keys=True))
+        return "\n".join(rows)
 
     @classmethod
     def from_jsonl(cls, text: str) -> "TraceArrivals":
@@ -206,7 +226,9 @@ class TraceArrivals(ArrivalProcess):
                 continue
             row = json.loads(line)
             events.append(ArrivalEvent(float(row["t"]), row["scenario"],
-                                       row.get("tenant", "standard")))
+                                       row.get("tenant", "standard"),
+                                       row.get("session", ""),
+                                       int(row.get("turn", 0))))
         return cls(events)
 
     @classmethod
@@ -219,6 +241,74 @@ class TraceArrivals(ArrivalProcess):
                 break
             events.append(e)
         return cls(events)
+
+
+class SessionArrivals(ArrivalProcess):
+    """Multi-turn serving sessions (chat/agent loops, DESIGN.md §9).
+
+    Sessions start as a Poisson process at ``session_rate_per_s``. Each
+    session samples its tenant class once, then emits turns: after turn
+    ``k`` the session continues with probability ``1 - 1/mean_turns``
+    (geometric turn counts with the given mean, hard-capped at
+    ``max_turns``), and the next turn arrives after an exponential think
+    gap of mean ``think_time_s``. Turns of concurrent sessions interleave
+    in time order via a heap merge; a single seeded RNG drives every draw,
+    so the stream replays exactly.
+    """
+
+    def __init__(self, session_rate_per_s: float, scenario: str = "chat",
+                 mean_turns: float = 6.0, think_time_s: float = 45.0,
+                 max_turns: int = 32,
+                 tenant_shares: dict[str, float] | None = None,
+                 seed: int = 0):
+        if session_rate_per_s <= 0:
+            raise ValueError(f"session_rate_per_s must be > 0, "
+                             f"got {session_rate_per_s}")
+        if mean_turns < 1:
+            raise ValueError(f"mean_turns must be >= 1, got {mean_turns}")
+        if think_time_s <= 0:
+            raise ValueError(f"think_time_s must be > 0, "
+                             f"got {think_time_s}")
+        if max_turns < 1:
+            raise ValueError(f"max_turns must be >= 1, got {max_turns}")
+        self.session_rate_per_s = session_rate_per_s
+        self.scenario = scenario
+        self.mean_turns = mean_turns
+        self.think_time_s = think_time_s
+        self.max_turns = max_turns
+        self.seed = seed
+        self._init_mix({scenario: 1.0}, tenant_shares)
+
+    def mean_rate(self) -> float:
+        """Long-run offered turns/s (sessions/s x mean turns, pre-cap)."""
+        return self.session_rate_per_s * self.mean_turns
+
+    def events(self) -> Iterator[ArrivalEvent]:
+        """Infinite time-ordered turn stream across concurrent sessions."""
+        rng = random.Random(self.seed)
+        cont = 1.0 - 1.0 / max(self.mean_turns, 1.0)
+        seq = itertools.count()       # FIFO tiebreak for same-t events
+        sessions = 0
+        # heap rows: (t, seq, session_id | None, turn, tenant);
+        # session_id None marks a pending session *start*
+        heap: list = [(rng.expovariate(self.session_rate_per_s),
+                       next(seq), None, 0, "")]
+        while heap:
+            t, _, sid, turn, tenant = heapq.heappop(heap)
+            if sid is None:
+                # a session starts now: name it, sample its tenant once,
+                # and queue the start of the next session
+                sid = f"s{sessions:06d}"
+                sessions += 1
+                tenant = _pick(self._shares, rng.random())
+                heapq.heappush(
+                    heap, (t + rng.expovariate(self.session_rate_per_s),
+                           next(seq), None, 0, ""))
+            if turn + 1 < self.max_turns and rng.random() < cont:
+                gap = rng.expovariate(1.0 / self.think_time_s)
+                heapq.heappush(heap, (t + gap, next(seq), sid,
+                                      turn + 1, tenant))
+            yield ArrivalEvent(t, self.scenario, tenant, sid, turn)
 
 
 # ---------------------------------------------------------------------------
@@ -244,6 +334,10 @@ class ServingPreset:
     slo_class_mult: dict = field(default_factory=lambda: {
         "priority": 0.5, "standard": 1.0, "harvest": 4.0})
     constraints: tuple | None = None     # forwarded to make_job
+    # session-aware factories take (session=..., turn=...) kwargs and
+    # build turn-indexed jobs (token footprint grows with history); the
+    # open-loop driver keys its lowering cache per turn for these
+    session_aware: bool = False
 
     def slo_for(self, tenant: str) -> float | None:
         """The span SLO for one tenant class (None = best-effort)."""

@@ -14,10 +14,39 @@ optional execution paths (CoT top-k) but not for critical-path work.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 from .dag import DAG
 from .energy import CATALOG, DeviceSpec
+
+# fraction of an instance's post-weights HBM headroom budgeted for the
+# KV/prefix cache (the rest is activations/fragmentation slack)
+KV_BUDGET_FRAC = 0.9
+
+
+def kv_cache_cap(spec: DeviceSpec, n_devices: int, params_bytes: float,
+                 kv_bytes_per_token: float) -> float:
+    """HBM bytes an instance can devote to resident prefix KV.
+
+    Weights are sharded across the device group, so the budget is the
+    group's aggregate HBM minus one copy of the weights, scaled by
+    :data:`KV_BUDGET_FRAC`. Zero when the implementation declares no KV
+    footprint (tools, non-attention models) — such instances never cache.
+    """
+    if kv_bytes_per_token <= 0:
+        return 0.0
+    return max(spec.hbm_bytes * n_devices - params_bytes, 0.0) \
+        * KV_BUDGET_FRAC
+
+
+@dataclass(slots=True)
+class CacheEntry:
+    """One resident prefix: a session's KV bytes held on an instance."""
+
+    session: str
+    tokens: int                # prefix tokens the entry can serve
+    bytes: float               # HBM residency (kv_bytes_per_token * tokens)
+    last_used: float           # LRU recency (sim time)
 
 
 @dataclass
@@ -43,18 +72,21 @@ class Lease:
     mints one per allocation on its hot path, and slot assignment is several
     times cheaper than the frozen-dataclass ``object.__setattr__`` chain.
     Only ``harvest`` is ever reassigned (the engine's lease relabeling);
-    treat everything else as immutable.
+    treat everything else as immutable. ``session`` is the chat/agent-loop
+    session the allocation serves, when known — an attribution hint for
+    debugging and audits, not a scheduling input.
     """
 
-    __slots__ = ("id", "pool", "n_devices", "t_start", "harvest")
+    __slots__ = ("id", "pool", "n_devices", "t_start", "harvest", "session")
 
     def __init__(self, id: int, pool: str, n_devices: int, t_start: float,
-                 harvest: bool = False):
+                 harvest: bool = False, session: str = ""):
         self.id = id
         self.pool = pool
         self.n_devices = n_devices
         self.t_start = t_start
         self.harvest = harvest            # preemptible allocation
+        self.session = session            # serving-session attribution hint
 
     def __repr__(self):
         return (f"Lease(id={self.id}, pool={self.pool!r}, "
@@ -77,6 +109,11 @@ class Instance:
     busy_until: float = 0.0
     warm_since: float = 0.0
     lease: "Lease | None" = None   # the devices this instance holds
+    # KV/prefix-cache residency (DESIGN.md §9): HBM budget left after the
+    # weights, and the prefix entries resident in it, keyed by session.
+    # Entries live and die with the instance — eviction drops them.
+    cache_cap_bytes: float = 0.0
+    cache: dict[str, CacheEntry] = field(default_factory=dict)
 
 
 class ClusterManager:
@@ -111,6 +148,9 @@ class ClusterManager:
         # warm-instance index: (impl, pool, n_devices) -> instances, so the
         # engine's reuse scan is O(matching) not O(all instances)
         self._inst_index: dict[tuple[str, str, int], list[Instance]] = {}
+        # session -> instances holding a resident prefix entry for it (the
+        # scheduler's affinity lookup; mirrors Instance.cache exactly)
+        self._cache_index: dict[str, list[Instance]] = {}
         # incrementally-maintained pending-task count per agent interface
         # (upcoming_demand used to rescan every registered DAG)
         self._demand: dict[str, int] = {}
@@ -125,13 +165,19 @@ class ClusterManager:
         p = self.pools[pool]
         return p.capacity - self._used[pool]
 
-    def alloc(self, pool: str, n: int, t: float,
-              harvest: bool = False) -> Lease | None:
-        """Grant ``n`` devices, or None when they don't fit."""
+    def alloc(self, pool: str, n: int, t: float, harvest: bool = False, *,
+              session: str = "") -> Lease | None:
+        """Grant ``n`` devices, or None when they don't fit.
+
+        ``session`` (keyword-only) attributes the allocation to a serving
+        session — recorded on the lease for audits/debugging; it does not
+        change what fits.
+        """
         if n <= 0 or self.pools[pool].capacity - self._used[pool] < n:
             return None
         self._used[pool] += n
-        lease = Lease(next(self._ids), pool, n, t, harvest=harvest)
+        lease = Lease(next(self._ids), pool, n, t, harvest=harvest,
+                      session=session)
         self._leases[lease.id] = lease
         self._digest = None
         if harvest:
@@ -250,7 +296,15 @@ class ClusterManager:
                 tuple(sorted(self._used.items())),
                 tuple(sorted((name, p.capacity)
                              for name, p in self.pools.items())),
-                frozenset((i.impl, i.pool) for i in self.instances))
+                frozenset((i.impl, i.pool) for i in self.instances),
+                # resident prefix entries: session-affinity planning reads
+                # them, so equal digests must mean equal cache state (a
+                # sorted tuple, not a frozenset — two same-shaped instances
+                # may both hold a session and multiplicity matters).
+                # last_used is excluded: the planner never reads recency.
+                tuple(sorted((i.impl, i.pool, s, e.tokens)
+                             for i in self.instances
+                             for s, e in i.cache.items())))
         return self._digest
 
     # -- workflow awareness ------------------------------------------------------
@@ -302,10 +356,79 @@ class ClusterManager:
         self._inst_index.setdefault(key, []).append(inst)
         self._digest = None
 
+    # -- KV/prefix-cache ledger (DESIGN.md §9) ----------------------------------
+    def cached_instances(self, session: str) -> list[Instance]:
+        """Instances holding a resident prefix entry for ``session``."""
+        return list(self._cache_index.get(session, ()))
+
+    def cache_tokens(self, inst: Instance, session: str) -> int:
+        """Prefix tokens resident for ``session`` on ``inst`` (0 if none)."""
+        entry = inst.cache.get(session)
+        return entry.tokens if entry is not None else 0
+
+    def cache_residency(self, inst: Instance) -> float:
+        """Total HBM bytes ``inst``'s resident prefix entries occupy."""
+        return sum(e.bytes for e in inst.cache.values())
+
+    def cache_touch(self, inst: Instance, session: str, t: float):
+        """Refresh an entry's LRU recency (a task just reused the prefix).
+
+        Recency is not part of the digest (the planner reads presence and
+        token counts, never last-used times), so touching stays O(1) with
+        no plan-cache invalidation.
+        """
+        entry = inst.cache.get(session)
+        if entry is not None:
+            entry.last_used = t
+
+    def cache_insert(self, inst: Instance, session: str, tokens: int,
+                     nbytes: float, t: float) -> bool:
+        """Insert or refresh a session's prefix entry, LRU-evicting to fit.
+
+        Returns False without touching the ledger when the instance has no
+        cache budget or the entry alone exceeds it. Otherwise older entries
+        (least-recently-used first, session name as the deterministic
+        tie-break) are evicted until the new entry fits; residency never
+        exceeds ``cache_cap_bytes`` (an ``audit()`` invariant). Mutations
+        invalidate the digest so the admission plan cache re-keys.
+        """
+        if not session or inst.cache_cap_bytes <= 0 \
+                or nbytes > inst.cache_cap_bytes:
+            return False
+        old = inst.cache.pop(session, None)
+        resident = sum(e.bytes for e in inst.cache.values())
+        while inst.cache and resident + nbytes > inst.cache_cap_bytes:
+            lru = min(inst.cache,
+                      key=lambda s: (inst.cache[s].last_used, s))
+            resident -= inst.cache[lru].bytes
+            self._drop_entry(inst, lru)
+        inst.cache[session] = CacheEntry(session, int(tokens), float(nbytes),
+                                         t)
+        if old is None:
+            self._cache_index.setdefault(session, []).append(inst)
+        self._digest = None
+        return True
+
+    def _drop_entry(self, inst: Instance, session: str):
+        """Remove one prefix entry, keeping the session index in sync."""
+        del inst.cache[session]
+        group = self._cache_index.get(session)
+        if group is not None:
+            group.remove(inst)
+            if not group:
+                del self._cache_index[session]
+
     def rebalance(self, library, t: float) -> list[str]:
         """Reclaim warm instances for interfaces with no upcoming demand.
 
         Returns a log of actions (tested; the paper's Whisper->Llama example).
+        A shell holding resident session prefixes is *not* reclaimed here:
+        KV residency is a first-class resource (DESIGN.md §9), and pending
+        demand undercounts it — the sessions whose prefixes live on the
+        shell return after think-time gaps the demand ledger cannot see.
+        Such shells still fall to allocation-pressure eviction
+        (``evict_instance`` via the engine's alloc path) and to harvest
+        preemption, both of which drop the cache with the shell.
         """
         # only interfaces whose pending count sits at zero can lose
         # instances — when none do (the common case), skip the scan
@@ -316,14 +439,22 @@ class ClusterManager:
         impls = library.impls
         for inst in list(self.instances):
             iface = impls[inst.impl].interface
-            if iface in dead and inst.busy_until <= t:
+            if iface in dead and inst.busy_until <= t and not inst.cache:
                 self.evict_instance(inst, t)
                 actions.append(f"reclaim {inst.impl} ({inst.n_devices} dev "
                                f"of {inst.pool}): no upcoming {iface} demand")
         return actions
 
     def evict_instance(self, inst: Instance, t: float):
-        """Remove a warm instance and free its devices."""
+        """Remove a warm instance and free its devices.
+
+        The instance's resident prefix entries die with it — harvest
+        preemption therefore evicts the preempted instance's KV cache
+        (DESIGN.md §9): a resumed task re-plans against a cluster that no
+        longer advertises those prefixes.
+        """
+        for session in list(inst.cache):
+            self._drop_entry(inst, session)
         self.instances.remove(inst)
         self._inst_index[(inst.impl, inst.pool, inst.n_devices)].remove(inst)
         self._digest = None
@@ -337,8 +468,11 @@ class ClusterManager:
         usage equals the sum of live lease sizes and never exceeds
         capacity; (2) every instance's lease, when still live, belongs to
         the lease table and matches the instance's pool and device count;
-        (3) no two instances share a lease. Raises ``AssertionError`` with
-        the violated fact otherwise.
+        (3) no two instances share a lease; (4) cache-ledger invariants —
+        no prefix entry indexed on a dead instance, per-instance residency
+        never above the HBM cache budget, and the session index mirroring
+        the per-instance entry dicts exactly. Raises ``AssertionError``
+        with the violated fact otherwise.
         """
         by_pool: dict[str, int] = {name: 0 for name in self.pools}
         for lease in self._leases.values():
@@ -372,6 +506,27 @@ class ClusterManager:
             assert inst in self._inst_index.get(
                 (inst.impl, inst.pool, inst.n_devices), ()), (
                 f"instance {inst.impl}@{inst.pool} missing from index")
+        # cache ledger: index entries live, residency within budget, and
+        # index <-> per-instance entry dicts mirror each other
+        live = {id(i) for i in self.instances}
+        for session, group in self._cache_index.items():
+            for inst in group:
+                assert id(inst) in live, (
+                    f"cache entry for session {session!r} on a dead "
+                    f"instance ({inst.impl}@{inst.pool})")
+                assert session in inst.cache, (
+                    f"session {session!r} indexed on {inst.impl}@"
+                    f"{inst.pool} but absent from its entry dict")
+        for inst in self.instances:
+            resident = sum(e.bytes for e in inst.cache.values())
+            assert resident <= inst.cache_cap_bytes + 1e-6, (
+                f"instance {inst.impl}@{inst.pool}: cache residency "
+                f"{resident:.3e} B exceeds budget "
+                f"{inst.cache_cap_bytes:.3e} B")
+            for session in inst.cache:
+                assert inst in self._cache_index.get(session, ()), (
+                    f"entry for session {session!r} on {inst.impl}@"
+                    f"{inst.pool} missing from the session index")
 
     def utilization(self) -> dict[str, float]:
         """Allocated fraction per pool (0..1)."""

@@ -24,6 +24,9 @@ class TaskNode:
     chunkable: bool = False          # may be split across instances
     tokens_in: int = 0               # LLM-agent input size
     tokens_out: int = 0              # LLM-agent output size
+    # leading tokens_in span shared with the task's serving session (system
+    # prompt + prior turns): the part a resident KV prefix can serve
+    prefix_tokens: int = 0
 
     def with_(self, **kw) -> "TaskNode":
         """Functional update (the dataclass is frozen)."""
@@ -96,7 +99,7 @@ class DAG:
         if self._sig is None:
             self._sig = tuple(
                 (n.id, n.agent, n.deps, n.work_items, n.chunkable,
-                 n.tokens_in, n.tokens_out)
+                 n.tokens_in, n.tokens_out, n.prefix_tokens)
                 for n in (self.nodes[i] for i in self._topo))
         return self._sig
 

@@ -26,6 +26,69 @@ from .agents import AgentImpl, AgentLibrary, Work
 from .energy import (CATALOG, DeviceSpec, batch_roofline_latency,
                      roofline_latency)
 
+
+@dataclass(frozen=True, kw_only=True)
+class CostQuery:
+    """One cost-model query: everything a latency/price question names.
+
+    The four ``ProfileStore`` entry points (``step_latency`` /
+    ``schedule_latency`` / ``completed_items`` / ``latency``) used to share
+    a positional-kwarg sprawl of ``(impl, spec, n_devices, work, batch,
+    items, elapsed_s, ...)``; they now all accept one frozen keyword-only
+    query object, so a new pricing dimension threads through one site
+    instead of four. ``cache_hit_frac`` is that dimension for KV/prefix
+    caching (DESIGN.md §9): the fraction of the item's *input* tokens whose
+    prefix KV is already resident on the serving instance — the prefill
+    phase is charged only for the un-cached remainder, in both the
+    scheduler's estimates and the simulator's actuals (parity by
+    construction, since both price through the same query).
+
+    Not hashable (``AgentImpl`` carries dict fields); the memo key is the
+    name-based tuple ``ProfileStore`` derives, unchanged from the
+    positional era so cache-less queries hit the same entries.
+    """
+
+    impl: AgentImpl
+    spec: DeviceSpec
+    n_devices: int
+    work: Work
+    batch: int = 1
+    items: int = 1
+    items_done: int = 0
+    elapsed_s: float = 0.0
+    cache_hit_frac: float = 0.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.cache_hit_frac <= 1.0:
+            raise ValueError(
+                f"cache_hit_frac must be in [0, 1], got {self.cache_hit_frac}")
+
+    def effective_work(self) -> Work:
+        """The work actually charged: prefill scaled by the cache miss rate.
+
+        A hit fraction of ``h`` makes ``h`` of the prompt's prefix KV
+        resident, so only ``(1-h)`` of the prefill FLOPs/bytes are
+        executed; decode is untouched (every output token is new). Works
+        without a prefill/decode phase split have no prefill to discount
+        and are returned as-is, as is the ``h == 0`` case — the *same*
+        object, no float ops, so cold-path pricing is byte-identical to
+        the pre-cache model.
+        """
+        h = self.cache_hit_frac
+        w = self.work
+        if h <= 0.0 or not w.has_phases:
+            return w
+        keep = 1.0 - h
+        return Work.two_phase(
+            prefill_flops=w.prefill_flops * keep,
+            decode_flops=w.decode_flops,
+            prefill_bytes=w.prefill_bytes * keep,
+            decode_bytes=w.decode_bytes,
+            weight_bytes=w.weight_bytes,
+            decode_steps=w.decode_steps,
+            coll_bytes=w.coll_bytes)
+
+
 # a pinned calibration row: ((batch, per_item_latency_s), ...), sorted by
 # batch, per-item latency non-increasing (see _as_curve)
 BatchCurve = tuple[tuple[int, float], ...]
@@ -199,9 +262,20 @@ class ProfileStore:
             f"benchmarks/calibrate_batch_curves.py).",
             DeprecationWarning, stacklevel=3)
 
-    def step_latency(self, impl: AgentImpl, spec: DeviceSpec, n_devices: int,
-                     work: Work, batch: int = 1) -> float:
-        """Wall time of ONE step co-scheduling ``batch`` work-items.
+    def _legacy_query(self, method: str, impl, spec, n_devices, work,
+                      batch, items, elapsed_s) -> CostQuery:
+        """Build a CostQuery from a deprecated positional call, warning."""
+        warnings.warn(
+            f"ProfileStore.{method}(impl, spec, n_devices, ...) positional "
+            f"form is deprecated; pass a CostQuery instead "
+            f"(ProfileStore.{method}(CostQuery(impl=..., spec=..., ...)))",
+            DeprecationWarning, stacklevel=3)
+        return CostQuery(impl=impl, spec=spec, n_devices=n_devices, work=work,
+                         batch=batch, items=items, elapsed_s=elapsed_s)
+
+    def _step(self, impl: AgentImpl, spec: DeviceSpec, n_devices: int,
+              work: Work, batch: int) -> float:
+        """Memoized one-step latency on an *effective* (post-discount) work.
 
         Three regimes, in precedence order:
 
@@ -245,67 +319,117 @@ class ProfileStore:
                 self._cache.popitem(last=False)
         return step
 
-    def schedule_latency(self, impl: AgentImpl, spec: DeviceSpec,
-                         n_devices: int, work: Work, batch: int,
-                         items: int) -> float:
-        """Wall time to run ``items`` work-items in batches of ``batch``.
+    def step_latency(self, query: CostQuery | AgentImpl, spec=None,
+                     n_devices=None, work=None, batch: int = 1) -> float:
+        """Wall time of ONE step co-scheduling ``query.batch`` work-items.
+
+        Canonical form: ``step_latency(CostQuery(...))``. The query's
+        ``cache_hit_frac`` discounts the prefill phase before pricing
+        (:meth:`CostQuery.effective_work`); at hit 0 the step is priced on
+        the original work object, byte-identical to the cache-less model.
+        The deprecated positional form ``(impl, spec, n_devices, work,
+        batch)`` still works behind a ``DeprecationWarning`` shim.
+        """
+        if not isinstance(query, CostQuery):
+            query = self._legacy_query("step_latency", query, spec, n_devices,
+                                       work, batch, 1, 0.0)
+        return self._step(query.impl, query.spec, query.n_devices,
+                          query.effective_work(), query.batch)
+
+    def schedule_latency(self, query: CostQuery | AgentImpl, spec=None,
+                         n_devices=None, work=None, batch=None,
+                         items=None) -> float:
+        """Wall time to run ``query.items`` work-items in ``batch`` batches.
 
         The batched execution schedule (DESIGN.md §7.2): ``floor(items/b)``
         full steps plus — when ``items % b != 0`` — one *remainder* step
         charged at ``step_latency(items % b)``, not at the full batch's
         price. ``Scheduler.estimate`` and ``Simulator._duration`` both call
-        this, so estimate/actual parity holds by construction. The schedule
-        never exceeds the legacy ``ceil(items/b)`` full-step charge
-        (``tests/test_batch_schedule.py`` holds the property).
+        this, so estimate/actual parity holds by construction — including
+        the prefill discount at ``query.cache_hit_frac`` (one pricing site,
+        DESIGN.md §9). The schedule never exceeds the legacy
+        ``ceil(items/b)`` full-step charge
+        (``tests/test_batch_schedule.py`` holds the property). The
+        positional form ``(impl, spec, n_devices, work, batch, items)`` is
+        deprecated.
         """
-        b = max(int(batch), 1)
-        items = max(int(items), 0)
+        if not isinstance(query, CostQuery):
+            query = self._legacy_query("schedule_latency", query, spec,
+                                       n_devices, work, batch, items, 0.0)
+        eff = query.effective_work()
+        b = max(int(query.batch), 1)
+        items = max(int(query.items), 0)
         if items == 0:
             return 0.0
         full, rem = divmod(items, b)
-        total = full * self.step_latency(impl, spec, n_devices, work, b) \
-            if full else 0.0
+        total = full * self._step(query.impl, query.spec, query.n_devices,
+                                  eff, b) if full else 0.0
         if rem:
-            total += self.step_latency(impl, spec, n_devices, work, rem)
+            total += self._step(query.impl, query.spec, query.n_devices,
+                                eff, rem)
         return total
 
-    def completed_items(self, impl: AgentImpl, spec: DeviceSpec,
-                        n_devices: int, work: Work, batch: int, items: int,
-                        elapsed_s: float) -> tuple[int, float]:
+    def completed_items(self, query: CostQuery | AgentImpl, spec=None,
+                        n_devices=None, work=None, batch=None, items=None,
+                        elapsed_s=None) -> tuple[int, float]:
         """Invert the ``schedule_latency`` step schedule at ``elapsed_s``.
 
         Returns ``(items_done, wall_s)``: how many work-items' batch steps
-        had *fully completed* after ``elapsed_s`` seconds of the schedule,
-        and the wall time those completed steps took. A step checkpoints
-        only at its end — a preempted in-flight step is discarded work —
-        so full steps complete every ``step_latency(batch)`` seconds and
-        the remainder step only at the schedule's very end. The simulator
-        uses this to salvage a preempted task's finished items
+        had *fully completed* after ``query.elapsed_s`` seconds of the
+        schedule, and the wall time those completed steps took. A step
+        checkpoints only at its end — a preempted in-flight step is
+        discarded work — so full steps complete every ``step_latency(b)``
+        seconds and the remainder step only at the schedule's very end. The
+        simulator uses this to salvage a preempted task's finished items
         (DESIGN.md §6.4): re-running the residual then costs exactly
         ``schedule_latency(items) - wall_s``, which is what keeps the
-        step-granular refund and estimate/actual parity exact.
+        step-granular refund and estimate/actual parity exact. The
+        inversion prices the same effective (cache-discounted) work the
+        schedule charged, so refunds invert exactly what was billed. The
+        positional form ``(impl, spec, n_devices, work, batch, items,
+        elapsed_s)`` is deprecated.
         """
-        b = max(int(batch), 1)
-        items = max(int(items), 0)
+        if not isinstance(query, CostQuery):
+            query = self._legacy_query("completed_items", query, spec,
+                                       n_devices, work, batch, items,
+                                       elapsed_s)
+        eff = query.effective_work()
+        b = max(int(query.batch), 1)
+        items = max(int(query.items), 0)
+        elapsed_s = query.elapsed_s
         if items == 0 or elapsed_s <= 0:
             return 0, 0.0
-        step_b = self.step_latency(impl, spec, n_devices, work, b)
+        step_b = self._step(query.impl, query.spec, query.n_devices, eff, b)
         full, rem = divmod(items, b)
         # 1e-9 of slack so a preemption landing exactly on a step boundary
         # credits the step that just finished
         steps = min(int((elapsed_s + 1e-9) / max(step_b, 1e-12)), full)
         done, wall = steps * b, steps * step_b
         if steps == full and rem:
-            rem_lat = self.step_latency(impl, spec, n_devices, work, rem)
+            rem_lat = self._step(query.impl, query.spec, query.n_devices,
+                                 eff, rem)
             if elapsed_s + 1e-9 >= wall + rem_lat:
                 done, wall = items, wall + rem_lat
         return done, wall
 
-    def latency(self, impl: AgentImpl, spec: DeviceSpec, n_devices: int,
-                work: Work, batch: int = 1) -> float:
-        """Per-work-item latency within a batch of ``batch`` items."""
-        return self.step_latency(impl, spec, n_devices, work, batch) \
-            / max(batch, 1)
+    def latency(self, query: CostQuery | AgentImpl, spec=None, n_devices=None,
+                work=None, batch: int = 1) -> float:
+        """Deprecated: per-item latency; use ``step_latency(q) / q.batch``.
+
+        Kept as a thin alias so external callers migrate at their own pace;
+        every call warns.
+        """
+        if isinstance(query, CostQuery):
+            warnings.warn(
+                "ProfileStore.latency is deprecated; use "
+                "step_latency(query) / max(query.batch, 1)",
+                DeprecationWarning, stacklevel=2)
+        else:
+            query = self._legacy_query("latency", query, spec, n_devices,
+                                       work, batch, 1, 0.0)
+        return self._step(query.impl, query.spec, query.n_devices,
+                          query.effective_work(), query.batch) \
+            / max(query.batch, 1)
 
     def cache_info(self) -> dict:
         """Estimate-memo counters: hits, misses, size, cap and hit rate."""
@@ -354,7 +478,7 @@ class ProfileStore:
         impl = self.library.impls[impl_name]
         spec = CATALOG[device]
         work = impl.work_fn(tokens_in, tokens_out)
-        lat = self.latency(impl, spec, n_devices, work)
+        lat = self._step(impl, spec, n_devices, work, 1)
         pf = self.power_frac(impl, spec, n_devices)
         energy = lat * n_devices * pf * (spec.active_w - spec.idle_w)
         usd = lat * n_devices / 3600.0 * spec.usd_per_hour

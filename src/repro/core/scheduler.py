@@ -31,7 +31,7 @@ from .cluster import ClusterManager
 from .constraints import Constraint, ConstraintSpec, Objective, as_spec
 from .dag import DAG, TaskNode
 from .energy import CATALOG, knee_batch_grid
-from .profiles import ProfileStore
+from .profiles import CostQuery, ProfileStore
 
 
 @dataclass(frozen=True)
@@ -126,7 +126,7 @@ class Scheduler:
     def estimate(self, node: TaskNode, impl: AgentImpl, pool: str,
                  n_devices: int, n_instances: int = 1, batch: int = 1,
                  paths: int = 1, warm: bool = False,
-                 items_done: int = 0) -> TaskConfig:
+                 items_done: int = 0, cache_frac: float = 0.0) -> TaskConfig:
         """Cost out one candidate configuration for ``node``.
 
         Latency comes from the batched execution schedule
@@ -137,8 +137,12 @@ class Scheduler:
         preempted-and-checkpointed task (DESIGN.md §6.4): only the
         remaining ``work_items - items_done`` items are scheduled, again
         exactly mirroring ``_duration``, so parity also holds for resumed
-        tasks. Energy/$ accrue over compute device-seconds;
-        weight-loading is an idle-power period covered by the pool floor.
+        tasks. ``cache_frac`` is the resident-prefix hit fraction the
+        placement would enjoy (DESIGN.md §9) — it discounts the prefill
+        phase through the shared ``CostQuery``, the same one pricing site
+        the simulator charges. Energy/$ accrue over compute
+        device-seconds; weight-loading is an idle-power period covered by
+        the pool floor.
         """
         self.evals += 1
         spec = CATALOG[self.cluster.pools[pool].device]
@@ -147,8 +151,9 @@ class Scheduler:
             batch = 1     # batching is an accelerator lever (weights reuse)
         remaining = max(node.work_items - items_done, 0)
         items_per_inst = math.ceil(remaining / n_instances)
-        compute = self.profiles.schedule_latency(impl, spec, n_devices,
-                                                 work, batch, items_per_inst)
+        compute = self.profiles.schedule_latency(CostQuery(
+            impl=impl, spec=spec, n_devices=n_devices, work=work,
+            batch=batch, items=items_per_inst, cache_hit_frac=cache_frac))
         lat = compute if warm else compute + impl.load_time_s
         pf = self.profiles.power_frac(impl, spec, n_devices)
         # active energy/$ accrue over compute time; weight-loading is an
@@ -198,7 +203,8 @@ class Scheduler:
 
     def _dominated(self, node: TaskNode, impl: AgentImpl, pool: str,
                    counts: list[int], batches: list[int], warm: bool,
-                   incumbent: TaskConfig, order: "ConstraintSpec") -> bool:
+                   incumbent: TaskConfig, order: "ConstraintSpec",
+                   cache_frac: float = 0.0) -> bool:
         """Dominated-config pruning: can *any* (device count x batch) in
         this (impl, pool) group beat the incumbent under ``order``?
 
@@ -224,10 +230,16 @@ class Scheduler:
         spec = CATALOG[self.cluster.pools[pool].device]
         work = self._work_of(impl, node)
         items = node.work_items
+
+        def per_item(n: int, b: int) -> float:
+            # the group's estimates price at cache_frac, so the bound must
+            # discount identically to stay a bound *and* stay tight
+            return self.profiles.step_latency(CostQuery(
+                impl=impl, spec=spec, n_devices=n, work=work, batch=b,
+                cache_hit_frac=cache_frac)) / max(b, 1)
+
         if self.profiles.pinned_counts(impl.name, spec.name):
-            per = [min(self.profiles.latency(impl, spec, n, work, b)
-                       for b in batches)
-                   for n in counts]
+            per = [min(per_item(n, b) for b in batches) for n in counts]
             lat_lb = items * min(per)
             dev_s_lb = items * min(p * n for p, n in zip(per, counts))
         else:
@@ -235,12 +247,9 @@ class Scheduler:
             # monotonicity in b: covers the deprecated alpha fallback even
             # for alpha > 1, where items * latency(b) under-cuts only at
             # b = 1 (which the grid always contains)
-            lat_lb = items * min(
-                self.profiles.latency(impl, spec, counts[-1], work, b)
-                for b in batches)
-            dev_s_lb = items * counts[0] * min(
-                self.profiles.latency(impl, spec, counts[0], work, b)
-                for b in batches)
+            lat_lb = items * min(per_item(counts[-1], b) for b in batches)
+            dev_s_lb = items * counts[0] * min(per_item(counts[0], b)
+                                               for b in batches)
         if not warm:
             lat_lb += impl.load_time_s
         pf_lb = min(self.profiles.power_frac(impl, spec, n) for n in counts)
@@ -254,7 +263,8 @@ class Scheduler:
 
     # -- the greedy hierarchical search -------------------------------------------
     def plan_task(self, node: TaskNode, order,
-                  quality_floor: float | dict) -> TaskConfig:
+                  quality_floor: float | dict, *,
+                  session: str = "") -> TaskConfig:
         """Choose one ``TaskConfig`` for ``node`` under ``order``.
 
         The greedy hierarchy (paper §3.3c): (1) implementation by quality
@@ -280,6 +290,13 @@ class Scheduler:
         both seeds makes the joint search's candidate set a strict
         superset of the sequential one, so the chosen config is never
         worse under the constraint order.
+
+        ``session`` (keyword-only) is the serving session the task belongs
+        to: (impl, pool) groups holding a resident KV prefix for it are
+        priced at their hit fraction (DESIGN.md §9), making a warm cache a
+        co-placement reason exactly like warm shells. Empty session (every
+        cache-less workload) prices everything at hit 0 — byte-identical
+        to the affinity-blind search.
         """
         order = as_spec(order)
         impls = self.library.impls_for(node.agent)
@@ -301,6 +318,18 @@ class Scheduler:
         # O(instances) scan per plan_task instead of one per (impl, pool)
         warm_set = {(inst.impl, inst.pool)
                     for inst in self.cluster.instances}
+        # resident-prefix hit fraction per (impl, pool): the session's best
+        # cached instance in the group, clipped to the task's prefix span
+        hit_frac: dict[tuple[str, str], float] = {}
+        if session and node.prefix_tokens > 0 and node.tokens_in > 0:
+            for inst in self.cluster.cached_instances(session):
+                tok = min(inst.cache[session].tokens, node.prefix_tokens)
+                if tok <= 0:
+                    continue
+                key = (inst.impl, inst.pool)
+                frac = tok / node.tokens_in
+                if frac > hit_frac.get(key, 0.0):
+                    hit_frac[key] = frac
 
         # Level 2 — hardware + device count (x batch, when joint) per
         # candidate implementation.
@@ -327,15 +356,17 @@ class Scheduler:
                                                    node.work_items)
                     else:
                         batches = [1]
+                    cf = hit_frac.get((impl.name, pool_name), 0.0)
                     if best is not None and self.prune and self._dominated(
                             node, impl, pool_name, counts, batches, warm,
-                            best, order):
+                            best, order, cf):
                         self.pruned += len(counts) * len(batches)
                         continue
                     for n in counts:
                         for b in batches:
                             cfg = self.estimate(node, impl, pool_name, n,
-                                                batch=b, warm=warm)
+                                                batch=b, warm=warm,
+                                                cache_frac=cf)
                             if best is None or self._key(cfg, order) < \
                                     self._key(best, order):
                                 best = cfg
@@ -346,13 +377,15 @@ class Scheduler:
             """Grow a level-2 seed through the level-3 parallelism levers."""
             impl = self.library.impls[best.impl]
             st = stats[best.pool]
+            cf = hit_frac.get((best.impl, best.pool), 0.0)
             free_inst = max(st["free"] // best.n_devices, 1)
             if legacy_batch and impl.max_batch > 1:
                 # sequential lever order: one batch candidate, tried only
                 # after the count is locked in at batch=1
                 b = min(impl.max_batch, node.work_items)
                 cand = self.estimate(node, impl, best.pool, best.n_devices,
-                                     best.n_instances, b, warm=best.warm)
+                                     best.n_instances, b, warm=best.warm,
+                                     cache_frac=cf)
                 if self._key(cand, order) < self._key(best, order):
                     best = cand
             # fan-out candidates are capped by what fits concurrently right
@@ -381,7 +414,7 @@ class Scheduler:
                     for b in batches:
                         cand = self.estimate(node, impl, best.pool,
                                              best.n_devices, k, b,
-                                             warm=best.warm)
+                                             warm=best.warm, cache_frac=cf)
                         if self._key(cand, order) < self._key(best, order):
                             best = cand
             # Execution paths: only when quality leads, on harvestable slack.
@@ -393,7 +426,8 @@ class Scheduler:
                         break
                     cand = self.estimate(node, impl, best.pool,
                                          best.n_devices, best.n_instances,
-                                         best.batch, paths=p, warm=best.warm)
+                                         best.batch, paths=p, warm=best.warm,
+                                         cache_frac=cf)
                     if self._key(cand, order) < self._key(best, order):
                         best = cand
             return best
@@ -420,7 +454,8 @@ class Scheduler:
         return final
 
     def split_shares(self, dag: DAG, order,
-                     quality_floor: float | dict = 0.85) \
+                     quality_floor: float | dict = 0.85, *,
+                     session: str = "") \
             -> dict[str, tuple[float, float]]:
         """Per-task ``(lat_frac, cost_frac)`` shares of workflow-level terms.
 
@@ -438,7 +473,7 @@ class Scheduler:
         spec = as_spec(order)
         pilot_spec = spec.per_task(len(dag))
         pilot = {tid: self.plan_task(dag.nodes[tid], pilot_spec,
-                                     quality_floor)
+                                     quality_floor, session=session)
                  for tid in dag.topo_order}
         eps = 1e-12
         lat = {tid: max(cfg.est_latency_s, eps)
@@ -469,7 +504,8 @@ class Scheduler:
         return shares
 
     def plan(self, dag: DAG, order,
-             quality_floor: float | dict = 0.85) -> ExecutionPlan:
+             quality_floor: float | dict = 0.85, *,
+             session: str = "") -> ExecutionPlan:
         """Choose a ``TaskConfig`` for every task of ``dag``.
 
         ``order`` is any accepted constraint form (seed enum member,
@@ -478,7 +514,8 @@ class Scheduler:
         choice. Workflow-level deadline/budget terms are first split
         across tasks by the critical-path-weighted shares of
         ``split_shares`` (DESIGN.md §6.1); plain objectives plan each task
-        directly.
+        directly. ``session`` threads the job's serving session into
+        :meth:`plan_task` for KV-affinity pricing (DESIGN.md §9).
         """
         spec = as_spec(order)
         plan = ExecutionPlan()
@@ -486,15 +523,17 @@ class Scheduler:
             # critical-path-weighted split of deadline/budget terms: tasks
             # on the critical path get slack proportional to their pilot
             # latency/cost share, admitting tighter SLOs than the even split
-            shares = self.split_shares(dag, spec, quality_floor)
+            shares = self.split_shares(dag, spec, quality_floor,
+                                       session=session)
             for tid in dag.topo_order:
                 plan.configs[tid] = self.plan_task(
                     dag.nodes[tid], spec.for_share(*shares[tid]),
-                    quality_floor)
+                    quality_floor, session=session)
             return plan
         for tid in dag.topo_order:
             plan.configs[tid] = self.plan_task(dag.nodes[tid], spec,
-                                               quality_floor)
+                                               quality_floor,
+                                               session=session)
         return plan
 
     # -- pinned plans (imperative baseline) -----------------------------------------

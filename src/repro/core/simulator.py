@@ -68,10 +68,10 @@ from typing import Callable, Iterable, Iterator
 
 from .admission import Admission, ServedLedger, get_policy
 from .agents import AgentLibrary
-from .cluster import ClusterManager, Instance, Lease
+from .cluster import ClusterManager, Instance, Lease, kv_cache_cap
 from .dag import DAG
 from .energy import CATALOG, EnergyLedger
-from .profiles import ProfileStore
+from .profiles import CostQuery, ProfileStore
 from .scheduler import ExecutionPlan, TaskConfig
 
 
@@ -105,6 +105,12 @@ class SimReport:
     requeues: int = 0            # task re-executions caused by preemption
     resumed_items: int = 0       # work-items salvaged by checkpoint/resume
     wasted_dev_s: float = 0.0    # executed-then-discarded device-seconds
+    # KV/prefix-cache residency (DESIGN.md §9): lookups = session tasks
+    # that could have hit, hits = tasks that started with a warm prefix
+    cache_lookups: int = 0
+    cache_hits: int = 0
+    cache_hit_rate: float = 0.0
+    prefill_tokens_saved: float = 0.0   # un-recomputed prefill tokens
 
     def workflow_span(self, wf: str) -> float:
         """Arrival-to-finish seconds for one workflow (tenant latency)."""
@@ -147,6 +153,7 @@ class Submission:
     plan_fn: "Callable[[], ExecutionPlan] | None" = None
     slo_s: float | None = None
     scenario: str = ""
+    session: str = ""            # serving-session identity (KV affinity)
 
 
 @dataclass(slots=True)
@@ -164,6 +171,7 @@ class _WfState:
     items_done: dict[str, int] = field(default_factory=dict)
     slo_s: float | None = None
     scenario: str = ""
+    session: str = ""
     # indexed ready set: (topo_rank, task_id), kept sorted by insort
     ready: list = field(default_factory=list)
     adm: Admission | None = None
@@ -189,6 +197,8 @@ class _Running:
     items_done0: int          # items already checkpointed before this run
     items_per_inst: int       # the split _duration charged (refund inverts it)
     resumable: bool           # chunkable: completed steps survive preempt
+    session: str = ""         # serving session the run belongs to
+    cache_frac: float = 0.0   # prefix-cache hit fraction priced into dur
 
 
 class _Engine:
@@ -223,6 +233,10 @@ class _Engine:
         self.requeues = 0
         self.resumed_items = 0
         self.wasted_dev_s = 0.0
+        # KV/prefix-cache counters (DESIGN.md §9)
+        self.cache_lookups = 0
+        self.cache_hits = 0
+        self.prefill_tokens_saved = 0.0
         self.events: list[tuple[float, int, str, object]] = []
         self.ctr = itertools.count()
         self.t = 0.0
@@ -251,7 +265,7 @@ class _Engine:
         """Queue a workflow's arrival event."""
         self.wfs[wid] = _WfState(sub.dag, sub.plan, sub.arrival, sub.tenant,
                                  sub.plan_fn, slo_s=sub.slo_s,
-                                 scenario=sub.scenario)
+                                 scenario=sub.scenario, session=sub.session)
         heapq.heappush(self.events,
                        (sub.arrival, next(self.ctr), "arrive", wid))
 
@@ -425,9 +439,12 @@ class _Engine:
             impl = self.sim.library.impls[rec.cfg.impl]
             node = vst.dag.nodes[vtid]
             work = impl.work_fn(node.tokens_in, node.tokens_out)
-            done, wall = self.sim.profiles.completed_items(
-                impl, spec, rec.cfg.n_devices, work, rec.batch,
-                rec.items_per_inst, elapsed)
+            # the refund inverts the exact schedule _duration charged,
+            # including its prefix-cache discount (rec.cache_frac)
+            done, wall = self.sim.profiles.completed_items(CostQuery(
+                impl=impl, spec=spec, n_devices=rec.cfg.n_devices,
+                work=work, batch=rec.batch, items=rec.items_per_inst,
+                elapsed_s=elapsed, cache_hit_frac=rec.cache_frac))
             kept_items = min(done * rec.n_inst,
                              node.work_items - rec.items_done0)
             if kept_items:
@@ -506,13 +523,26 @@ class _Engine:
         return lease
 
     def _acquire(self, cluster, cfg, t: float, harvest: bool,
-                 insts: list) -> int:
+                 insts: list, session: str = "") -> int:
         """Fill ``insts`` up to ``cfg.n_instances`` — reusing idle warm
         instances first (first-fit in index order), then provisioning new
-        ones; returns how many were newly provisioned."""
+        ones; returns how many were newly provisioned.
+
+        A non-empty ``session`` reorders the warm-reuse scan by resident
+        prefix tokens for that session, descending (stable, so instances
+        with no cache entry keep index order): session affinity prefers the
+        shell whose KV cache already holds the conversation prefix
+        (DESIGN.md §9). With ``session == ""`` the scan is byte-identical
+        to the affinity-less engine.
+        """
         new_inst = 0
         need = cfg.n_instances - len(insts)
-        for i in cluster.warm_instances(cfg.impl, cfg.pool, cfg.n_devices):
+        warm = cluster.warm_instances(cfg.impl, cfg.pool, cfg.n_devices)
+        if session:
+            warm = sorted(
+                warm, key=lambda i: -i.cache[session].tokens
+                if session in i.cache else 0)
+        for i in warm:
             if need <= 0:
                 break
             if i.busy_until <= t and i not in insts:
@@ -524,7 +554,8 @@ class _Engine:
             if lease is None:
                 break
             inst = Instance(cfg.impl, cfg.pool, cfg.n_devices,
-                            warm_since=t, lease=lease)
+                            warm_since=t, lease=lease,
+                            cache_cap_bytes=self.sim._cache_cap(cfg))
             cluster.add_instance(inst)
             insts.append(inst)
             new_inst += 1
@@ -567,11 +598,22 @@ class _Engine:
             st.plan = ExecutionPlan(dict(st.plan.configs))
             st.plan.configs[tid] = cfg
 
+        # KV/prefix cache (DESIGN.md §9): a task is cache-eligible when the
+        # engine models caches, the workflow carries a session and the node
+        # has a session-shared prefix on a KV-tracking impl. The affinity
+        # lever (cache_affinity) only reorders warm-shell reuse — pricing
+        # below uses whatever cache the acquired shells actually hold.
+        session = (st.session if self.sim.kv_cache and st.session
+                   and node.prefix_tokens > 0
+                   and impl.kv_bytes_per_token > 0 else "")
         if self.is_model[cfg.impl]:
-            new_inst = self._acquire(cluster, cfg, t, harvest, insts)
+            affinity = session if self.sim.cache_affinity else ""
+            new_inst = self._acquire(cluster, cfg, t, harvest, insts,
+                                     affinity)
             if not insts and priority and \
                     self.try_preempt(cfg.pool, cfg.n_devices):
-                new_inst += self._acquire(cluster, cfg, t, harvest, insts)
+                new_inst += self._acquire(cluster, cfg, t, harvest, insts,
+                                          affinity)
             if not insts:
                 return False
             for inst in insts:
@@ -596,8 +638,25 @@ class _Engine:
             leases.append(lease)
 
         items_done = st.items_done.get(tid, 0) if self.sim.resume else 0
+        cache_frac = 0.0
+        if session and insts:
+            self.cache_lookups += 1
+            # every acquired shell must hold the prefix for the discount
+            # to apply to the whole (identically-priced) instance group;
+            # in practice chat turns run on one instance
+            tok = min((inst.cache[session].tokens if session in inst.cache
+                       else 0) for inst in insts)
+            hit_tokens = min(tok, node.prefix_tokens)
+            if hit_tokens > 0 and node.tokens_in > 0:
+                cache_frac = hit_tokens / node.tokens_in
+                self.cache_hits += 1
+                remaining = max(node.work_items - items_done, 0)
+                self.prefill_tokens_saved += hit_tokens * remaining
+                for inst in insts:
+                    cluster.cache_touch(inst, session, t)
         dur, compute, per_inst = self.sim._duration(node, cfg, n_inst,
-                                                    new_inst, items_done)
+                                                    new_inst, items_done,
+                                                    cache_frac)
         pmult = cfg.paths if cfg.paths > 1 and not node.chunkable else 1.0
         dur *= pmult
         end = t + dur
@@ -629,6 +688,9 @@ class _Engine:
         restart = ("resume" if attempt and items_done else
                    "requeue" if attempt else "")
         warmth = "cold" if new_inst else ("warm" if insts else "")
+        if cache_frac > 0.0:
+            # surface the prefix hit in the trace ("warm+kv")
+            warmth = warmth + "+kv" if warmth else "kv"
         note = (restart + "+" + warmth if restart and warmth
                 else restart or warmth)
         for lease in leases:
@@ -643,7 +705,9 @@ class _Engine:
                                                    else cfg.batch),
                                             items_done0=items_done,
                                             items_per_inst=per_inst,
-                                            resumable=node.chunkable)
+                                            resumable=node.chunkable,
+                                            session=session,
+                                            cache_frac=cache_frac)
         heapq.heappush(self.events, (end, next(self.ctr), "finish",
                                      (wid, tid, attempt)))
         if self.log is not None:
@@ -678,6 +742,17 @@ class _Engine:
         for inst in rec.insts:
             if inst.lease is not None:
                 lease_owner.pop(inst.lease.id, None)
+        # session finished a turn on these shells: the full prompt+reply KV
+        # is now resident, serving the *next* turn's prefix (DESIGN.md §9).
+        # Insertion is gated like the pricing above, so cache-less runs
+        # never touch the ledger (byte-identity with the pre-cache engine).
+        if rec.session:
+            node = st.dag.nodes[tid]
+            impl = self.impls[cfg.impl]
+            tokens = node.tokens_in + node.tokens_out
+            nbytes = impl.kv_bytes_per_token * tokens
+            for inst in rec.insts:
+                cluster.cache_insert(inst, rec.session, tokens, nbytes, t)
         # the task's instances just went idle: blocked tasks keyed on this
         # pool may now reuse (or evict) them, so the availability epoch
         # must move even though no lease was released (model path)
@@ -743,6 +818,11 @@ class _Engine:
             requeues=self.requeues,
             resumed_items=self.resumed_items,
             wasted_dev_s=self.wasted_dev_s,
+            cache_lookups=self.cache_lookups,
+            cache_hits=self.cache_hits,
+            cache_hit_rate=(self.cache_hits / self.cache_lookups
+                            if self.cache_lookups else 0.0),
+            prefill_tokens_saved=self.prefill_tokens_saved,
         )
 
 
@@ -751,10 +831,19 @@ class Simulator:
 
     def __init__(self, cluster: ClusterManager, library: AgentLibrary,
                  profiles: ProfileStore, resume: bool = True,
-                 fast_dispatch: bool = True):
+                 fast_dispatch: bool = True, kv_cache: bool = True,
+                 cache_affinity: bool = True):
         self.cluster = cluster
         self.library = library
         self.profiles = profiles
+        # KV/prefix-cache residency (DESIGN.md §9). kv_cache is the master
+        # switch: False makes every cache path provably inert (sessionless
+        # pricing, no ledger writes) — the byte-identity reference.
+        # cache_affinity is the placement lever: False keeps hit-rate
+        # pricing but ranks warm shells cache-blind (the ablation axis the
+        # cache bench compares against).
+        self.kv_cache = kv_cache
+        self.cache_affinity = cache_affinity
         # work-item checkpoint/resume of preempted chunkable tasks
         # (DESIGN.md §6.4); False restores restart-from-scratch for every
         # victim (the pre-resume baseline benchmarks compare against)
@@ -777,20 +866,32 @@ class Simulator:
         return self._scale_limits.get(pool,
                                       self.cluster.pools[pool].capacity)
 
+    def _cache_cap(self, cfg: TaskConfig) -> float:
+        """HBM bytes a new instance of ``cfg`` may devote to KV prefixes
+        (0.0 when caches are off or the impl doesn't track KV)."""
+        if not self.kv_cache:
+            return 0.0
+        impl = self.library.impls[cfg.impl]
+        spec = CATALOG[self.cluster.pools[cfg.pool].device]
+        return kv_cache_cap(spec, cfg.n_devices, impl.params_bytes,
+                            impl.kv_bytes_per_token)
+
     # -- duration under actual warmth ------------------------------------------
     def _duration(self, node, cfg: TaskConfig, n_inst: int,
-                  new_instances: int, items_done: int = 0) \
-            -> tuple[float, float, int]:
+                  new_instances: int, items_done: int = 0,
+                  cache_frac: float = 0.0) -> tuple[float, float, int]:
         """Wall/compute seconds (and per-instance item count) of one run.
 
         Returns ``(latency, compute, items_per_inst)``; the item split is
         returned so ``cancel_task``'s refund inverts *exactly* the schedule
         charged here (stored on ``_Running.items_per_inst``) rather than
-        re-deriving it.
+        re-deriving it. ``cache_frac`` is the resident-prefix hit fraction:
+        the schedule prices only the un-cached prefill (DESIGN.md §9).
         """
         key = (cfg.impl, cfg.pool, cfg.n_devices, cfg.batch, cfg.warm,
                n_inst, bool(new_instances), items_done, node.work_items,
-               node.tokens_in, node.tokens_out, self.profiles.version)
+               node.tokens_in, node.tokens_out, cache_frac,
+               self.profiles.version)
         memo = self._dur_memo.get(key)
         if memo is not None:
             return memo
@@ -804,9 +905,11 @@ class Simulator:
         # (ProfileStore.schedule_latency: full steps + a remainder step at
         # its own price): one source of truth for plan vs actual. A resumed
         # attempt prices only the residual items (Scheduler.estimate takes
-        # the same items_done, preserving estimate/actual parity).
-        compute = self.profiles.schedule_latency(impl, spec, cfg.n_devices,
-                                                 work, batch, items)
+        # the same items_done, preserving estimate/actual parity); a warm
+        # prefix discounts both sides through the same CostQuery.
+        compute = self.profiles.schedule_latency(CostQuery(
+            impl=impl, spec=spec, n_devices=cfg.n_devices, work=work,
+            batch=batch, items=items, cache_hit_frac=cache_frac))
         lat = compute
         if new_instances and not cfg.warm:
             # cfg.warm = provisioned capacity (PTU-style): always-on, no load
@@ -1039,6 +1142,7 @@ class Simulator:
             per_class[tenant] = {
                 "n": n,
                 "p50_s": ss[int(0.50 * (n - 1))],
+                "p95_s": ss[int(0.95 * (n - 1))],
                 "p99_s": ss[int(0.99 * (n - 1))],
                 "mean_s": sum(ss) / n,
                 "slo_attainment": (met[tenant] / n if tenant in met
@@ -1050,7 +1154,9 @@ class Simulator:
             **{f: getattr(rep, f) for f in (
                 "makespan_s", "energy_wh", "active_wh", "idle_wh", "usd",
                 "trace", "per_workflow", "pool_busy_device_s",
-                "preemptions", "requeues", "resumed_items", "wasted_dev_s")},
+                "preemptions", "requeues", "resumed_items", "wasted_dev_s",
+                "cache_lookups", "cache_hits", "cache_hit_rate",
+                "prefill_tokens_saved")},
             horizon_s=horizon_s,
             warmup_s=warmup_s,
             offered_rps=arrivals / max(horizon_s, 1e-9),

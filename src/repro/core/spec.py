@@ -91,6 +91,8 @@ for _name, _desc in [
     ("document", "raw input document (pdf/scan)"),
     ("text_chunks", "parsed+chunked document text"),
     ("chunk_summaries", "per-chunk digests"),
+    ("chat_turn", "one user turn of an ongoing chat session"),
+    ("chat_reply", "assistant reply for a chat turn"),
 ]:
     ARTIFACTS.define(_name, _desc)
 
@@ -158,10 +160,31 @@ class CardinalityModel:
 
 @dataclass(frozen=True)
 class TokenModel:
-    """Per-work-item LLM token footprint of an interface."""
+    """Per-work-item LLM token footprint of an interface.
+
+    ``tokens_in``/``tokens_out`` are the fixed per-item footprint.
+    ``in_units`` optionally names an input-unit key whose count is *added*
+    to ``tokens_in`` (e.g. ``history_tokens`` — conversation history grows
+    the prompt per turn); ``prefix_units`` names the unit key counted as
+    the session-shared *prefix* span of the prompt, the part a resident KV
+    cache can serve (DESIGN.md §9). Both default to empty, making the model
+    byte-compatible with the fixed-footprint era.
+    """
 
     tokens_in: int = 0
     tokens_out: int = 0
+    in_units: str = ""
+    prefix_units: str = ""
+
+    def footprint(self, available: Mapping[str, int]) \
+            -> tuple[int, int, int]:
+        """``(tokens_in, tokens_out, prefix_tokens)`` for a job's units."""
+        tin = self.tokens_in
+        if self.in_units:
+            tin += int(available.get(self.in_units, 0))
+        prefix = int(available.get(self.prefix_units, 0)) \
+            if self.prefix_units else 0
+        return tin, self.tokens_out, min(prefix, tin)
 
 
 # ---------------------------------------------------------------------------
@@ -182,11 +205,12 @@ def build_node(tid: str, description: str, iface, deps: tuple[str, ...],
                args: dict, units: Mapping[str, int],
                chunkable: bool = True) -> TaskNode:
     """The one place a TaskNode is derived from an interface's models."""
+    tin, tout, prefix = iface.tokens.footprint(units)
     return TaskNode(
         id=tid, description=description, agent=iface.name, deps=deps,
         args=args, work_items=iface.cardinality.items(units),
-        chunkable=chunkable, tokens_in=iface.tokens.tokens_in,
-        tokens_out=iface.tokens.tokens_out)
+        chunkable=chunkable, tokens_in=tin, tokens_out=tout,
+        prefix_tokens=prefix)
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,7 @@ must talk: the *workflow orchestrator* (planner + scheduler) and the
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 from .agents import AgentLibrary, default_library
 from .cluster import ClusterManager, Instance, Pool
@@ -113,7 +113,8 @@ class Murakkab:
         """Lower a job and choose a configuration for every task."""
         dag = self.lower(job)
         plan = self.scheduler.plan(dag, job.constraint_spec,
-                                   job.quality_floor)
+                                   job.quality_floor,
+                                   session=job.session)
         return dag, plan
 
     def execute(self, job: Job, arrival: float = 0.0) -> JobResult:
@@ -167,7 +168,8 @@ class Murakkab:
                   policy: str | None = "strict-priority", autoscaler=None,
                   log: list | None = None, collect_trace: bool = True,
                   resume: bool = True, fast_dispatch: bool = True,
-                  plan_mode: str = "amortized") -> OpenLoopReport:
+                  plan_mode: str = "amortized", kv_cache: bool = True,
+                  cache_affinity: bool = True) -> OpenLoopReport:
         """Serve an open-loop arrival stream (DESIGN.md §8).
 
         ``process`` is a ``core.arrivals`` generator (Poisson / MMPP /
@@ -192,6 +194,13 @@ class Murakkab:
 
         ``autoscaler`` is a ``core.autoscale.Autoscaler``; steady-state
         metrics trim the first ``warmup_s`` of arrivals.
+
+        Session-aware presets (``ServingPreset.session_aware``) lower one
+        job template per *turn index* — conversation history grows the
+        token footprint — and each submission carries the event's session
+        id, which the engine uses for KV-affinity placement and hit-rate
+        prefill pricing (DESIGN.md §9). ``kv_cache``/``cache_affinity``
+        forward to the :class:`Simulator` switches.
         """
         if plan_mode not in ("amortized", "admission"):
             raise ValueError(f"plan_mode must be 'amortized' or "
@@ -201,42 +210,53 @@ class Murakkab:
             raise RuntimeError(
                 "no serving presets available — import repro.configs "
                 "(workflow_video/rag/docingest) or pass presets=")
-        lowered: dict[str, tuple[DAG, Job]] = {}
-        plans: dict[str, ExecutionPlan] = {}
+        lowered: dict[tuple, tuple[DAG, Job]] = {}
+        plans: dict[tuple, ExecutionPlan] = {}
 
         def _stream():
             for i, ev in enumerate(process.events()):
                 if ev.t > horizon_s:
                     break     # the engine stops pulling here anyway
                 preset = presets[ev.scenario]
-                pair = lowered.get(ev.scenario)
+                # session-aware scenarios lower one template per turn
+                # index (history grows the footprint); stateless ones
+                # share a single template
+                key = (ev.scenario,
+                       ev.turn if preset.session_aware else 0)
+                pair = lowered.get(key)
                 if pair is None:
-                    job = (preset.make_job(preset.constraints)
+                    kw = ({"session": "", "turn": ev.turn}
+                          if preset.session_aware else {})
+                    job = (preset.make_job(preset.constraints, **kw)
                            if preset.constraints is not None
-                           else preset.make_job())
-                    pair = lowered[ev.scenario] = (self.lower(job), job)
+                           else preset.make_job(**kw))
+                    pair = lowered[key] = (self.lower(job), job)
                 dag, job = pair
                 plan = plan_fn = None
                 if plan_mode == "amortized":
-                    tmpl = plans.get(ev.scenario)
+                    tmpl = plans.get(key)
                     if tmpl is None:
-                        tmpl = plans[ev.scenario] = \
+                        tmpl = plans[key] = \
                             self.plan_admitted(dag, job)
                     # submissions share the template: the engine's only
                     # in-place plan mutation (capacity degrade) takes a
                     # copy-on-write private plan first
                     plan = tmpl
                 else:
-                    def plan_fn(dag=dag, job=job):
+                    pjob = (replace(job, session=ev.session)
+                            if ev.session else job)
+
+                    def plan_fn(dag=dag, job=pjob):
                         return self.plan_admitted(dag, job)
 
                 yield f"w{i:06d}", Submission(
                     dag=dag, plan=plan, arrival=ev.t, tenant=ev.tenant,
                     plan_fn=plan_fn, slo_s=preset.slo_for(ev.tenant),
-                    scenario=ev.scenario)
+                    scenario=ev.scenario, session=ev.session)
 
         sim = Simulator(self.cluster, self.library, self.profiles,
-                        resume=resume, fast_dispatch=fast_dispatch)
+                        resume=resume, fast_dispatch=fast_dispatch,
+                        kv_cache=kv_cache, cache_affinity=cache_affinity)
         return sim.run_open_loop(_stream(), horizon_s, warmup_s=warmup_s,
                                  policy=policy, autoscaler=autoscaler,
                                  log=log, collect_trace=collect_trace)
@@ -248,7 +268,8 @@ class Murakkab:
         may degrade configs in place when capacity shrank since planning."""
         if not self.plan_cache_enabled:
             return self.scheduler.plan(dag, job.constraint_spec,
-                                       job.quality_floor)
+                                       job.quality_floor,
+                                       session=job.session)
         floor = job.quality_floor
         key = (dag.signature(), job.constraint_spec,
                tuple(sorted(floor.items())) if isinstance(floor, dict)
@@ -256,7 +277,10 @@ class Murakkab:
                self.cluster.digest(), self.profiles.version,
                # unlike pruning (plan-preserving), the search mode changes
                # chosen plans — toggling it must not serve cross-mode plans
-               self.scheduler.joint_batch)
+               self.scheduler.joint_batch,
+               # session affinity prices plans per session (warm-prefix
+               # discounts differ even at equal cluster digests)
+               job.session)
         cached = self._plan_cache.get(key)
         if cached is not None:
             self._plan_cache.move_to_end(key)
@@ -264,7 +288,8 @@ class Murakkab:
             return ExecutionPlan(dict(cached.configs))
         self.plan_cache_misses += 1
         plan = self.scheduler.plan(dag, job.constraint_spec,
-                                   job.quality_floor)
+                                   job.quality_floor,
+                                   session=job.session)
         self._plan_cache[key] = ExecutionPlan(dict(plan.configs))
         if len(self._plan_cache) > self.PLAN_CACHE_MAX:
             self._plan_cache.popitem(last=False)

@@ -100,6 +100,11 @@ class Job:
     # requeue resumes from the residual work-items (DESIGN.md §6.4), so
     # harvest jobs lose at most one in-flight step per preemption.
     tenant_class: str = "standard"
+    # serving-session identity (multi-turn chat/agent loops): tasks of
+    # jobs sharing a session share prompt prefixes, so the planner and
+    # engine use it for KV-affinity placement and hit-rate-dependent
+    # prefill pricing (DESIGN.md §9). Empty = stateless (the default).
+    session: str = ""
 
     def __post_init__(self):
         from .admission import validate_tenant

@@ -11,7 +11,7 @@ from hypothesis import strategies as st
 from repro.core import CATALOG, Murakkab, Work
 from repro.core.dag import TaskNode
 from repro.core.energy import knee_batch_grid
-from repro.core.profiles import _as_curve, _curve_per_item
+from repro.core.profiles import CostQuery, _as_curve, _curve_per_item
 from repro.core.simulator import Simulator
 
 V5E = CATALOG["tpu-v5e"]
@@ -192,13 +192,15 @@ def test_single_point_pin_warns_on_batched_step():
     prof.pin(impl.name, "tpu-v5e", 1, 0.5)
     work = impl.work_fn(700, 90)
     with pytest.warns(DeprecationWarning):
-        prof.step_latency(impl, V5E, 1, work, 4)
+        prof.step_latency(CostQuery(impl=impl, spec=V5E, n_devices=1,
+                                    work=work, batch=4))
     # curve pins do not warn
     prof.pin(impl.name, "tpu-v5p", 1, {1: 0.5, 8: 0.1})
     import warnings as _w
     with _w.catch_warnings():
         _w.simplefilter("error")
-        prof.step_latency(impl, CATALOG["tpu-v5p"], 1, work, 4)
+        prof.step_latency(CostQuery(impl=impl, spec=CATALOG["tpu-v5p"],
+                                    n_devices=1, work=work, batch=4))
 
 
 def test_pinned_batches_feed_the_search_grid():

@@ -1,0 +1,362 @@
+"""KV/prefix-cache residency + CostQuery API (DESIGN.md §9).
+
+Four load-bearing properties:
+
+1. **CostQuery shims** — the positional ``ProfileStore`` entry points are
+   deprecation shims over the query object and price identically.
+2. **Hit pricing** — warm prefill is never dearer than cold, cold pricing
+   is *byte-identical* to the pre-cache model (``effective_work`` returns
+   the same object at hit 0), and the discount is monotone in the hit
+   fraction.
+3. **Cache ledger** — residency never exceeds the HBM budget, eviction is
+   LRU, the session index mirrors the per-instance entries (``audit``),
+   and eviction/preemption drops a shell's entries with it.
+4. **Serving economics** — the chat session stream: a turn's cached
+   tokens are exactly the next turn's prefix, affinity placement beats
+   cache-blind on p95 and energy, and cache-less streams stay
+   byte-identical with the KV machinery on or off (reference and fast
+   dispatch paths).
+"""
+import warnings
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.configs.workflow_chat as chat
+import repro.configs.workflow_rag  # noqa: F401
+from repro.core import CATALOG, Murakkab, Work
+from repro.core.arrivals import (SERVING_PRESETS, PoissonArrivals,
+                                 SessionArrivals)
+from repro.core.cluster import (ClusterManager, Instance, Pool,
+                                kv_cache_cap)
+from repro.core.profiles import CostQuery
+
+V5E = CATALOG["tpu-v5e"]
+
+
+def _store():
+    system = Murakkab.tpu_cluster()
+    return system, system.profiles, system.library.impls["gemma2-9b-digest"]
+
+
+def _chat_impl():
+    system = Murakkab.tpu_cluster()
+    return system, system.profiles, \
+        system.library.impls["deepseek-7b-chat"]
+
+
+def _query(impl, work, **kw):
+    return CostQuery(impl=impl, spec=V5E, n_devices=1, work=work, **kw)
+
+
+# -- 1. CostQuery unifies the ProfileStore surface ---------------------------
+
+def test_positional_shims_price_identically_and_warn():
+    """Each legacy positional form = its CostQuery form + a deprecation."""
+    _, prof, impl = _store()
+    work = impl.work_fn(700, 90)
+    q = _query(impl, work, batch=8)
+    with pytest.warns(DeprecationWarning, match="CostQuery"):
+        assert prof.step_latency(impl, V5E, 1, work, 8) == \
+            prof.step_latency(q)
+    qs = _query(impl, work, batch=8, items=50)
+    with pytest.warns(DeprecationWarning, match="CostQuery"):
+        assert prof.schedule_latency(impl, V5E, 1, work, 8, 50) == \
+            prof.schedule_latency(qs)
+    elapsed = prof.schedule_latency(qs) * 0.4
+    qc = _query(impl, work, batch=8, items=50, elapsed_s=elapsed)
+    with pytest.warns(DeprecationWarning, match="CostQuery"):
+        assert prof.completed_items(impl, V5E, 1, work, 8, 50, elapsed) \
+            == prof.completed_items(qc)
+
+
+def test_latency_entry_point_is_deprecated():
+    """``ProfileStore.latency`` always warns — even on the query form."""
+    _, prof, impl = _store()
+    work = impl.work_fn(700, 90)
+    with pytest.warns(DeprecationWarning, match="latency"):
+        legacy = prof.latency(impl, V5E, 1, work)
+    with pytest.warns(DeprecationWarning, match="latency"):
+        assert prof.latency(_query(impl, work)) == legacy
+
+
+def test_query_form_is_warning_free():
+    _, prof, impl = _store()
+    work = impl.work_fn(700, 90)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        prof.step_latency(_query(impl, work, batch=4))
+        prof.schedule_latency(_query(impl, work, batch=4, items=9))
+        prof.completed_items(_query(impl, work, batch=4, items=9,
+                                    elapsed_s=1.0))
+
+
+def test_cache_hit_frac_validated():
+    _, _, impl = _store()
+    work = impl.work_fn(700, 90)
+    for bad in (-0.1, 1.0001, 7.0):
+        with pytest.raises(ValueError, match="cache_hit_frac"):
+            _query(impl, work, cache_hit_frac=bad)
+
+
+# -- 2. hit-rate-dependent prefill pricing -----------------------------------
+
+def test_effective_work_cold_path_is_same_object():
+    """hit 0 returns the *identical* Work — cache-less pricing cannot
+    drift from the pre-cache model by even a float rounding."""
+    _, _, impl = _store()
+    work = impl.work_fn(700, 90)
+    assert _query(impl, work).effective_work() is work
+    flat = Work(flops=1e12, hbm_bytes=1e9)      # no phase split
+    assert _query(impl, flat, cache_hit_frac=0.9).effective_work() is flat
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(64, 20_000), st.integers(1, 256),
+       st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_warm_never_dearer_and_monotone(tin, tout, h1, h2):
+    """Warm schedule latency <= cold, and non-increasing in hit frac."""
+    _, prof, impl = _chat_impl()
+    work = impl.work_fn(tin, tout)
+    lo, hi = sorted((h1, h2))
+    cold = prof.schedule_latency(_query(impl, work, batch=4, items=8))
+    warm_lo = prof.schedule_latency(
+        _query(impl, work, batch=4, items=8, cache_hit_frac=lo))
+    warm_hi = prof.schedule_latency(
+        _query(impl, work, batch=4, items=8, cache_hit_frac=hi))
+    assert warm_hi <= warm_lo <= cold
+    if lo == 0.0:
+        assert warm_lo == cold
+
+
+def test_chat_geometry_hit_discount_is_strict():
+    """The chat interface is prefill-compute-bound by design — a warm
+    prefix must make the step *strictly* cheaper there (a decode-bound
+    geometry would hide the discount behind the weight-stream term)."""
+    _, prof, impl = _chat_impl()
+    work = impl.work_fn(chat.SYSTEM_TOKENS + chat.MESSAGE_TOKENS,
+                        chat.REPLY_TOKENS)
+    cold = prof.step_latency(_query(impl, work))
+    warm = prof.step_latency(_query(impl, work, cache_hit_frac=0.9))
+    assert warm < cold * 0.6
+
+
+# -- 3. the cache ledger ------------------------------------------------------
+
+def _cm_with_shell(cap_tokens=10, kv_per_tok=1.0):
+    """A one-pool cluster holding one warm shell with a tiny KV budget."""
+    cm = ClusterManager([Pool("tpu", "tpu-v5e", capacity=8)])
+    lease = cm.alloc("tpu", 2, t=0.0)
+    inst = Instance("m", "tpu", 2, lease=lease,
+                    cache_cap_bytes=float(cap_tokens) * kv_per_tok)
+    cm.add_instance(inst)
+    return cm, inst
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(1, 6)),
+                min_size=1, max_size=40))
+def test_residency_never_exceeds_budget_and_audit_holds(inserts):
+    """Any insert sequence: residency <= cap, index consistent (audit)."""
+    cm, inst = _cm_with_shell(cap_tokens=10)
+    t = 0.0
+    for sid, tokens in inserts:
+        t += 1.0
+        cm.cache_insert(inst, f"s{sid}", tokens, float(tokens), t)
+        assert cm.cache_residency(inst) <= inst.cache_cap_bytes
+        cm.audit()
+    for session, entry in inst.cache.items():
+        assert inst in cm.cached_instances(session)
+        assert cm.cache_tokens(inst, session) == entry.tokens
+
+
+def test_lru_eviction_order_and_touch():
+    cm, inst = _cm_with_shell(cap_tokens=10)
+    cm.cache_insert(inst, "a", 4, 4.0, t=1.0)
+    cm.cache_insert(inst, "b", 4, 4.0, t=2.0)
+    cm.cache_touch(inst, "a", t=3.0)            # b is now the LRU entry
+    assert cm.cache_insert(inst, "c", 4, 4.0, t=4.0)
+    assert set(inst.cache) == {"a", "c"}        # b evicted, not a
+    assert cm.cached_instances("b") == []
+    cm.audit()
+
+
+def test_oversized_and_budget_less_entries_rejected():
+    cm, inst = _cm_with_shell(cap_tokens=10)
+    assert not cm.cache_insert(inst, "big", 11, 11.0, t=1.0)
+    assert inst.cache == {}
+    inst.cache_cap_bytes = 0.0                  # tool-like impl: no KV
+    assert not cm.cache_insert(inst, "s", 1, 1.0, t=2.0)
+    assert not cm.cache_insert(inst, "", 1, 1.0, t=3.0)   # sessionless
+
+
+def test_audit_catches_planted_cache_violations():
+    cm, inst = _cm_with_shell(cap_tokens=10)
+    cm.cache_insert(inst, "a", 4, 4.0, t=1.0)
+    inst.cache["a"].bytes = 99.0                # blow the budget
+    with pytest.raises(AssertionError):
+        cm.audit()
+    inst.cache["a"].bytes = 4.0
+    cm._cache_index["ghost"] = [inst]           # index without an entry
+    with pytest.raises(AssertionError):
+        cm.audit()
+
+
+def test_eviction_and_preemption_drop_resident_prefixes():
+    """A shell's entries die with it — the preemption path's guarantee."""
+    cm, inst = _cm_with_shell(cap_tokens=10)
+    cm.cache_insert(inst, "a", 4, 4.0, t=1.0)
+    cm.cache_insert(inst, "b", 4, 4.0, t=2.0)
+    cm.evict_instance(inst, t=3.0)
+    assert cm.cached_instances("a") == [] and cm.cached_instances("b") == []
+    assert cm.free("tpu") == 8
+    cm.audit()
+
+
+def test_rebalance_keeps_cached_shells():
+    """Zero pending demand reclaims idle shells — except those pinning
+    session prefixes (think-time gaps hide returning demand)."""
+    from repro.core.dag import DAG, TaskNode
+    system = Murakkab.tpu_cluster()
+    cm, lib = system.cluster, system.library
+    lease = cm.alloc("v5e", 2, t=0.0)
+    inst = Instance("deepseek-7b-chat", "v5e", 2, lease=lease,
+                    cache_cap_bytes=1e9)
+    cm.add_instance(inst)
+    bare = Instance("deepseek-7b-chat", "v5e", 2,
+                    lease=cm.alloc("v5e", 2, t=0.0))
+    cm.add_instance(bare)
+    cm.cache_insert(inst, "s0", 100, 1e6, t=0.0)
+    # drive the demand ledger to zero for chat_respond: register one
+    # turn's workflow and complete it (think-time gap: nothing pending)
+    dag = DAG([TaskNode(id="r", description="", agent="chat_respond")])
+    cm.register_workflow("wf", dag)
+    cm.complete_task("wf", "r")
+    actions = cm.rebalance(lib, t=10.0)
+    assert any("deepseek-7b-chat" in a for a in actions)   # bare reclaimed
+    assert inst in cm.instances and bare not in cm.instances
+
+
+def test_kv_cache_cap_arithmetic():
+    _, _, impl = _chat_impl()
+    cap = kv_cache_cap(V5E, 2, impl.params_bytes, impl.kv_bytes_per_token)
+    assert cap == pytest.approx(
+        (V5E.hbm_bytes * 2 - impl.params_bytes) * 0.9)
+    assert kv_cache_cap(V5E, 2, impl.params_bytes, 0.0) == 0.0
+    assert kv_cache_cap(V5E, 1, V5E.hbm_bytes * 2, 1.0) == 0.0  # no room
+
+
+# -- 4. serving economics on the chat stream ---------------------------------
+
+def _system():
+    return Murakkab.tpu_cluster(v5e=64, v5p=16, v4_harvest=32,
+                                host_cores=128)
+
+
+def _chat_stream(seed=7, rate=0.2):
+    return SessionArrivals(rate, scenario="chat", mean_turns=6.0,
+                           think_time_s=30.0, seed=seed)
+
+
+def _chat_run(affinity=True, kv=True, fast=True, horizon=600.0):
+    return _system().open_loop(
+        _chat_stream(), horizon_s=horizon, warmup_s=60.0,
+        presets={"chat": SERVING_PRESETS["chat"]}, fast_dispatch=fast,
+        kv_cache=kv, cache_affinity=affinity)
+
+
+def test_chat_prefix_is_exactly_the_prior_turns():
+    """The config's token identity: turn k's full prompt+reply == turn
+    k+1's history == the prefix a resident session cache can serve."""
+    system = _system()
+    for k in range(4):
+        dag = system.lower(chat.make_chat_job(session="s", turn=k))
+        node = next(n for n in dag.nodes.values()
+                    if n.agent == "chat_respond")
+        hist = chat.SYSTEM_TOKENS \
+            + k * (chat.MESSAGE_TOKENS + chat.REPLY_TOKENS)
+        assert node.prefix_tokens == hist
+        assert node.tokens_in == hist + chat.MESSAGE_TOKENS
+        # cached after this turn = tin + tout = next turn's prefix
+        assert node.tokens_in + node.tokens_out == hist \
+            + chat.MESSAGE_TOKENS + chat.REPLY_TOKENS
+
+
+def test_prefix_tokens_in_node_signature():
+    """Prefix changes re-key the node — plan caches cannot alias turns."""
+    system = _system()
+    d0 = system.lower(chat.make_chat_job(session="s", turn=0))
+    d1 = system.lower(chat.make_chat_job(session="s", turn=1))
+    n0 = next(n for n in d0.nodes.values() if n.agent == "chat_respond")
+    n1 = next(n for n in d1.nodes.values() if n.agent == "chat_respond")
+    assert d0.signature() != d1.signature()
+    assert n0.prefix_tokens != n1.prefix_tokens
+
+
+def test_scheduler_prices_resident_prefix_into_the_plan():
+    """With a warm session prefix on the cluster, the planner's estimate
+    for that session is cheaper than a cold session's."""
+    system = _system()
+    job = chat.make_chat_job(session="warm", turn=3)
+    dag = system.lower(job)
+    node = next(n for n in dag.nodes.values() if n.agent == "chat_respond")
+    cm = system.cluster
+    lease = cm.alloc("v5e", 2, t=0.0)
+    impl = system.library.impls["deepseek-7b-chat"]
+    inst = Instance("deepseek-7b-chat", "v5e", 2, lease=lease,
+                    cache_cap_bytes=kv_cache_cap(
+                        V5E, 2, impl.params_bytes, impl.kv_bytes_per_token))
+    cm.add_instance(inst)
+    cm.cache_insert(inst, "warm", node.prefix_tokens,
+                    impl.kv_bytes_per_token * node.prefix_tokens, t=0.0)
+    from repro.core.constraints import MIN_COST
+    sched = system.scheduler
+    floor = {"chat_respond": 0.85, "embed": 0.85}
+    warm = sched.plan(dag, MIN_COST, floor, session="warm")
+    cold = sched.plan(dag, MIN_COST, floor, session="cold")
+    assert warm.configs[node.id].est_latency_s \
+        < cold.configs[node.id].est_latency_s
+    assert warm.configs[node.id].impl == "deepseek-7b-chat"
+
+
+def test_chat_affinity_beats_blind_end_to_end():
+    """The PR's headline on a short stream: affinity wins p95 AND energy
+    at equal-or-better priority attainment, with a real hit rate."""
+    warm = _chat_run(affinity=True)
+    cold = _chat_run(affinity=False)
+    assert warm.cache_hit_rate > cold.cache_hit_rate > 0.0
+    assert warm.prefill_tokens_saved > cold.prefill_tokens_saved > 0.0
+    assert warm.energy_wh < cold.energy_wh
+    w_att = warm.per_class["priority"]["slo_attainment"]
+    c_att = cold.per_class["priority"]["slo_attainment"]
+    assert w_att >= c_att
+
+
+def test_chat_fast_dispatch_stays_byte_identical():
+    """The cache-aware engine preserves the PR 6 dispatch-equivalence
+    property on the *stateful* stream too."""
+    fast = _chat_run(fast=True, horizon=400.0)
+    ref = _chat_run(fast=False, horizon=400.0)
+    assert fast.trace == ref.trace
+    assert fast.energy_wh == ref.energy_wh
+    assert fast.cache_hit_rate == ref.cache_hit_rate
+    assert fast.per_class == ref.per_class
+
+
+def test_cacheless_stream_unchanged_by_kv_machinery():
+    """Digest-style scenarios declare no KV footprint: the trace with the
+    cache subsystem enabled is byte-identical to it disabled, on both
+    dispatch paths — the PR 6 baselines cannot move."""
+    def run(kv, fast):
+        return _system().open_loop(
+            PoissonArrivals(rate_per_s=0.25, mix={"rag": 1.0}, seed=4),
+            horizon_s=300.0, warmup_s=30.0, kv_cache=kv,
+            fast_dispatch=fast)
+    on, off = run(True, True), run(False, True)
+    assert on.trace == off.trace
+    assert on.energy_wh == off.energy_wh
+    assert on.per_class == off.per_class
+    assert on.cache_hit_rate == 0.0 == off.cache_hit_rate
+    ref = run(True, False)
+    assert on.trace == ref.trace and on.energy_wh == ref.energy_wh
