@@ -13,12 +13,14 @@ regresses when it moves in its *bad* direction by more than ``tolerance``
   ``attainment``, ``goodput`` or ``completed`` are higher-is-better
   (serving: SLO attainment, goodput, workflows drained at fixed offered
   load);
-- names containing ``resumed`` or ``scale_actions`` are *neutral*:
-  reported, never gated — more salvaged work-items usually means more
-  preemptions happened, and autoscaler activity tracks the policy's
-  tick/cooldown interplay, so neither direction is a regression on its
-  own (``wasted_dev_s`` is the gated lower-is-better signal for the
-  checkpoint/resume path, energy/attainment for autoscaling);
+- names containing ``resumed``, ``scale_actions``, ``faults_injected``
+  or ``hedges_launched`` are *neutral*: reported, never gated — more
+  salvaged work-items usually means more preemptions happened,
+  autoscaler activity tracks the policy's tick/cooldown interplay, and
+  fault/hedge counts track the seeded fault stream, so neither direction
+  is a regression on its own (``wasted_dev_s`` is the gated
+  lower-is-better signal for the checkpoint/resume and fault paths,
+  energy/attainment for autoscaling);
 - everything else (makespan/span/energy/$/preemptions/requeues/
   ``wasted_dev_s``) is lower-is-better.
 
@@ -42,9 +44,12 @@ HIGHER_IS_BETTER = ("quality", "saving", "warm_hit", "hit_rate",
                     "attainment", "goodput", "completed")
 # reported but never gated: value tracks event counts (e.g. work-items
 # salvaged by resume scales with how many preemptions occurred, scale
-# actions with the autoscaler's tick/cooldown interplay), so no
-# direction is inherently bad
-NEUTRAL = ("resumed", "scale_actions")
+# actions with the autoscaler's tick/cooldown interplay, injected faults
+# and launched hedges with the seeded fault stream), so no direction is
+# inherently bad (``wasted_dev_s``/attainment are the gated signals for
+# the fault path)
+NEUTRAL = ("resumed", "scale_actions", "faults_injected",
+           "hedges_launched")
 
 
 def better_higher(name: str) -> bool:

@@ -1,0 +1,191 @@
+"""Fault-recovery benchmark: resume+hedge vs naive-restart (DESIGN.md §10).
+
+Runs the open-loop serving stream under an identical seeded fault stream
+(per-pool MTBF crashes, transient task failures, straggler slowdowns —
+the draws are keyed by ``(seed, workflow, task, attempt)``, so the
+injected faults do not depend on the recovery mode) in two postures:
+
+- **naive**   — ``resume=False`` and hedging off: every failed task
+  restarts from scratch, stragglers drag to completion.
+- **recover** — checkpoint/resume from ``items_done`` plus first-wins
+  hedged duplicates for detected stragglers (the PR 5 machinery driving
+  fault recovery).
+
+The acceptance gate (exit 1 on failure) is the ISSUE's headline claim:
+at equal fault rate, resume+hedge must **match or beat naive-restart on
+priority SLO attainment** and **waste fewer device-seconds**. A fault-free
+point rides along to pin that the subsystem costs nothing when off
+(its metrics must equal ``serving_bench``'s at the same rate).
+
+CLI::
+
+    PYTHONPATH=src python benchmarks/fault_bench.py              # full
+    PYTHONPATH=src python benchmarks/fault_bench.py --fast \\
+        --json BENCH_faults.json                                 # CI mode
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+import repro.configs.workflow_docingest  # noqa: F401,E402
+import repro.configs.workflow_rag  # noqa: F401,E402
+import repro.configs.workflow_video  # noqa: F401,E402
+from repro.core import FaultProfile, Murakkab  # noqa: E402
+from repro.core.arrivals import PoissonArrivals, default_mix  # noqa: E402
+
+SEED = 3
+TENANTS = ("priority", "standard", "harvest")
+
+#: The benchmark's fault regime: a crash every few hundred device-group
+#: seconds per pool, 2% transient task failures, 3% stragglers at 4x.
+PROFILE = FaultProfile(
+    seed=17,
+    instance_mtbf_s={"v5e": 900.0, "v5p": 1200.0, "v4_harvest": 600.0},
+    repair_s=120.0,
+    task_fail_p=0.02,
+    straggler_p=0.03,
+)
+
+
+def _system() -> Murakkab:
+    """The deployment-scale cluster (matches serving_bench)."""
+    return Murakkab.tpu_cluster(v5e=256, v5p=64, v4_harvest=128,
+                                host_cores=512)
+
+
+def _point(rate: float, horizon: float, warmup: float, *,
+           faults: FaultProfile | None, resume: bool = True):
+    return _system().open_loop(
+        PoissonArrivals(rate_per_s=rate, mix=default_mix(), seed=SEED),
+        horizon_s=horizon, warmup_s=warmup, faults=faults, resume=resume,
+        collect_trace=False)
+
+
+def _mode_metrics(prefix: str, rep) -> dict[str, float]:
+    m = {
+        f"{prefix}/goodput_rps": round(rep.goodput_rps, 4),
+        f"{prefix}/energy_wh": round(rep.energy_wh, 1),
+        f"{prefix}/completed": rep.completed,
+        f"{prefix}/wasted_dev_s": round(rep.wasted_dev_s, 1),
+        f"{prefix}/dead_letters": rep.dead_letters,
+        f"{prefix}/faults_injected": rep.faults_injected,
+        f"{prefix}/hedges_launched": rep.hedges_launched,
+    }
+    for cls in TENANTS:
+        row = rep.per_class.get(cls)
+        if row is not None and row["slo_attainment"] is not None:
+            m[f"{prefix}/{cls}_attainment"] = round(
+                row["slo_attainment"], 4)
+    return m
+
+
+def run(rate: float, horizon: float, warmup: float,
+        verbose: bool = True) -> tuple[dict[str, float], dict, bool]:
+    """(metrics, info, gate_ok) for one offered load."""
+    naive_profile = dataclasses.replace(PROFILE, hedge=False)
+    naive = _point(rate, horizon, warmup, faults=naive_profile,
+                   resume=False)
+    recover = _point(rate, horizon, warmup, faults=PROFILE)
+    clean = _point(rate, horizon, warmup, faults=None)
+
+    metrics = _mode_metrics("naive", naive)
+    metrics.update(_mode_metrics("recover", recover))
+    metrics.update({
+        "clean/goodput_rps": round(clean.goodput_rps, 4),
+        "clean/energy_wh": round(clean.energy_wh, 1),
+        "clean/completed": clean.completed,
+    })
+    info = {
+        "rate_per_s": rate,
+        "arrivals": recover.arrivals,
+        "profile": {
+            "seed": PROFILE.seed,
+            "instance_mtbf_s": dict(PROFILE.instance_mtbf_s),
+            "repair_s": PROFILE.repair_s,
+            "task_fail_p": PROFILE.task_fail_p,
+            "straggler_p": PROFILE.straggler_p,
+        },
+        "recover": {"crashes": recover.instance_crashes,
+                    "task_faults": recover.task_faults,
+                    "retries": recover.fault_retries,
+                    "hedges_won": recover.hedges_won,
+                    "resumed_items": recover.resumed_items,
+                    "degrade_replans": recover.degrade_replans},
+        "naive": {"crashes": naive.instance_crashes,
+                  "task_faults": naive.task_faults,
+                  "retries": naive.fault_retries},
+    }
+
+    n_att = metrics.get("naive/priority_attainment", -1.0)
+    r_att = metrics.get("recover/priority_attainment", -1.0)
+    gate_att = r_att >= n_att >= 0.0
+    gate_waste = recover.wasted_dev_s < naive.wasted_dev_s
+    ok = gate_att and gate_waste
+
+    if verbose:
+        hdr = (f"{'mode':>8s} {'completed':>10s} {'goodput':>8s} "
+               f"{'pri_att':>8s} {'wasted_dev_s':>13s} {'dead':>5s} "
+               f"{'energy_wh':>10s}")
+        print(hdr)
+        print("-" * len(hdr))
+        for name, rep in (("clean", clean), ("naive", naive),
+                          ("recover", recover)):
+            att = rep.per_class.get("priority", {}).get("slo_attainment")
+            print(f"{name:>8s} {rep.completed:>10d} "
+                  f"{rep.goodput_rps:>8.3f} "
+                  f"{(att if att is not None else -1):>8.3f} "
+                  f"{rep.wasted_dev_s:>13.1f} {rep.dead_letters:>5d} "
+                  f"{rep.energy_wh:>10.1f}")
+        print(f"\nfault stream: {recover.faults_injected} faults "
+              f"({recover.instance_crashes} crashes, "
+              f"{recover.task_faults} task failures), "
+              f"{recover.hedges_launched} hedges "
+              f"({recover.hedges_won} won), "
+              f"{recover.resumed_items} items resumed")
+        print(f"gate: priority attainment {r_att:.4f} "
+              f"{'>=' if gate_att else '<'} naive {n_att:.4f}; "
+              f"wasted {recover.wasted_dev_s:.1f} "
+              f"{'<' if gate_waste else '>='} "
+              f"naive {naive.wasted_dev_s:.1f} dev-s "
+              f"=> {'PASS' if ok else 'FAIL'}")
+    return metrics, info, ok
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="short horizon (CI bench-smoke mode)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write metrics JSON (e.g. BENCH_faults.json)")
+    args = ap.parse_args()
+
+    # rate 1.0/s puts the cluster under enough pressure that stragglers
+    # and retries actually cost SLO attainment — the regime where the
+    # recovery machinery has something to win back
+    if args.fast:
+        rate, horizon, warmup = 1.0, 2000.0, 200.0
+    else:
+        rate, horizon, warmup = 1.0, 8000.0, 800.0
+
+    metrics, info, ok = run(rate, horizon, warmup)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "faults",
+                       "mode": "fast" if args.fast else "full",
+                       "info": info, "metrics": metrics},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

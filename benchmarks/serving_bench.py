@@ -37,7 +37,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 import repro.configs.workflow_docingest  # noqa: F401,E402
 import repro.configs.workflow_rag  # noqa: F401,E402
 import repro.configs.workflow_video  # noqa: F401,E402
-from repro.core import Murakkab  # noqa: E402
+from repro.core import FaultProfile, Murakkab  # noqa: E402
 from repro.core.arrivals import PoissonArrivals, default_mix  # noqa: E402
 from repro.core.autoscale import Autoscaler, PoolPolicy  # noqa: E402
 
@@ -60,11 +60,52 @@ def _harvest_autoscaler() -> Autoscaler:
 
 
 def _point(rate: float, horizon: float, warmup: float,
-           autoscaler: Autoscaler | None = None):
+           autoscaler: Autoscaler | None = None,
+           faults: FaultProfile | None = None):
     return _system().open_loop(
         PoissonArrivals(rate_per_s=rate, mix=default_mix(), seed=SEED),
         horizon_s=horizon, warmup_s=warmup, autoscaler=autoscaler,
-        collect_trace=False)
+        faults=faults, collect_trace=False)
+
+
+def faults_smoke(rate: float, horizon: float, warmup: float,
+                 verbose: bool = True) -> tuple[dict[str, float], bool]:
+    """--faults: one sweep point under a default fault profile.
+
+    A serving-path sanity check that fault injection and recovery run end
+    to end on this benchmark's cluster/stream (the recovery-vs-naive
+    comparison itself lives in ``fault_bench.py``). Fails when no faults
+    fire or admitted workflows go missing (neither completed nor
+    dead-lettered).
+    """
+    fp = FaultProfile(seed=17,
+                      instance_mtbf_s={"v5e": 900.0, "v5p": 1200.0,
+                                       "v4_harvest": 600.0},
+                      repair_s=120.0, task_fail_p=0.02, straggler_p=0.03)
+    rep = _point(rate, horizon, warmup, faults=fp)
+    m = {
+        "faults/goodput_rps": round(rep.goodput_rps, 4),
+        "faults/energy_wh": round(rep.energy_wh, 1),
+        "faults/completed": rep.completed,
+        "faults/faults_injected": rep.faults_injected,
+        "faults/hedges_launched": rep.hedges_launched,
+        "faults/dead_letters": rep.dead_letters,
+        "faults/wasted_dev_s": round(rep.wasted_dev_s, 1),
+    }
+    for cls in TENANTS:
+        row = rep.per_class.get(cls)
+        if row is not None and row["slo_attainment"] is not None:
+            m[f"faults/{cls}_attainment"] = round(row["slo_attainment"], 4)
+    ok = rep.faults_injected > 0 and \
+        rep.completed + rep.dead_letters == rep.arrivals
+    if verbose:
+        print(f"\nfaults smoke @ rate={rate:g}/s: "
+              f"{rep.faults_injected} faults, "
+              f"{rep.hedges_launched} hedges, "
+              f"{rep.dead_letters} dead-letters, "
+              f"{rep.completed}/{rep.arrivals} completed "
+              f"=> {'PASS' if ok else 'FAIL'}")
+    return m, ok
 
 
 def sweep(rates: tuple[float, ...], horizon: float, warmup: float,
@@ -161,6 +202,9 @@ def main() -> int:
                     help="short horizon (CI bench-smoke mode)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write metrics JSON (e.g. BENCH_serving.json)")
+    ap.add_argument("--faults", action="store_true",
+                    help="add one sweep point under a default FaultProfile "
+                         "(smoke: fault injection on the serving path)")
     ap.add_argument("--min-events-per-s", type=float, default=20_000.0,
                     help="engine-throughput floor asserted on the largest "
                          "sweep point (composite events/s; conservative "
@@ -180,6 +224,11 @@ def main() -> int:
     auto_metrics, auto_ok = autoscale_comparison(accept_rate, horizon,
                                                  warmup)
     metrics.update(auto_metrics)
+    faults_ok = True
+    if args.faults:
+        fault_metrics, faults_ok = faults_smoke(max(rates), horizon,
+                                                warmup)
+        metrics.update(fault_metrics)
 
     ev_s = info.get("events_per_s", 0)
     print(f"\nengine throughput @ rate={info.get('rate_per_s')}/s: "
@@ -200,7 +249,7 @@ def main() -> int:
                       f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {args.json}")
-    return 0 if (throughput_ok and auto_ok) else 1
+    return 0 if (throughput_ok and auto_ok and faults_ok) else 1
 
 
 if __name__ == "__main__":

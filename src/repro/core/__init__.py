@@ -27,6 +27,7 @@ from .constraints import (Budget, Constraint, ConstraintSpec, Deadline,
 from .dag import DAG, TaskNode
 from .energy import (CATALOG, DeviceSpec, EnergyLedger, batch_knee,
                      batch_roofline_latency, roofline_latency)
+from .faults import FaultProfile, RetryPolicy
 from .orchestrator import LLMPlanner, RulePlanner, dag_creation_overhead
 from .profiles import Profile, ProfileStore
 from .scheduler import ExecutionPlan, Scheduler, TaskConfig
@@ -56,6 +57,7 @@ __all__ = [
     "ArrivalProcess", "MMPPArrivals", "PoissonArrivals", "ServingPreset",
     "TraceArrivals", "default_mix", "register_preset",
     "Autoscaler", "PoolPolicy", "ScaleAction",
+    "FaultProfile", "RetryPolicy",
     "JobResult", "Murakkab",
     "ARTIFACTS", "SCENARIOS", "Artifact", "ArtifactRegistry",
     "CardinalityModel", "InputSet", "Scenario", "ScenarioRegistry",

@@ -24,6 +24,13 @@ Policy math (per pool, at each tick):
 - **Scale-to-zero** (``min_devices == 0``) is only legal for harvestable
   pools — reserved/priority pools must keep warm capacity; ``validate``
   rejects anything else.
+
+Under fault injection (DESIGN.md §10) the same target-utilization law
+doubles as crash backfill: an instance crash shrinks the pool via
+``set_capacity``, demand per device rises, and the next tick scales the
+pool back toward its policy envelope without any fault-specific wiring —
+whichever of the autoscaler or the seeded repair event fires first
+restores capacity (both are clamped to the pool limit).
 """
 from __future__ import annotations
 

@@ -328,6 +328,26 @@ class ClusterManager:
             if len(done) >= len(self._dags[wf_id].nodes):
                 del self._dags[wf_id], self._done[wf_id]
 
+    def abandon_workflow(self, wf_id: str):
+        """Drop a dead-lettered workflow's remaining demand (fault path).
+
+        The engine calls this when a workflow exhausts its retry budget:
+        its unfinished tasks will never run, so they must stop counting as
+        upcoming demand (otherwise the autoscaler would hold capacity for
+        work that can no longer arrive). Safe to call for unknown ids.
+        """
+        dag = self._dags.pop(wf_id, None)
+        if dag is None:
+            return
+        done = self._done.pop(wf_id, set())
+        d = self._demand
+        for tid, node in dag.nodes.items():
+            if tid in done:
+                continue
+            d[node.agent] -= 1
+            if d[node.agent] == 0:
+                self.demand_zeroed = True
+
     def upcoming_demand(self) -> dict[str, int]:
         """Pending task count per agent interface, across registered DAGs.
 

@@ -262,16 +262,13 @@ class ProfileStore:
             f"benchmarks/calibrate_batch_curves.py).",
             DeprecationWarning, stacklevel=3)
 
-    def _legacy_query(self, method: str, impl, spec, n_devices, work,
-                      batch, items, elapsed_s) -> CostQuery:
-        """Build a CostQuery from a deprecated positional call, warning."""
-        warnings.warn(
-            f"ProfileStore.{method}(impl, spec, n_devices, ...) positional "
-            f"form is deprecated; pass a CostQuery instead "
-            f"(ProfileStore.{method}(CostQuery(impl=..., spec=..., ...)))",
-            DeprecationWarning, stacklevel=3)
-        return CostQuery(impl=impl, spec=spec, n_devices=n_devices, work=work,
-                         batch=batch, items=items, elapsed_s=elapsed_s)
+    @staticmethod
+    def _require_query(method: str, query) -> None:
+        if not isinstance(query, CostQuery):
+            raise TypeError(
+                f"ProfileStore.{method} takes a CostQuery; the positional "
+                f"(impl, spec, n_devices, ...) form was removed — build "
+                f"CostQuery(impl=..., spec=..., n_devices=..., work=...)")
 
     def _step(self, impl: AgentImpl, spec: DeviceSpec, n_devices: int,
               work: Work, batch: int) -> float:
@@ -319,26 +316,19 @@ class ProfileStore:
                 self._cache.popitem(last=False)
         return step
 
-    def step_latency(self, query: CostQuery | AgentImpl, spec=None,
-                     n_devices=None, work=None, batch: int = 1) -> float:
+    def step_latency(self, query: CostQuery) -> float:
         """Wall time of ONE step co-scheduling ``query.batch`` work-items.
 
-        Canonical form: ``step_latency(CostQuery(...))``. The query's
-        ``cache_hit_frac`` discounts the prefill phase before pricing
-        (:meth:`CostQuery.effective_work`); at hit 0 the step is priced on
-        the original work object, byte-identical to the cache-less model.
-        The deprecated positional form ``(impl, spec, n_devices, work,
-        batch)`` still works behind a ``DeprecationWarning`` shim.
+        The query's ``cache_hit_frac`` discounts the prefill phase before
+        pricing (:meth:`CostQuery.effective_work`); at hit 0 the step is
+        priced on the original work object, byte-identical to the cache-less
+        model.
         """
-        if not isinstance(query, CostQuery):
-            query = self._legacy_query("step_latency", query, spec, n_devices,
-                                       work, batch, 1, 0.0)
+        self._require_query("step_latency", query)
         return self._step(query.impl, query.spec, query.n_devices,
                           query.effective_work(), query.batch)
 
-    def schedule_latency(self, query: CostQuery | AgentImpl, spec=None,
-                         n_devices=None, work=None, batch=None,
-                         items=None) -> float:
+    def schedule_latency(self, query: CostQuery) -> float:
         """Wall time to run ``query.items`` work-items in ``batch`` batches.
 
         The batched execution schedule (DESIGN.md §7.2): ``floor(items/b)``
@@ -349,13 +339,9 @@ class ProfileStore:
         the prefill discount at ``query.cache_hit_frac`` (one pricing site,
         DESIGN.md §9). The schedule never exceeds the legacy
         ``ceil(items/b)`` full-step charge
-        (``tests/test_batch_schedule.py`` holds the property). The
-        positional form ``(impl, spec, n_devices, work, batch, items)`` is
-        deprecated.
+        (``tests/test_batch_schedule.py`` holds the property).
         """
-        if not isinstance(query, CostQuery):
-            query = self._legacy_query("schedule_latency", query, spec,
-                                       n_devices, work, batch, items, 0.0)
+        self._require_query("schedule_latency", query)
         eff = query.effective_work()
         b = max(int(query.batch), 1)
         items = max(int(query.items), 0)
@@ -369,9 +355,7 @@ class ProfileStore:
                                 eff, rem)
         return total
 
-    def completed_items(self, query: CostQuery | AgentImpl, spec=None,
-                        n_devices=None, work=None, batch=None, items=None,
-                        elapsed_s=None) -> tuple[int, float]:
+    def completed_items(self, query: CostQuery) -> tuple[int, float]:
         """Invert the ``schedule_latency`` step schedule at ``elapsed_s``.
 
         Returns ``(items_done, wall_s)``: how many work-items' batch steps
@@ -385,14 +369,9 @@ class ProfileStore:
         ``schedule_latency(items) - wall_s``, which is what keeps the
         step-granular refund and estimate/actual parity exact. The
         inversion prices the same effective (cache-discounted) work the
-        schedule charged, so refunds invert exactly what was billed. The
-        positional form ``(impl, spec, n_devices, work, batch, items,
-        elapsed_s)`` is deprecated.
+        schedule charged, so refunds invert exactly what was billed.
         """
-        if not isinstance(query, CostQuery):
-            query = self._legacy_query("completed_items", query, spec,
-                                       n_devices, work, batch, items,
-                                       elapsed_s)
+        self._require_query("completed_items", query)
         eff = query.effective_work()
         b = max(int(query.batch), 1)
         items = max(int(query.items), 0)
@@ -411,25 +390,6 @@ class ProfileStore:
             if elapsed_s + 1e-9 >= wall + rem_lat:
                 done, wall = items, wall + rem_lat
         return done, wall
-
-    def latency(self, query: CostQuery | AgentImpl, spec=None, n_devices=None,
-                work=None, batch: int = 1) -> float:
-        """Deprecated: per-item latency; use ``step_latency(q) / q.batch``.
-
-        Kept as a thin alias so external callers migrate at their own pace;
-        every call warns.
-        """
-        if isinstance(query, CostQuery):
-            warnings.warn(
-                "ProfileStore.latency is deprecated; use "
-                "step_latency(query) / max(query.batch, 1)",
-                DeprecationWarning, stacklevel=2)
-        else:
-            query = self._legacy_query("latency", query, spec, n_devices,
-                                       work, batch, 1, 0.0)
-        return self._step(query.impl, query.spec, query.n_devices,
-                          query.effective_work(), query.batch) \
-            / max(query.batch, 1)
 
     def cache_info(self) -> dict:
         """Estimate-memo counters: hits, misses, size, cap and hit rate."""

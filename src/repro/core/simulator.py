@@ -71,6 +71,7 @@ from .agents import AgentLibrary
 from .cluster import ClusterManager, Instance, Lease, kv_cache_cap
 from .dag import DAG
 from .energy import CATALOG, EnergyLedger
+from .faults import FaultProfile
 from .profiles import CostQuery, ProfileStore
 from .scheduler import ExecutionPlan, TaskConfig
 
@@ -111,6 +112,15 @@ class SimReport:
     cache_hits: int = 0
     cache_hit_rate: float = 0.0
     prefill_tokens_saved: float = 0.0   # un-recomputed prefill tokens
+    # fault injection + recovery (DESIGN.md §10); all zero when faults=None
+    faults_injected: int = 0     # crashes + transient fails + stragglers
+    instance_crashes: int = 0    # crash events that killed a live instance
+    task_faults: int = 0         # transient mid-compute task failures
+    fault_retries: int = 0       # task re-executions after a fault backoff
+    hedges_launched: int = 0     # straggler duplicates started
+    hedges_won: int = 0          # duplicates that beat their primary
+    dead_letters: int = 0        # workflows abandoned (retries exhausted)
+    degrade_replans: int = 0     # replans onto the degraded live cluster
 
     def workflow_span(self, wf: str) -> float:
         """Arrival-to-finish seconds for one workflow (tenant latency)."""
@@ -176,6 +186,9 @@ class _WfState:
     ready: list = field(default_factory=list)
     adm: Admission | None = None
     sort_key: tuple | None = None     # static-policy dispatch key
+    # fault machinery (inert when faults=None)
+    dead: bool = False                # dead-lettered: retries exhausted
+    fails: dict[str, int] = field(default_factory=dict)   # fault count/task
 
 
 @dataclass(slots=True)
@@ -199,6 +212,7 @@ class _Running:
     resumable: bool           # chunkable: completed steps survive preempt
     session: str = ""         # serving session the run belongs to
     cache_frac: float = 0.0   # prefix-cache hit fraction priced into dur
+    slow: float = 1.0         # straggler multiplier on the compute window
 
 
 class _Engine:
@@ -233,6 +247,22 @@ class _Engine:
         self.requeues = 0
         self.resumed_items = 0
         self.wasted_dev_s = 0.0
+        # fault injection + recovery (DESIGN.md §10). ``faults`` is None on
+        # a fault-free run: every fault path below is gated on it, so the
+        # event heap, float-op order and counters stay byte-identical.
+        self.faults: FaultProfile | None = sim.faults
+        self.retry = sim.faults.retry if sim.faults is not None else None
+        self.hedges: dict[tuple[str, str], _Running] = {}
+        self._pool_rng: dict = {}        # pool -> crash-process generator
+        self.incomplete = 0              # live (not finished/dead) workflows
+        self.faults_injected = 0
+        self.instance_crashes = 0
+        self.task_faults = 0
+        self.fault_retries = 0
+        self.hedges_launched = 0
+        self.hedges_won = 0
+        self.dead_letters = 0
+        self.degrade_replans = 0
         # KV/prefix-cache counters (DESIGN.md §9)
         self.cache_lookups = 0
         self.cache_hits = 0
@@ -266,6 +296,7 @@ class _Engine:
         self.wfs[wid] = _WfState(sub.dag, sub.plan, sub.arrival, sub.tenant,
                                  sub.plan_fn, slo_s=sub.slo_s,
                                  scenario=sub.scenario, session=sub.session)
+        self.incomplete += 1
         heapq.heappush(self.events,
                        (sub.arrival, next(self.ctr), "arrive", wid))
 
@@ -408,6 +439,10 @@ class _Engine:
         rec = self.running.pop((vwid, vtid), None)
         if rec is None:
             return
+        if self.hedges:
+            # a hedge dies with its primary: any rollback of the primary
+            # also cancels the in-flight duplicate (its work is discarded)
+            self._kill_hedge(vwid, vtid)
         vst = self.wfs[vwid]
         vst.started.discard(vtid)
         self._push_ready(vwid, vst, vtid)
@@ -421,54 +456,7 @@ class _Engine:
                 self.lease_owner.pop(inst.lease.id, None)
             if inst in self.cluster.instances:
                 self.cluster.evict_instance(inst, t)
-        spec = CATALOG[self.cluster.pools[rec.cfg.pool].device]
-        # the charged dev_s covers compute only (weights-load is an
-        # idle-power period), so progress is measured over the compute
-        # window [compute_begin, end] — a victim preempted mid-load
-        # gets a full refund either way
-        window = max(rec.end - rec.compute_begin, 1e-12)
-        elapsed = min(max(t - rec.compute_begin, 0.0), window)
-        # executed device-seconds so far; dev_s spreads uniformly over
-        # the window (paths run concurrently, so the rate is
-        # ndev * paths even when the wall clock is path-multiplied)
-        exec_dev_s = rec.dev_s * (elapsed / window)
-        if rec.resumable and self.sim.resume:
-            # checkpoint/resume: invert the step schedule over the
-            # compute window — completed batch steps survive, the
-            # in-flight step is discarded
-            impl = self.sim.library.impls[rec.cfg.impl]
-            node = vst.dag.nodes[vtid]
-            work = impl.work_fn(node.tokens_in, node.tokens_out)
-            # the refund inverts the exact schedule _duration charged,
-            # including its prefix-cache discount (rec.cache_frac)
-            done, wall = self.sim.profiles.completed_items(CostQuery(
-                impl=impl, spec=spec, n_devices=rec.cfg.n_devices,
-                work=work, batch=rec.batch, items=rec.items_per_inst,
-                elapsed_s=elapsed, cache_hit_frac=rec.cache_frac))
-            kept_items = min(done * rec.n_inst,
-                             node.work_items - rec.items_done0)
-            if kept_items:
-                vst.items_done[vtid] = rec.items_done0 + kept_items
-                self.resumed_items += kept_items
-            # step-granular refund: completed steps stay charged (their
-            # items never re-run); the in-flight step is refunded — its
-            # items ride the residual requeue, which re-charges them,
-            # so the task's total charge across attempts is exactly
-            # schedule_latency(total items)
-            kept_dev_s = wall * rec.ndev * rec.cfg.paths
-            refund = max(rec.dev_s - kept_dev_s, 0.0)
-            self.wasted_dev_s += max(exec_dev_s - kept_dev_s, 0.0)
-        else:
-            # restart from scratch (non-chunkable / resume disabled):
-            # refund only the unexecuted remainder — the executed
-            # compute stays charged (that energy was really burned)
-            # and is all wasted, since the requeue re-runs everything
-            refund = rec.dev_s * (1.0 - elapsed / window)
-            self.wasted_dev_s += exec_dev_s
-        self.ledger.charge_active(spec, -refund,
-                                  utilization=rec.pf, pool=rec.cfg.pool)
-        self.busy[rec.cfg.pool] = self.busy.get(rec.cfg.pool, 0.0) - refund
-        self.served.charge(vst.tenant, -refund)
+        self._refund(rec, vst, vtid, t)
         self.requeues += 1
         if self.collect_trace:
             self.trace.append(TraceEntry(vwid, vtid, rec.cfg.impl,
@@ -480,6 +468,72 @@ class _Engine:
                             f"({rec.ndev}x{rec.cfg.pool}); requeued"
                             + (f" ({kept} items checkpointed)" if kept
                                else ""))
+
+    def _refund(self, rec: _Running, vst: _WfState, vtid: str, t: float,
+                salvage: bool = True):
+        """Roll back an interrupted run's energy/$ charge, step-granularly.
+
+        Shared by preemption (``cancel_task``), fault failures
+        (``fail_task``) and hedge cancellation (``_kill_hedge``, with
+        ``salvage=False`` — a losing duplicate's completed steps are
+        discarded, never checkpointed). For a straggling run
+        (``rec.slow != 1.0``) the schedule inversion sees the *unslowed*
+        clock (the schedule charged normal step times; the wall merely
+        stretched), and kept charges scale back up by ``slow`` — so the
+        refund inverts exactly what ``try_start`` billed.
+        """
+        spec = CATALOG[self.cluster.pools[rec.cfg.pool].device]
+        # the charged dev_s covers compute only (weights-load is an
+        # idle-power period), so progress is measured over the compute
+        # window [compute_begin, end] — a victim preempted mid-load
+        # gets a full refund either way
+        window = max(rec.end - rec.compute_begin, 1e-12)
+        elapsed = min(max(t - rec.compute_begin, 0.0), window)
+        # executed device-seconds so far; dev_s spreads uniformly over
+        # the window (paths run concurrently, so the rate is
+        # ndev * paths even when the wall clock is path-multiplied)
+        exec_dev_s = rec.dev_s * (elapsed / window)
+        if salvage and rec.resumable and self.sim.resume:
+            # checkpoint/resume: invert the step schedule over the
+            # compute window — completed batch steps survive, the
+            # in-flight step is discarded
+            impl = self.sim.library.impls[rec.cfg.impl]
+            node = vst.dag.nodes[vtid]
+            work = impl.work_fn(node.tokens_in, node.tokens_out)
+            # the refund inverts the exact schedule _duration charged,
+            # including its prefix-cache discount (rec.cache_frac)
+            sched_elapsed = (elapsed if rec.slow == 1.0
+                             else elapsed / rec.slow)
+            done, wall = self.sim.profiles.completed_items(CostQuery(
+                impl=impl, spec=spec, n_devices=rec.cfg.n_devices,
+                work=work, batch=rec.batch, items=rec.items_per_inst,
+                elapsed_s=sched_elapsed, cache_hit_frac=rec.cache_frac))
+            kept_items = min(done * rec.n_inst,
+                             node.work_items - rec.items_done0)
+            if kept_items:
+                vst.items_done[vtid] = rec.items_done0 + kept_items
+                self.resumed_items += kept_items
+            # step-granular refund: completed steps stay charged (their
+            # items never re-run); the in-flight step is refunded — its
+            # items ride the residual requeue, which re-charges them,
+            # so the task's total charge across attempts is exactly
+            # schedule_latency(total items)
+            kept_dev_s = wall * rec.ndev * rec.cfg.paths
+            if rec.slow != 1.0:
+                kept_dev_s *= rec.slow
+            refund = max(rec.dev_s - kept_dev_s, 0.0)
+            self.wasted_dev_s += max(exec_dev_s - kept_dev_s, 0.0)
+        else:
+            # restart from scratch (non-chunkable / resume disabled /
+            # losing hedge): refund only the unexecuted remainder — the
+            # executed compute stays charged (that energy was really
+            # burned) and is all wasted, since nothing of it survives
+            refund = rec.dev_s * (1.0 - elapsed / window)
+            self.wasted_dev_s += exec_dev_s
+        self.ledger.charge_active(spec, -refund,
+                                  utilization=rec.pf, pool=rec.cfg.pool)
+        self.busy[rec.cfg.pool] = self.busy.get(rec.cfg.pool, 0.0) - refund
+        self.served.charge(vst.tenant, -refund)
 
     def try_preempt(self, pool: str, n_needed: int) -> bool:
         """Reclaim harvest-class leases for a priority tenant."""
@@ -500,7 +554,12 @@ class _Engine:
                 self.cluster.evict_instance(inst, t)
             owner = self.lease_owner.pop(lease.id, None)
             if owner is not None:
-                self.cancel_task(*owner)
+                if len(owner) == 3:
+                    # ("h", wid, tid): a hedge duplicate lost its devices —
+                    # cancel just the hedge; its primary keeps running
+                    self._kill_hedge(owner[1], owner[2])
+                else:
+                    self.cancel_task(*owner)
         return bool(victims)
 
     # -- task start ----------------------------------------------------------------
@@ -659,6 +718,26 @@ class _Engine:
                                                     cache_frac)
         pmult = cfg.paths if cfg.paths > 1 and not node.chunkable else 1.0
         dur *= pmult
+        # seeded fault draws (DESIGN.md §10): a pure function of
+        # (seed, wid, tid, attempt), so replay and the fast/reference
+        # dispatch paths see identical fault streams regardless of
+        # dispatch order. All three draws always happen (stream stability).
+        attempt = st.attempt.get(tid, 0)
+        slow, fail_frac = 1.0, 0.0
+        fp = self.faults
+        if fp is not None:
+            u_fail, u_frac, u_strag = fp.task_draws(wid, tid, attempt)
+            if u_fail < fp.task_fail_p:
+                # transient failure somewhere inside the compute window
+                fail_frac = 0.05 + 0.9 * u_frac
+            elif u_strag < fp.straggler_p:
+                slow = fp.straggler_mult
+                self.faults_injected += 1
+        base_dur = dur          # the CostQuery estimate (hedge trigger)
+        if slow != 1.0:
+            extra = compute * (slow - 1.0)
+            compute = compute * slow
+            dur = dur + extra * pmult
         end = t + dur
         # the tail of the run is compute; any lead-in is weights load
         compute_begin = end - compute * pmult
@@ -681,7 +760,6 @@ class _Engine:
                 if j < len(self.active_ready) and \
                         self.active_ready[j][1] == wid:
                     del self.active_ready[j]
-        attempt = st.attempt.get(tid, 0)
         # compose the note: restart kind + warmth, so preemption
         # analysis sees a requeue that also paid a cold weights load
         # ("requeue+cold") rather than losing the restart cost
@@ -693,6 +771,8 @@ class _Engine:
             warmth = warmth + "+kv" if warmth else "kv"
         note = (restart + "+" + warmth if restart and warmth
                 else restart or warmth)
+        if slow != 1.0:
+            note = note + "+slow" if note else "slow"
         for lease in leases:
             self.lease_owner[lease.id] = (wid, tid)
         for inst in insts:
@@ -707,9 +787,24 @@ class _Engine:
                                             items_per_inst=per_inst,
                                             resumable=node.chunkable,
                                             session=session,
-                                            cache_frac=cache_frac)
-        heapq.heappush(self.events, (end, next(self.ctr), "finish",
-                                     (wid, tid, attempt)))
+                                            cache_frac=cache_frac,
+                                            slow=slow)
+        if fail_frac:
+            # this attempt dies mid-compute instead of finishing
+            fail_t = compute_begin + (end - compute_begin) * fail_frac
+            heapq.heappush(self.events, (fail_t, next(self.ctr), "tfail",
+                                         (wid, tid, attempt)))
+        else:
+            heapq.heappush(self.events, (end, next(self.ctr), "finish",
+                                         (wid, tid, attempt)))
+            if fp is not None and fp.hedge and slow >= fp.hedge_threshold:
+                # straggler detected against the CostQuery estimate: at
+                # threshold x the estimated duration the task is still
+                # running — launch a duplicate then (first finish wins)
+                heapq.heappush(
+                    self.events,
+                    (t + base_dur * fp.hedge_threshold, next(self.ctr),
+                     "hedge", (wid, tid, attempt)))
         if self.log is not None:
             self.log.append(f"[{t:8.1f}s] start {wid}:{tid} on "
                             f"{ndev}x{cfg.pool} ({cfg.impl})"
@@ -719,17 +814,38 @@ class _Engine:
     # -- finish -------------------------------------------------------------------
     def on_finish(self, payload) -> bool:
         """Finish event; returns True when the whole workflow completed."""
-        t = self.t
         wid, tid, attempt = payload
         st = self.wfs[wid]
         if st.attempt.get(tid, 0) != attempt:
             return False    # stale: this execution was preempted
         rec = self.running.pop((wid, tid))
+        if self.hedges:
+            # the primary beat its duplicate: cancel the hedge, discard
+            # and waste whatever it had executed (first finish wins)
+            self._kill_hedge(wid, tid)
+        return self._complete(wid, tid, st, rec)
+
+    def _complete(self, wid: str, tid: str, st: _WfState,
+                  rec: _Running) -> bool:
+        """Book a finished run (shared by primary finishes and hedge wins).
+
+        For a dead-lettered workflow the run still settles its resources
+        and trace, but spawns no successors and can never count as a
+        workflow completion.
+        """
+        t = self.t
         cluster = self.cluster
         st.done.add(tid)
         if t > st.finish:
             st.finish = t
         cluster.complete_task(wid, tid)
+        if rec.slow != 1.0:
+            # a straggler that ran to completion burned ``slow``x the
+            # compute the work required: the excess is overhead of the
+            # fault, booked as waste — the same currency a hedge-beaten
+            # primary's discarded run is booked in, so the fault bench
+            # compares hedging against let-it-drag honestly
+            self.wasted_dev_s += rec.dev_s * (rec.slow - 1.0) / rec.slow
         cfg = rec.cfg
         model = self.is_model[cfg.impl]
         lease_owner = self.lease_owner
@@ -762,17 +878,20 @@ class _Engine:
             self.trace.append(TraceEntry(wid, tid, rec.cfg.impl,
                                          rec.cfg.pool, rec.ndev,
                                          rec.start, t, note=rec.note))
-        # index newly-ready successors (their last dependency just finished)
+        # index newly-ready successors (their last dependency just
+        # finished); a dead workflow spawns nothing
         done = st.done
         nodes = st.dag.nodes
-        for succ in st.dag.succ(tid):
-            if succ in done or succ in st.started:
-                continue
-            if all(d in done for d in nodes[succ].deps):
-                self._push_ready(wid, st, succ)
-        finished = len(done) == len(nodes)
+        if not st.dead:
+            for succ in st.dag.succ(tid):
+                if succ in done or succ in st.started:
+                    continue
+                if all(d in done for d in nodes[succ].deps):
+                    self._push_ready(wid, st, succ)
+        finished = not st.dead and len(done) == len(nodes)
         if finished:
             self._deactivate(wid, st)
+            self.incomplete -= 1
         # workflow-aware reclamation once demand disappears. Gated on the
         # demand-hit-zero flag: rebalance can only newly reclaim at the
         # instant some interface's pending count reaches 0 (an interface
@@ -785,6 +904,386 @@ class _Engine:
                 if self.log is not None:
                     self.log.append(f"[{t:8.1f}s] rebalance: {action}")
         return finished
+
+    # -- fault injection + recovery (DESIGN.md §10) -----------------------------
+    def seed_faults(self):
+        """Arm the per-pool crash processes (called once, at run start)."""
+        fp = self.faults
+        fp.validate_pools(self.cluster.pools)
+        # crash-shrunk pools must make over-sized plans *wait* for repair,
+        # not permanently degrade them: remember the nominal capacities as
+        # the no-autoscaler pool limit (Simulator._pool_limit)
+        self.sim._nominal_caps = {name: p.capacity
+                                  for name, p in self.cluster.pools.items()}
+        for pool in sorted(fp.instance_mtbf_s):
+            rng = self._pool_rng[pool] = fp.pool_stream(pool)
+            gap = rng.expovariate(1.0 / fp.instance_mtbf_s[pool])
+            heapq.heappush(self.events,
+                           (gap, next(self.ctr), "crash", pool))
+
+    def on_fault_event(self, kind: str, payload) -> None:
+        """Dispatch one fault-machinery heap event."""
+        if kind == "crash":
+            self.on_crash(payload)
+        elif kind == "repair":
+            self.on_repair(payload)
+        elif kind == "tfail":
+            wid, tid, attempt = payload
+            self.fail_task(wid, tid, attempt, "fault")
+        elif kind == "retry":
+            self.on_retry(payload)
+        elif kind == "hedge":
+            self.on_hedge(payload)
+        elif kind == "hfinish":
+            self.on_hfinish(payload)
+        else:
+            raise RuntimeError(f"unknown event kind {kind!r}")
+
+    def fail_task(self, wid: str, tid: str, t_attempt: int, reason: str,
+                  crashed: Instance | None = None):
+        """A running task just failed (transient fault or instance crash).
+
+        Like ``cancel_task``, but: surviving shells go *idle* instead of
+        being evicted (the software failed, not the hardware), the failure
+        counts against the workflow's retry budget, and the task re-queues
+        only after a seeded exponential backoff (the retry event) — or the
+        workflow dead-letters once the budget is exhausted. Chunkable tasks
+        checkpoint their completed steps through the same ``_refund``
+        inversion preemption uses, so a retry resumes from ``items_done``.
+        """
+        st = self.wfs[wid]
+        if st.attempt.get(tid, 0) != t_attempt:
+            return                      # stale: that execution already ended
+        rec = self.running.pop((wid, tid), None)
+        if rec is None:
+            return
+        t = self.t
+        if self.hedges:
+            self._kill_hedge(wid, tid)  # a hedge dies with its primary
+        st.started.discard(tid)
+        st.attempt[tid] = t_attempt + 1
+        for lease in rec.leases:
+            self.lease_owner.pop(lease.id, None)
+            if self.cluster.lease_active(lease):
+                self.cluster.release(lease, t)
+        for inst in rec.insts:
+            if inst.lease is not None:
+                self.lease_owner.pop(inst.lease.id, None)
+            if inst is crashed or inst not in self.cluster.instances:
+                continue
+            inst.busy_until = t         # surviving shells idle immediately
+        if rec.insts:
+            # availability moved (shells idled / died): wake blocked keys
+            self.cluster.free_epoch[rec.cfg.pool] += 1
+            self.cluster.epoch_total += 1
+        self._refund(rec, st, tid, t)
+        self.faults_injected += 1
+        if reason == "fault":
+            self.task_faults += 1
+        if self.collect_trace:
+            self.trace.append(TraceEntry(
+                wid, tid, rec.cfg.impl, rec.cfg.pool, rec.ndev, rec.start,
+                t, note=("crashed" if reason == "crash" else "failed")))
+        if st.dead:
+            return      # already dead-lettered: this run just settled
+        fails = st.fails.get(tid, 0) + 1
+        st.fails[tid] = fails
+        if fails >= self.retry.attempts_for(st.tenant):
+            if self.log is not None:
+                self.log.append(f"[{t:8.1f}s] {reason} {wid}:{tid} "
+                                f"(attempt {fails}); retries exhausted")
+            self._dead_letter(wid, st)
+            return
+        delay = self.retry.backoff_s(
+            fails, self.faults.retry_jitter(wid, tid, fails))
+        heapq.heappush(self.events,
+                       (t + delay, next(self.ctr), "retry",
+                        (wid, tid, fails)))
+        if self.log is not None:
+            self.log.append(f"[{t:8.1f}s] {reason} {wid}:{tid} "
+                            f"(attempt {fails}); retry in {delay:.1f}s")
+
+    def _dead_letter(self, wid: str, st: _WfState):
+        """Abandon a workflow whose task exhausted its retry budget."""
+        self.dead_letters += 1
+        st.dead = True
+        if st.ready and not self.pol.dynamic:
+            j = bisect.bisect_left(self.active_ready, (st.sort_key, wid))
+            if j < len(self.active_ready) and \
+                    self.active_ready[j][1] == wid:
+                del self.active_ready[j]
+        st.ready.clear()
+        self._deactivate(wid, st)
+        # its unfinished tasks are no longer upcoming demand
+        self.cluster.abandon_workflow(wid)
+        self.incomplete -= 1
+        if self.log is not None:
+            self.log.append(f"[{self.t:8.1f}s] dead-letter {wid} "
+                            f"({st.tenant})")
+
+    def on_crash(self, pool: str):
+        """Exponential-MTBF instance crash on ``pool``.
+
+        The victim dies through ``evict_instance`` — its lease is released
+        and its KV/prefix entries die with the shell — and the crashed
+        device group leaves the pool's capacity until a seeded repair
+        restores it (the autoscaler may backfill sooner). The draws happen
+        unconditionally so the crash clock is a pure function of the seed,
+        whatever the cluster looks like when it fires.
+        """
+        fp = self.faults
+        rng = self._pool_rng[pool]
+        u_victim = rng.random()
+        gap = rng.expovariate(1.0 / fp.instance_mtbf_s[pool])
+        repair = rng.expovariate(1.0 / fp.repair_s)
+        if self.incomplete <= 0:
+            return      # run drained: stop the crash process
+        t = self.t
+        live = [i for i in self.cluster.instances if i.pool == pool]
+        if live:
+            victim = live[min(int(u_victim * len(live)), len(live) - 1)]
+            self.instance_crashes += 1
+            lease = victim.lease
+            owner = (self.lease_owner.pop(lease.id, None)
+                     if lease is not None else None)
+            n = victim.n_devices
+            self.cluster.evict_instance(victim, t)
+            cap = self.cluster.pools[pool].capacity
+            self.cluster.set_capacity(pool, cap - n, t)
+            heapq.heappush(self.events,
+                           (t + repair, next(self.ctr), "repair",
+                            (pool, n)))
+            if self.log is not None:
+                self.log.append(f"[{t:8.1f}s] crash {victim.impl} "
+                                f"({n}x{pool}); repair in {repair:.0f}s")
+            if owner is None:
+                self.faults_injected += 1   # idle shell (KV died with it)
+            elif len(owner) == 3:
+                self.faults_injected += 1
+                self._kill_hedge(owner[1], owner[2])
+            else:
+                wid, tid = owner
+                self.fail_task(wid, tid,
+                               self.wfs[wid].attempt.get(tid, 0),
+                               "crash", crashed=victim)
+        if self.incomplete > 0:
+            heapq.heappush(self.events,
+                           (t + gap, next(self.ctr), "crash", pool))
+
+    def on_repair(self, payload):
+        """Restore a crashed device group's capacity (clamped to the pool
+        limit, so an autoscaler keeps authority over the final size)."""
+        pool, n = payload
+        cap = self.cluster.pools[pool].capacity
+        new_cap = min(cap + n, self.sim._pool_limit(pool))
+        if new_cap > cap:
+            self.cluster.set_capacity(pool, new_cap, self.t)
+            if self.log is not None:
+                self.log.append(f"[{self.t:8.1f}s] repair +{n}x{pool}")
+
+    def on_retry(self, payload):
+        """Backoff elapsed: requeue the failed task (maybe replanned)."""
+        wid, tid, fails = payload
+        st = self.wfs.get(wid)
+        if st is None or st.dead or st.fails.get(tid, 0) != fails:
+            return
+        if tid in st.done or tid in st.started:
+            return
+        self.fault_retries += 1
+        rp = self.retry
+        if rp.replan_after > 0 and fails >= rp.replan_after \
+                and st.plan_fn is not None:
+            # graceful degradation: under retry pressure, replan the
+            # workflow's remaining tasks against the *live* (possibly
+            # capacity-degraded) cluster — the planner picks a cheaper
+            # impl/config within the quality floor if the original no
+            # longer fits well
+            self._degrade_replan(wid, st)
+        self._push_ready(wid, st, tid)
+        if self.log is not None:
+            self.log.append(f"[{self.t:8.1f}s] retry {wid}:{tid} "
+                            f"(failure {fails})")
+
+    def _degrade_replan(self, wid: str, st: _WfState):
+        """Re-plan remaining tasks on the degraded cluster (copy-on-write)."""
+        try:
+            fresh = st.plan_fn()
+        except Exception:
+            return                      # planning may fail mid-degradation
+        cfgs = dict(st.plan.configs)
+        changed = False
+        for tid, cfg in fresh.configs.items():
+            if tid in st.done or tid in st.started:
+                continue                # only not-yet-run tasks may move
+            if cfgs.get(tid) != cfg:
+                cfgs[tid] = cfg
+                changed = True
+        if changed:
+            st.plan = ExecutionPlan(cfgs)
+            self.degrade_replans += 1
+            if self.log is not None:
+                self.log.append(f"[{self.t:8.1f}s] degrade-replan {wid}")
+
+    def on_hedge(self, payload):
+        """Straggler-detection event: the task has now run for
+        ``hedge_threshold x`` its estimate — launch a duplicate if it is
+        still running and resources fit."""
+        wid, tid, attempt = payload
+        st = self.wfs.get(wid)
+        if st is None or st.dead or st.attempt.get(tid, 0) != attempt:
+            return
+        rec = self.running.get((wid, tid))
+        if rec is None or (wid, tid) in self.hedges:
+            return
+        self._start_hedge(wid, tid, attempt, st, rec)
+
+    def _start_hedge(self, wid: str, tid: str, attempt: int,
+                     st: _WfState, rec: _Running):
+        """Duplicate a straggling run on other shells (first finish wins).
+
+        Hedges are opportunistic: they use genuinely free capacity only —
+        no eviction, no preemption — and are themselves preemptible and
+        crash-prone, but never straggle or fault (one level of recursion
+        is enough). The duplicate prices the same residual the primary
+        did (``items_done0``), sessionless (its shells hold no prefix).
+        """
+        t = self.t
+        cluster = self.cluster
+        cfg = rec.cfg
+        node = st.dag.nodes[tid]
+        impl = self.impls[cfg.impl]
+        spec = self.specs[cfg.pool]
+        harvest = st.tenant == "harvest"
+        leases: list[Lease] = []
+        insts: list[Instance] = []
+        new_inst = 0
+        if self.is_model[cfg.impl]:
+            for i in cluster.warm_instances(cfg.impl, cfg.pool,
+                                            cfg.n_devices):
+                if len(insts) >= rec.n_inst:
+                    break
+                if i.busy_until <= t and i not in rec.insts:
+                    insts.append(i)
+            provisioned = []
+            while len(insts) < rec.n_inst:
+                lease = cluster.alloc(cfg.pool, cfg.n_devices, t,
+                                      harvest=harvest)
+                if lease is None:
+                    break
+                inst = Instance(cfg.impl, cfg.pool, cfg.n_devices,
+                                warm_since=t, lease=lease,
+                                cache_cap_bytes=self.sim._cache_cap(cfg))
+                cluster.add_instance(inst)
+                insts.append(inst)
+                provisioned.append(inst)
+                new_inst += 1
+            if len(insts) < rec.n_inst:
+                for inst in provisioned:    # couldn't fit: roll back
+                    cluster.evict_instance(inst, t)
+                return
+        else:
+            lease = cluster.alloc(cfg.pool, cfg.n_devices * rec.n_inst, t,
+                                  harvest=harvest)
+            if lease is None:
+                return
+            leases.append(lease)
+        n_inst = rec.n_inst
+        dur, compute, per_inst = self.sim._duration(
+            node, cfg, n_inst, new_inst, rec.items_done0, 0.0)
+        pmult = cfg.paths if cfg.paths > 1 and not node.chunkable else 1.0
+        dur *= pmult
+        end = t + dur
+        compute_begin = end - compute * pmult
+        for inst in insts:
+            inst.busy_until = end
+        ndev = cfg.n_devices * n_inst
+        dev_s = compute * ndev * cfg.paths
+        pf = self.sim.profiles.power_frac(impl, spec, cfg.n_devices)
+        self.ledger.charge_active(spec, dev_s, utilization=pf,
+                                  pool=cfg.pool)
+        self.busy[cfg.pool] = self.busy.get(cfg.pool, 0.0) + dev_s
+        self.served.charge(st.tenant, dev_s)
+        howner = ("h", wid, tid)
+        for lease in leases:
+            self.lease_owner[lease.id] = howner
+        for inst in insts:
+            if inst.lease is not None:
+                self.lease_owner[inst.lease.id] = howner
+        self.hedges[(wid, tid)] = _Running(
+            cfg, leases, insts, t, end, compute_begin, ndev, dev_s, pf,
+            note="hedge+" + ("cold" if new_inst else "warm"),
+            n_inst=n_inst, batch=(1 if spec.kind == "cpu" else cfg.batch),
+            items_done0=rec.items_done0, items_per_inst=per_inst,
+            resumable=node.chunkable)
+        self.hedges_launched += 1
+        heapq.heappush(self.events, (end, next(self.ctr), "hfinish",
+                                     (wid, tid, attempt)))
+        if self.log is not None:
+            self.log.append(f"[{t:8.1f}s] hedge {wid}:{tid} on "
+                            f"{ndev}x{cfg.pool} (primary "
+                            f"{rec.slow:.1f}x slow)")
+
+    def _kill_hedge(self, wid: str, tid: str):
+        """Cancel an in-flight hedge; its executed work is discarded."""
+        hrec = self.hedges.pop((wid, tid), None)
+        if hrec is None:
+            return
+        t = self.t
+        for lease in hrec.leases:
+            self.lease_owner.pop(lease.id, None)
+            if self.cluster.lease_active(lease):
+                self.cluster.release(lease, t)
+        for inst in hrec.insts:
+            if inst.lease is not None:
+                self.lease_owner.pop(inst.lease.id, None)
+            if inst in self.cluster.instances:
+                inst.busy_until = t
+        if hrec.insts:
+            self.cluster.free_epoch[hrec.cfg.pool] += 1
+            self.cluster.epoch_total += 1
+        # salvage=False: the loser's completed steps don't checkpoint (the
+        # winner runs the full residual itself — crediting both would
+        # double-count items), so executed = wasted, unexecuted = refunded
+        self._refund(hrec, self.wfs[wid], tid, t, salvage=False)
+        if self.collect_trace:
+            self.trace.append(TraceEntry(
+                wid, tid, hrec.cfg.impl, hrec.cfg.pool, hrec.ndev,
+                hrec.start, t, note="hedge_lost"))
+
+    def on_hfinish(self, payload):
+        """A hedge finished first: cancel the straggling primary and
+        complete the task through the duplicate's run."""
+        wid, tid, attempt = payload
+        hrec = self.hedges.get((wid, tid))
+        st = self.wfs.get(wid)
+        if hrec is None or st is None or \
+                st.attempt.get(tid, 0) != attempt:
+            return
+        del self.hedges[(wid, tid)]
+        t = self.t
+        prec = self.running.pop((wid, tid), None)
+        if prec is not None:
+            # invalidate the primary's in-flight finish event
+            st.attempt[tid] = attempt + 1
+            for lease in prec.leases:
+                self.lease_owner.pop(lease.id, None)
+                if self.cluster.lease_active(lease):
+                    self.cluster.release(lease, t)
+            for inst in prec.insts:
+                if inst.lease is not None:
+                    self.lease_owner.pop(inst.lease.id, None)
+                if inst in self.cluster.instances:
+                    inst.busy_until = t
+            if prec.insts:
+                self.cluster.free_epoch[prec.cfg.pool] += 1
+                self.cluster.epoch_total += 1
+            self._refund(prec, st, tid, t, salvage=False)
+            if self.collect_trace:
+                self.trace.append(TraceEntry(
+                    wid, tid, prec.cfg.impl, prec.cfg.pool, prec.ndev,
+                    prec.start, t, note="hedge_beat_primary"))
+        self.hedges_won += 1
+        self._complete(wid, tid, st, hrec)
 
     # -- accounting ---------------------------------------------------------------
     def finalize(self, makespan: float):
@@ -823,6 +1322,14 @@ class _Engine:
             cache_hit_rate=(self.cache_hits / self.cache_lookups
                             if self.cache_lookups else 0.0),
             prefill_tokens_saved=self.prefill_tokens_saved,
+            faults_injected=self.faults_injected,
+            instance_crashes=self.instance_crashes,
+            task_faults=self.task_faults,
+            fault_retries=self.fault_retries,
+            hedges_launched=self.hedges_launched,
+            hedges_won=self.hedges_won,
+            dead_letters=self.dead_letters,
+            degrade_replans=self.degrade_replans,
         )
 
 
@@ -832,10 +1339,15 @@ class Simulator:
     def __init__(self, cluster: ClusterManager, library: AgentLibrary,
                  profiles: ProfileStore, resume: bool = True,
                  fast_dispatch: bool = True, kv_cache: bool = True,
-                 cache_affinity: bool = True):
+                 cache_affinity: bool = True,
+                 faults: FaultProfile | None = None):
         self.cluster = cluster
         self.library = library
         self.profiles = profiles
+        # seeded fault injection + recovery (DESIGN.md §10); None keeps
+        # every fault path provably inert — runs are byte-identical to an
+        # engine without the subsystem (the golden tests pin this)
+        self.faults = faults
         # KV/prefix-cache residency (DESIGN.md §9). kv_cache is the master
         # switch: False makes every cache path provably inert (sessionless
         # pricing, no ledger writes) — the byte-identity reference.
@@ -855,6 +1367,11 @@ class Simulator:
         # autoscale limits per pool (run_open_loop fills this; closed-loop
         # runs treat current capacity as the limit)
         self._scale_limits: dict[str, int] = {}
+        # pool capacities at fault-run start (seed_faults fills this):
+        # with no autoscaler, a crash-shrunk pool's limit is its nominal
+        # size, so over-sized plans wait for the repair instead of
+        # permanently degrading to the post-crash capacity
+        self._nominal_caps: dict[str, int] = {}
         # duration memo: open-loop serving re-runs identical (config, node
         # workload) pairs thousands of times; keyed on everything
         # _duration reads, including the profile-store version (pin()
@@ -862,8 +1379,15 @@ class Simulator:
         self._dur_memo: dict[tuple, tuple[float, float, int]] = {}
 
     def _pool_limit(self, pool: str) -> int:
-        """Max capacity a pool may scale to (its size when not scaled)."""
-        return self._scale_limits.get(pool,
+        """Max capacity a pool may scale to (its size when not scaled).
+
+        Autoscaler limits take precedence; otherwise a fault run answers
+        with the pool's nominal (pre-crash) size, and a fault-free run
+        with the current capacity (the seed's behaviour)."""
+        lim = self._scale_limits.get(pool)
+        if lim is not None:
+            return lim
+        return self._nominal_caps.get(pool,
                                       self.cluster.pools[pool].capacity)
 
     def _cache_cap(self, cfg: TaskConfig) -> float:
@@ -942,34 +1466,45 @@ class Simulator:
             eng.add_submission(wid, sub)
         for wid, st in eng.wfs.items():
             self.cluster.register_workflow(wid, st.dag)
+        if self.faults is not None:
+            eng.seed_faults()
 
         events = eng.events
-        while events:
-            t, _, kind, payload = heapq.heappop(events)
-            eng.t = t
-            # drain every event sharing this timestamp before dispatching:
-            # simultaneous arrivals are all admitted (and planned) before
-            # any of them starts work, so admission-policy order holds for
-            # same-time tenants and identical tenants admitted into the
-            # same cluster state share one plan via the plan cache.
-            batch = [(kind, payload)]
-            while events and events[0][0] == t:
-                _, _, k, p = heapq.heappop(events)
-                batch.append((k, p))
-            eng.n_events += len(batch)
-            for kind, payload in batch:
-                if kind == "arrive":
-                    eng.admit(payload)
-                elif kind == "finish":
-                    eng.on_finish(payload)
-            eng.dispatch()
+        try:
+            while events:
+                t, _, kind, payload = heapq.heappop(events)
+                eng.t = t
+                # drain every event sharing this timestamp before
+                # dispatching: simultaneous arrivals are all admitted (and
+                # planned) before any of them starts work, so
+                # admission-policy order holds for same-time tenants and
+                # identical tenants admitted into the same cluster state
+                # share one plan via the plan cache.
+                batch = [(kind, payload)]
+                while events and events[0][0] == t:
+                    _, _, k, p = heapq.heappop(events)
+                    batch.append((k, p))
+                eng.n_events += len(batch)
+                for kind, payload in batch:
+                    if kind == "arrive":
+                        eng.admit(payload)
+                    elif kind == "finish":
+                        eng.on_finish(payload)
+                    else:
+                        eng.on_fault_event(kind, payload)
+                eng.dispatch()
+        finally:
+            self._nominal_caps = {}
 
         stuck = [(wid, tid) for wid, s in eng.wfs.items()
+                 if not s.dead
                  for tid in s.dag.nodes
                  if tid not in s.done]
         if stuck:
             raise RuntimeError(f"deadlocked tasks (resources never fit): "
                                f"{stuck[:8]}")
+        if __debug__:
+            self.cluster.audit()
         makespan = max((st.finish for st in eng.wfs.values()), default=0.0)
         # instances still holding devices release at makespan (accounted as
         # idle power via the pool floor below).
@@ -1035,6 +1570,8 @@ class Simulator:
             return False
 
         _pull()
+        if self.faults is not None:
+            eng.seed_faults()
         if autoscaler is not None:
             self._scale_limits = autoscaler.limits()
             autoscaler.validate(self.cluster)
@@ -1083,6 +1620,8 @@ class Simulator:
                         autoscaler.apply(self.cluster, payload, t)
                         scale_actions.append(
                             (t, payload.pool, payload.capacity))
+                    else:
+                        eng.on_fault_event(kind, payload)
                     if events and events[0][0] == t:
                         _, _, kind, payload = heappop(events)
                         n += 1
@@ -1092,7 +1631,10 @@ class Simulator:
                 eng.dispatch()
         finally:
             self._scale_limits = {}
+            self._nominal_caps = {}
 
+        if __debug__:
+            self.cluster.audit()
         makespan = max((st.finish for st in eng.wfs.values()), default=0.0)
         eng.finalize(makespan)
         rep = eng.report(makespan)
@@ -1120,13 +1662,23 @@ class Simulator:
         per_class: dict[str, dict] = {}
         spans: dict[str, list[float]] = {}
         met: dict[str, int] = {}
+        # dead-lettered workflows per tenant (post-warmup): they count
+        # against SLO attainment — an abandoned request is a missed SLO,
+        # not a dropped sample — but contribute no latency span
+        dead: dict[str, int] = {}
         measured = 0
         goodput_n = 0
         for wid, st in eng.wfs.items():
             done = len(st.done) == len(st.dag.nodes)
             if done:
                 completed += 1
-            if st.arrival < warmup_s or not done:
+            if st.arrival < warmup_s:
+                continue
+            if st.dead:
+                measured += 1
+                dead[st.tenant] = dead.get(st.tenant, 0) + 1
+                continue
+            if not done:
                 continue
             measured += 1
             span = st.finish - st.arrival
@@ -1145,9 +1697,18 @@ class Simulator:
                 "p95_s": ss[int(0.95 * (n - 1))],
                 "p99_s": ss[int(0.99 * (n - 1))],
                 "mean_s": sum(ss) / n,
-                "slo_attainment": (met[tenant] / n if tenant in met
-                                   else None),
+                "dead": dead.get(tenant, 0),
+                "slo_attainment": (
+                    met[tenant] / (n + dead.get(tenant, 0))
+                    if tenant in met else None),
             }
+        for tenant, n_dead in sorted(dead.items()):
+            if tenant not in per_class:
+                # every post-warmup workflow of this class dead-lettered
+                per_class[tenant] = {
+                    "n": 0, "p50_s": 0.0, "p95_s": 0.0, "p99_s": 0.0,
+                    "mean_s": 0.0, "dead": n_dead, "slo_attainment": 0.0,
+                }
         elapsed = max(rep.makespan_s - warmup_s, 1e-9)
         n_ev = eng.n_events + eng.n_attempts
         return OpenLoopReport(
@@ -1156,7 +1717,10 @@ class Simulator:
                 "trace", "per_workflow", "pool_busy_device_s",
                 "preemptions", "requeues", "resumed_items", "wasted_dev_s",
                 "cache_lookups", "cache_hits", "cache_hit_rate",
-                "prefill_tokens_saved")},
+                "prefill_tokens_saved", "faults_injected",
+                "instance_crashes", "task_faults", "fault_retries",
+                "hedges_launched", "hedges_won", "dead_letters",
+                "degrade_replans")},
             horizon_s=horizon_s,
             warmup_s=warmup_s,
             offered_rps=arrivals / max(horizon_s, 1e-9),

@@ -132,7 +132,8 @@ class Murakkab:
     def execute_many(self, jobs: dict[str, tuple[Job, float]],
                      policy: str | None = "fcfs",
                      log: list | None = None,
-                     resume: bool = True) -> SimReport:
+                     resume: bool = True,
+                     faults=None) -> SimReport:
         """Multi-tenant submission: {id: (job, arrival_s)}.
 
         Jobs enter an admission queue ordered by ``policy`` (core/admission:
@@ -143,7 +144,9 @@ class Murakkab:
         ``tenant_class`` decides its queue rank and whether its allocations
         are preemptible (harvest class). ``resume=False`` disables work-item
         checkpoint/resume of preempted tasks (DESIGN.md §6.4) — every
-        victim restarts from scratch, the pre-resume baseline.
+        victim restarts from scratch, the pre-resume baseline. ``faults``
+        takes a :class:`core.faults.FaultProfile` to run under seeded
+        fault injection with retry/hedge recovery (DESIGN.md §10).
 
         Admission-time planning goes through a plan cache keyed by (DAG
         structural signature, constraint spec, quality floor, cluster-state
@@ -160,7 +163,7 @@ class Murakkab:
             subs[wid] = Submission(dag=dag, plan=None, arrival=arrival,
                                    tenant=job.tenant_class, plan_fn=_plan)
         sim = Simulator(self.cluster, self.library, self.profiles,
-                        resume=resume)
+                        resume=resume, faults=faults)
         return sim.run(subs, log=log, policy=policy)
 
     def open_loop(self, process: ArrivalProcess, horizon_s: float, *,
@@ -169,7 +172,8 @@ class Murakkab:
                   log: list | None = None, collect_trace: bool = True,
                   resume: bool = True, fast_dispatch: bool = True,
                   plan_mode: str = "amortized", kv_cache: bool = True,
-                  cache_affinity: bool = True) -> OpenLoopReport:
+                  cache_affinity: bool = True,
+                  faults=None) -> OpenLoopReport:
         """Serve an open-loop arrival stream (DESIGN.md §8).
 
         ``process`` is a ``core.arrivals`` generator (Poisson / MMPP /
@@ -200,7 +204,9 @@ class Murakkab:
         token footprint — and each submission carries the event's session
         id, which the engine uses for KV-affinity placement and hit-rate
         prefill pricing (DESIGN.md §9). ``kv_cache``/``cache_affinity``
-        forward to the :class:`Simulator` switches.
+        forward to the :class:`Simulator` switches, as does ``faults``
+        (a :class:`core.faults.FaultProfile` for seeded fault injection
+        with retry/hedge/degradation recovery, DESIGN.md §10).
         """
         if plan_mode not in ("amortized", "admission"):
             raise ValueError(f"plan_mode must be 'amortized' or "
@@ -242,6 +248,13 @@ class Murakkab:
                     # in-place plan mutation (capacity degrade) takes a
                     # copy-on-write private plan first
                     plan = tmpl
+                    if faults is not None:
+                        # degradation replans (retry pressure) re-plan
+                        # this workflow against the live cluster; inert
+                        # without faults, so the amortized fast path
+                        # stays closure-free
+                        def plan_fn(dag=dag, job=job):
+                            return self.plan_admitted(dag, job)
                 else:
                     pjob = (replace(job, session=ev.session)
                             if ev.session else job)
@@ -256,7 +269,8 @@ class Murakkab:
 
         sim = Simulator(self.cluster, self.library, self.profiles,
                         resume=resume, fast_dispatch=fast_dispatch,
-                        kv_cache=kv_cache, cache_affinity=cache_affinity)
+                        kv_cache=kv_cache, cache_affinity=cache_affinity,
+                        faults=faults)
         return sim.run_open_loop(_stream(), horizon_s, warmup_s=warmup_s,
                                  policy=policy, autoscaler=autoscaler,
                                  log=log, collect_trace=collect_trace)

@@ -26,6 +26,14 @@ from typing import Callable
 # ---------------------------------------------------------------------------
 
 
+#: One straggler definition for the whole repo: a worker/task running beyond
+#: ``DEFAULT_STRAGGLER_THRESHOLD x`` the healthy median (or the engine's
+#: CostQuery estimate) is a straggler.  ``StragglerMonitor`` and the serving
+#: engine's hedge trigger (``core.faults.FaultProfile.hedge_threshold``) both
+#: default to this constant.
+DEFAULT_STRAGGLER_THRESHOLD = 1.5
+
+
 @dataclass
 class RestartPolicy:
     max_failures: int = 3
@@ -34,7 +42,7 @@ class RestartPolicy:
 
 def run_with_restarts(*, num_steps: int, state, data_iter, step_fn,
                       ckpt_manager, save_every: int = 10,
-                      policy: RestartPolicy = RestartPolicy(),
+                      policy: RestartPolicy | None = None,
                       fail_hook: Callable[[int], None] | None = None,
                       log: Callable[[str], None] = lambda s: None):
     """Run ``step_fn(state, batch) -> (state, metrics)`` with auto-restart.
@@ -42,6 +50,8 @@ def run_with_restarts(*, num_steps: int, state, data_iter, step_fn,
     ``fail_hook(step)`` (tests) may raise to inject a failure at a step.
     Returns (state, metrics_history, failures_survived).
     """
+    if policy is None:
+        policy = RestartPolicy()
     failures = 0
     history = []
     step = int(state["step"])
@@ -86,7 +96,7 @@ def run_with_restarts(*, num_steps: int, state, data_iter, step_fn,
 class StragglerMonitor:
     """Flags workers whose step time exceeds threshold x median."""
 
-    threshold: float = 1.5
+    threshold: float = DEFAULT_STRAGGLER_THRESHOLD
     window: int = 20
     _durations: dict[str, list[float]] = field(default_factory=dict)
 
@@ -105,10 +115,18 @@ class StragglerMonitor:
         return [w for w, m in meds.items() if m > self.threshold * overall]
 
     def action(self, worker: str) -> str:
-        """Escalating mitigation: redispatch -> exclude."""
+        """Escalating mitigation: redispatch -> exclude.
+
+        Slowness is judged against the *peer* median, matching
+        ``stragglers()``: a worker with no peers has no reference population
+        and can never escalate to exclusion, however bimodal its own history.
+        """
+        peers = [m for w, m in self.medians().items() if w != worker]
+        if not peers:
+            return "redispatch"
+        overall = median(peers)
         n = len([d for d in self._durations.get(worker, [])
-                 if d > self.threshold * median(
-                     self.medians().values() or [0.0])])
+                 if d > self.threshold * overall])
         return "exclude" if n >= self.window // 2 else "redispatch"
 
 

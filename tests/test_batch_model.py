@@ -10,6 +10,7 @@ from hypothesis import strategies as st
 from repro.core import (CATALOG, Murakkab, Work, batch_knee,
                         batch_roofline_latency, roofline_latency)
 from repro.core.dag import TaskNode
+from repro.core.profiles import CostQuery
 from repro.core.simulator import Simulator
 
 V5E = CATALOG["tpu-v5e"]
@@ -167,7 +168,8 @@ def test_alpha_fallback_for_unphased_and_pinned():
     impl = system.library.impls["dense-retrieval"]     # fixed work, a=0.4
     spec = V5E
     work = impl.work_fn(64, 0)
-    lat1 = system.profiles.latency(impl, spec, 1, work)
+    q1 = CostQuery(impl=impl, spec=spec, n_devices=1, work=work)
+    lat1 = system.profiles.step_latency(q1)
     b = 8
     cfg = system.scheduler.estimate(node, impl, "v5e", 1, batch=b)
     assert cfg.est_latency_s == pytest.approx(
@@ -177,7 +179,9 @@ def test_alpha_fallback_for_unphased_and_pinned():
     system.profiles.pin("gemma2-9b-digest", "tpu-v5e", 1, 0.5)
     dimpl = system.library.impls["gemma2-9b-digest"]
     dwork = dimpl.work_fn(700, 90)
-    assert system.profiles.step_latency(dimpl, spec, 1, dwork, 4) == \
+    assert system.profiles.step_latency(
+        CostQuery(impl=dimpl, spec=spec, n_devices=1, work=dwork,
+                  batch=4)) == \
         pytest.approx(0.5 * 4 ** dimpl.batch_alpha, rel=1e-12)
 
 

@@ -17,6 +17,11 @@ from repro.core.simulator import Simulator
 V5E = CATALOG["tpu-v5e"]
 
 
+def _q(impl, work, *, batch=1, items=1, elapsed=0.0):
+    return CostQuery(impl=impl, spec=V5E, n_devices=1, work=work,
+                     batch=batch, items=items, elapsed_s=elapsed)
+
+
 def _work(pf, df, pb, db, wb, steps):
     return Work.two_phase(prefill_flops=pf, decode_flops=df,
                           prefill_bytes=pb, decode_bytes=db,
@@ -40,8 +45,8 @@ def test_schedule_exact_multiple_is_full_steps_only():
     """items % b == 0: the schedule is exactly items/b full steps."""
     system, prof, impl = _store()
     work = impl.work_fn(700, 90)
-    step = prof.step_latency(impl, V5E, 1, work, 8)
-    assert prof.schedule_latency(impl, V5E, 1, work, 8, 64) == \
+    step = prof.step_latency(_q(impl, work, batch=8))
+    assert prof.schedule_latency(_q(impl, work, batch=8, items=64)) == \
         pytest.approx(8 * step, rel=1e-12)
 
 
@@ -49,27 +54,27 @@ def test_schedule_items_below_batch_charges_one_small_step():
     """items < b: one step at the *items'* price, not the full batch's."""
     system, prof, impl = _store()
     work = impl.work_fn(700, 90)
-    got = prof.schedule_latency(impl, V5E, 1, work, 64, 10)
-    assert got == pytest.approx(prof.step_latency(impl, V5E, 1, work, 10),
+    got = prof.schedule_latency(_q(impl, work, batch=64, items=10))
+    assert got == pytest.approx(prof.step_latency(_q(impl, work, batch=10)),
                                 rel=1e-12)
     # strictly cheaper than the legacy full-step charge (10 items are
     # weights-streaming-bound well below the 64-batch compute time)
-    assert got < prof.step_latency(impl, V5E, 1, work, 64)
+    assert got < prof.step_latency(_q(impl, work, batch=64))
 
 
 def test_schedule_batch_one_is_per_item_sum():
     """b == 1: items sequential unbatched steps."""
     system, prof, impl = _store()
     work = impl.work_fn(700, 90)
-    assert prof.schedule_latency(impl, V5E, 1, work, 1, 7) == \
-        pytest.approx(7 * prof.step_latency(impl, V5E, 1, work, 1),
+    assert prof.schedule_latency(_q(impl, work, batch=1, items=7)) == \
+        pytest.approx(7 * prof.step_latency(_q(impl, work, batch=1)),
                       rel=1e-12)
 
 
 def test_schedule_zero_items_is_free():
     system, prof, impl = _store()
     work = impl.work_fn(700, 90)
-    assert prof.schedule_latency(impl, V5E, 1, work, 8, 0) == 0.0
+    assert prof.schedule_latency(_q(impl, work, batch=8, items=0)) == 0.0
 
 
 @settings(max_examples=60)
@@ -81,8 +86,8 @@ def test_schedule_never_exceeds_ceil_full_step_charge(pf, df, pb, db, wb,
     system, prof, impl = _store()
     w = _work(pf, df, pb, db, wb, steps)
     b = 2 ** log_b
-    sched = prof.schedule_latency(impl, V5E, 1, w, b, items)
-    old = math.ceil(items / b) * prof.step_latency(impl, V5E, 1, w, b)
+    sched = prof.schedule_latency(_q(impl, w, batch=b, items=items))
+    old = math.ceil(items / b) * prof.step_latency(_q(impl, w, batch=b))
     assert sched <= old * (1 + 1e-12)
 
 
@@ -91,8 +96,8 @@ def test_remainder_shaves_strictly_below_knee():
     system, prof, impl = _store()
     work = impl.work_fn(700, 90)
     b, items = 64, 70       # remainder 6, far below the knee
-    sched = prof.schedule_latency(impl, V5E, 1, work, b, items)
-    old = math.ceil(items / b) * prof.step_latency(impl, V5E, 1, work, b)
+    sched = prof.schedule_latency(_q(impl, work, batch=b, items=items))
+    old = math.ceil(items / b) * prof.step_latency(_q(impl, work, batch=b))
     assert sched < old * 0.99
 
 
@@ -144,10 +149,10 @@ def test_pinned_curve_interpolates_power_law_exactly():
     prof.pin(impl.name, "tpu-v5e", 1, curve)
     work = impl.work_fn(700, 90)
     for b in (1, 3, 8, 20, 77, 128):
-        assert prof.step_latency(impl, V5E, 1, work, b) == \
+        assert prof.step_latency(_q(impl, work, batch=b)) == \
             pytest.approx(0.5 * b ** alpha, rel=1e-9)
     # clamped flat (per-item) beyond the measured range
-    assert prof.step_latency(impl, V5E, 1, work, 256) == \
+    assert prof.step_latency(_q(impl, work, batch=256)) == \
         pytest.approx(256 * 0.5 * 128 ** (alpha - 1), rel=1e-9)
 
 

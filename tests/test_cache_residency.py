@@ -2,8 +2,8 @@
 
 Four load-bearing properties:
 
-1. **CostQuery shims** — the positional ``ProfileStore`` entry points are
-   deprecation shims over the query object and price identically.
+1. **CostQuery surface** — the query object is the only ``ProfileStore``
+   entry point; the PR 7 positional shims and ``latency`` are removed.
 2. **Hit pricing** — warm prefill is never dearer than cold, cold pricing
    is *byte-identical* to the pre-cache model (``effective_work`` returns
    the same object at hit 0), and the discount is monotone in the hit
@@ -50,35 +50,28 @@ def _query(impl, work, **kw):
     return CostQuery(impl=impl, spec=V5E, n_devices=1, work=work, **kw)
 
 
-# -- 1. CostQuery unifies the ProfileStore surface ---------------------------
+# -- 1. CostQuery is the only ProfileStore surface ---------------------------
 
-def test_positional_shims_price_identically_and_warn():
-    """Each legacy positional form = its CostQuery form + a deprecation."""
+def test_positional_forms_removed():
+    """The PR 7 deprecation shims are gone: positional calls raise a
+    TypeError that names the replacement, and ``latency`` no longer
+    exists."""
     _, prof, impl = _store()
     work = impl.work_fn(700, 90)
-    q = _query(impl, work, batch=8)
-    with pytest.warns(DeprecationWarning, match="CostQuery"):
-        assert prof.step_latency(impl, V5E, 1, work, 8) == \
-            prof.step_latency(q)
-    qs = _query(impl, work, batch=8, items=50)
-    with pytest.warns(DeprecationWarning, match="CostQuery"):
-        assert prof.schedule_latency(impl, V5E, 1, work, 8, 50) == \
-            prof.schedule_latency(qs)
-    elapsed = prof.schedule_latency(qs) * 0.4
-    qc = _query(impl, work, batch=8, items=50, elapsed_s=elapsed)
-    with pytest.warns(DeprecationWarning, match="CostQuery"):
-        assert prof.completed_items(impl, V5E, 1, work, 8, 50, elapsed) \
-            == prof.completed_items(qc)
-
-
-def test_latency_entry_point_is_deprecated():
-    """``ProfileStore.latency`` always warns — even on the query form."""
-    _, prof, impl = _store()
-    work = impl.work_fn(700, 90)
-    with pytest.warns(DeprecationWarning, match="latency"):
-        legacy = prof.latency(impl, V5E, 1, work)
-    with pytest.warns(DeprecationWarning, match="latency"):
-        assert prof.latency(_query(impl, work)) == legacy
+    with pytest.raises(TypeError):
+        prof.step_latency(impl, V5E, 1, work, 8)
+    with pytest.raises(TypeError):
+        prof.schedule_latency(impl, V5E, 1, work, 8, 50)
+    with pytest.raises(TypeError):
+        prof.completed_items(impl, V5E, 1, work, 8, 50, 1.0)
+    # a non-query argument gets the explanatory error, not an AttributeError
+    with pytest.raises(TypeError, match="CostQuery"):
+        prof.step_latency(impl)
+    with pytest.raises(TypeError, match="CostQuery"):
+        prof.schedule_latency(impl)
+    with pytest.raises(TypeError, match="CostQuery"):
+        prof.completed_items(impl)
+    assert not hasattr(prof, "latency")
 
 
 def test_query_form_is_warning_free():

@@ -14,6 +14,7 @@ from hypothesis import strategies as st
 
 from repro.core import CATALOG, MIN_LATENCY, Murakkab, Submission
 from repro.core.dag import DAG, TaskNode
+from repro.core.profiles import CostQuery
 from repro.core.scheduler import ExecutionPlan
 from repro.core.simulator import Simulator
 
@@ -71,28 +72,28 @@ def test_completed_items_inverts_schedule():
     system = _system()
     impl = system.library.impls["nvlm-72b"]
     work = impl.work_fn(900, 120)
-    step4 = system.profiles.step_latency(impl, V5E, 4, work, 4)
+    def _ci(elapsed, items=10):
+        return system.profiles.completed_items(CostQuery(
+            impl=impl, spec=V5E, n_devices=4, work=work, batch=4,
+            items=items, elapsed_s=elapsed))
+    step4 = system.profiles.step_latency(CostQuery(
+        impl=impl, spec=V5E, n_devices=4, work=work, batch=4))
     # 10 items at batch 4: 2 full steps + a 2-item remainder step
-    done, wall = system.profiles.completed_items(impl, V5E, 4, work, 4, 10,
-                                                 0.0)
+    done, wall = _ci(0.0)
     assert (done, wall) == (0, 0.0)
-    done, wall = system.profiles.completed_items(impl, V5E, 4, work, 4, 10,
-                                                 0.5 * step4)
+    done, wall = _ci(0.5 * step4)
     assert (done, wall) == (0, 0.0)      # in-flight step is discarded
-    done, wall = system.profiles.completed_items(impl, V5E, 4, work, 4, 10,
-                                                 1.5 * step4)
+    done, wall = _ci(1.5 * step4)
     assert done == 4 and wall == pytest.approx(step4)
     # landing exactly on a boundary credits the step that just finished
-    done, wall = system.profiles.completed_items(impl, V5E, 4, work, 4, 10,
-                                                 2.0 * step4)
+    done, wall = _ci(2.0 * step4)
     assert done == 8 and wall == pytest.approx(2 * step4)
     # the remainder step only completes at the schedule's very end
-    rem = system.profiles.step_latency(impl, V5E, 4, work, 2)
-    done, _ = system.profiles.completed_items(impl, V5E, 4, work, 4, 10,
-                                              2 * step4 + 0.9 * rem)
+    rem = system.profiles.step_latency(CostQuery(
+        impl=impl, spec=V5E, n_devices=4, work=work, batch=2))
+    done, _ = _ci(2 * step4 + 0.9 * rem)
     assert done == 8
-    done, wall = system.profiles.completed_items(impl, V5E, 4, work, 4, 10,
-                                                 2 * step4 + rem)
+    done, wall = _ci(2 * step4 + rem)
     assert done == 10 and wall == pytest.approx(2 * step4 + rem)
 
 
@@ -101,9 +102,11 @@ def test_completed_items_caps_at_full_steps():
     system = _system()
     impl = system.library.impls["nvlm-72b"]
     work = impl.work_fn(900, 120)
-    done, wall = system.profiles.completed_items(impl, V5E, 4, work, 4, 8,
-                                                 1e9)
-    sched = system.profiles.schedule_latency(impl, V5E, 4, work, 4, 8)
+    done, wall = system.profiles.completed_items(CostQuery(
+        impl=impl, spec=V5E, n_devices=4, work=work, batch=4, items=8,
+        elapsed_s=1e9))
+    sched = system.profiles.schedule_latency(CostQuery(
+        impl=impl, spec=V5E, n_devices=4, work=work, batch=4, items=8))
     assert done == 8 and wall == pytest.approx(sched)
 
 
@@ -126,7 +129,8 @@ def test_residual_estimate_matches_simulator_duration():
                                         new_instances=0, items_done=d)
         assert dur == pytest.approx(est.est_latency_s)
         assert compute == pytest.approx(system.profiles.schedule_latency(
-            impl, V5E, 4, impl.work_fn(900, 120), 4, 11 - d))
+            CostQuery(impl=impl, spec=V5E, n_devices=4,
+                      work=impl.work_fn(900, 120), batch=4, items=11 - d)))
 
 
 # -- end-to-end resume --------------------------------------------------------
@@ -249,12 +253,14 @@ def test_preemption_accounting_properties(arrival, batch, resume):
         # schedule_latency(total items), never more, never less
         impl = system.library.impls[plan_h[node.id].impl]
         work = impl.work_fn(node.tokens_in, node.tokens_out)
-        expected_h = system.profiles.schedule_latency(
-            impl, V5E, 4, work, batch, node.work_items) * 4
+        expected_h = system.profiles.schedule_latency(CostQuery(
+            impl=impl, spec=V5E, n_devices=4, work=work, batch=batch,
+            items=node.work_items)) * 4
         impl_p = system.library.impls[plan_p[node_p.id].impl]
         work_p = impl_p.work_fn(node_p.tokens_in, node_p.tokens_out)
-        expected_p = system.profiles.schedule_latency(
-            impl_p, V5E, 4, work_p, 1, node_p.work_items) * 4
+        expected_p = system.profiles.schedule_latency(CostQuery(
+            impl=impl_p, spec=V5E, n_devices=4, work=work_p, batch=1,
+            items=node_p.work_items)) * 4
         v5e_busy = rep.pool_busy_device_s.get("v5e", 0.0)
         assert math.isclose(v5e_busy, expected_h + expected_p,
                             rel_tol=1e-9, abs_tol=1e-9), \

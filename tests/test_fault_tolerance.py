@@ -93,6 +93,31 @@ class TestStragglers:
         mon.record("solo", 99.0)
         assert mon.stragglers() == []
 
+    def test_solo_worker_action_is_redispatch(self):
+        """With no peers there is no baseline to be slow against: action()
+        must not compare the worker to a zero median and exclude it."""
+        mon = StragglerMonitor()
+        for _ in range(10):
+            mon.record("solo", 99.0)
+        assert mon.action("solo") == "redispatch"
+
+    def test_action_uses_peer_median_not_own(self):
+        """The straggler's own durations must not drag the baseline up."""
+        mon = StragglerMonitor(threshold=1.5, window=4)
+        for _ in range(4):
+            for w, d in [("a", 1.0), ("b", 1.0), ("slow", 10.0)]:
+                mon.record(w, d)
+        assert mon.action("slow") == "exclude"
+        assert mon.action("a") == "redispatch"
+
+
+def test_restart_policy_default_is_per_call():
+    """``policy`` defaults to None (fresh RestartPolicy per call), not a
+    shared mutable default instance."""
+    import inspect
+    sig = inspect.signature(run_with_restarts)
+    assert sig.parameters["policy"].default is None
+
 
 class TestRemesh:
     def test_prefers_shrinking_data_axes(self):

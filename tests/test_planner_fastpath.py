@@ -56,10 +56,11 @@ def test_pin_invalidates_estimate_cache():
     impl = system.library.impls["gemma2-9b"]
     work = impl.work_fn(900, 120)
     from repro.core import CATALOG
-    spec = CATALOG["tpu-v5e"]
-    before = system.profiles.step_latency(impl, spec, 1, work)
+    from repro.core.profiles import CostQuery
+    q = CostQuery(impl=impl, spec=CATALOG["tpu-v5e"], n_devices=1, work=work)
+    before = system.profiles.step_latency(q)
     system.profiles.pin("gemma2-9b", "tpu-v5e", 1, before * 10)
-    assert system.profiles.step_latency(impl, spec, 1, work) == \
+    assert system.profiles.step_latency(q) == \
         pytest.approx(before * 10)
 
 
