@@ -13,8 +13,9 @@ regresses when it moves in its *bad* direction by more than ``tolerance``
   ``attainment``, ``goodput`` or ``completed`` are higher-is-better
   (serving: SLO attainment, goodput, workflows drained at fixed offered
   load);
-- names containing ``resumed``, ``scale_actions``, ``faults_injected``
-  or ``hedges_launched`` are *neutral*: reported, never gated — more
+- names containing ``resumed``, ``scale_actions``, ``faults_injected``,
+  ``hedges_launched`` or ``weight_churn`` are *neutral*: reported, never
+  gated — more
   salvaged work-items usually means more preemptions happened,
   autoscaler activity tracks the policy's tick/cooldown interplay, and
   fault/hedge counts track the seeded fault stream, so neither direction
@@ -45,11 +46,12 @@ HIGHER_IS_BETTER = ("quality", "saving", "warm_hit", "hit_rate",
 # reported but never gated: value tracks event counts (e.g. work-items
 # salvaged by resume scales with how many preemptions occurred, scale
 # actions with the autoscaler's tick/cooldown interplay, injected faults
-# and launched hedges with the seeded fault stream), so no direction is
-# inherently bad (``wasted_dev_s``/attainment are the gated signals for
-# the fault path)
+# and launched hedges with the seeded fault stream, router weight churn
+# with the telemetry log's composition), so no direction is inherently
+# bad (``wasted_dev_s``/attainment are the gated signals for the fault
+# path, energy/$/attainment for the routing loop)
 NEUTRAL = ("resumed", "scale_actions", "faults_injected",
-           "hedges_launched")
+           "hedges_launched", "weight_churn")
 
 
 def better_higher(name: str) -> bool:

@@ -1,0 +1,241 @@
+"""Learned-routing benchmark: telemetry loop vs static routing (§11).
+
+Exercises the route -> log -> evaluate -> update loop on the agentic-RAG
+workflow over a mixed query set (half *lookup-shaped* — document ids,
+fiscal years, tickers, where lexical BM25 retrieval measures above its
+declared quality — half *semantic* prose, where BM25 measures below it):
+
+- **static**  — no router; the quality-safe posture an operator runs
+  without per-query routing: retrieve floor 0.9 forces the dense route on
+  *every* query, because a floor admitting BM25 (declared 0.82) would let
+  it serve semantic queries it measurably butchers.
+- **explore** — router at epsilon=1.0 under the admitting floor: seeded
+  uniform arm picks fill a telemetry store graded by the benchmark's
+  ground-truth quality model (the stand-in for an LLM judge).
+- **learned** — the ``OfflineEvaluator`` replays the log into per-bucket
+  weights; the trained router (epsilon=0) serves the same queries.
+
+Acceptance gates (exit 1 on failure), the ISSUE's headline claims:
+
+1. the learned router matches-or-beats static on **energy AND $ at
+   equal-or-better quality attainment** (it learns to send lookup-shaped
+   queries to cheap lexical retrieval and semantic ones to dense);
+2. quality-aware model selection: calibrating measured quality into the
+   ``ProfileStore`` (gemma2-9b-synth measures 0.93 vs its declared 0.90)
+   finds a plan **cheaper than the fixed-zoo plan at the same
+   quality floor** (0.92 — which on declared qualities only the 104B
+   model clears).
+
+CLI::
+
+    PYTHONPATH=src python benchmarks/routing_bench.py              # full
+    PYTHONPATH=src python benchmarks/routing_bench.py --fast \\
+        --json BENCH_routing.json                                  # CI mode
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+import repro.configs.workflow_docingest  # noqa: F401,E402
+import repro.configs.workflow_rag  # noqa: F401,E402
+import repro.configs.workflow_video  # noqa: F401,E402
+from repro.configs.workflow_rag import ROUTED_QUERIES, make_rag_job  # noqa: E402
+from repro.core import (Murakkab, OfflineEvaluator, Router,  # noqa: E402
+                        TelemetryStore)
+
+SEED = 11
+#: attainment target the loop optimizes for (evaluator quality_target)
+TARGET = 0.85
+#: cost pressure in the bandit reward: small enough that a 0.17 quality
+#: gap (BM25 on semantic queries) always outweighs the dense route's
+#: higher cost, large enough to prefer BM25 where quality ties
+COST_WEIGHT = 0.05
+#: the model-selection gate's synthesize floor: on declared qualities only
+#: command-r-plus-104b (0.97) clears it; gemma2-9b (declared 0.90,
+#: measured 0.93) clears it only after telemetry calibration
+SYNTH_FLOOR = 0.92
+
+
+def quality_model(feats, impl: str, declared: float) -> float:
+    """Ground-truth grader stand-in (an LLM judge / labeled evals).
+
+    Encodes the two effects the loop must discover: lexical retrieval
+    outperforms its declared quality on lookup-shaped queries and
+    underperforms it badly on semantic ones; gemma2-9b-synth measures
+    above its declared score. Everything else attains as declared.
+    """
+    if impl == "bm25-keyword":
+        kind = feats.bucket().split(":")[0]
+        return 0.95 if kind == "lookup" else 0.70
+    if impl == "gemma2-9b-synth":
+        return 0.93
+    return declared
+
+
+def _phase(router_for, telemetry: TelemetryStore, floor: dict | None,
+           rounds: int = 1) -> tuple[float, float]:
+    """Run every routed query ``rounds`` times on one warm-carrying
+    system; returns summed (energy_wh, usd). ``router_for(round, qi)``
+    supplies the router per job (None = static)."""
+    system = Murakkab.paper_cluster(telemetry=telemetry)
+    energy = usd = 0.0
+    for rd in range(rounds):
+        for qi, q in enumerate(ROUTED_QUERIES):
+            system.router = router_for(rd, qi)
+            res = system.execute(make_rag_job(queries=(q,),
+                                              quality_floor=floor))
+            energy += res.energy_wh
+            usd += res.usd
+    return energy, usd
+
+
+def _attainment(store: TelemetryStore) -> float:
+    return store.attainment("retrieve", TARGET)
+
+
+def _model_selection(explore_log: TelemetryStore, verbose: bool) -> dict:
+    """Gate 2: cheaper-than-fixed-zoo plan at the same quality floor."""
+    job = make_rag_job(quality_floor={"synthesize": SYNTH_FLOOR})
+
+    fixed = Murakkab.tpu_cluster()
+    dag_f, plan_f = fixed.plan(job)
+    synth = next(t for t in dag_f.topo_order if "synthesize" in t)
+
+    calib = Murakkab.tpu_cluster()
+    pins = OfflineEvaluator(quality_target=TARGET).calibrate_profiles(
+        explore_log, calib.profiles, min_count=3)
+    dag_c, plan_c = calib.plan(job)
+
+    fixed_usd = plan_f.report(dag_f)["est_usd"]
+    calib_usd = plan_c.report(dag_c)["est_usd"]
+    out = {
+        "fixed_impl": plan_f[synth].impl,
+        "calibrated_impl": plan_c[synth].impl,
+        "fixed_usd": fixed_usd,
+        "calibrated_usd": calib_usd,
+        "pins": {k: round(v, 4) for k, v in sorted(pins.items())},
+        "floor_met": calib.profiles.quality(plan_c[synth].impl)
+        >= SYNTH_FLOOR,
+        "cheaper": calib_usd < fixed_usd,
+    }
+    if verbose:
+        print(f"\nmodel selection @ synthesize floor {SYNTH_FLOOR}:")
+        print(f"  fixed zoo:  {out['fixed_impl']:>28s}  "
+              f"${fixed_usd:.4f}")
+        print(f"  calibrated: {out['calibrated_impl']:>28s}  "
+              f"${calib_usd:.4f}  "
+              f"(pinned q={pins.get(out['calibrated_impl'], 0):.3f})")
+    return out
+
+
+def run(rounds: int, verbose: bool = True) \
+        -> tuple[dict[str, float], dict, bool]:
+    """(metrics, info, gate_ok) for the routing loop."""
+    # static quality-safe baseline: dense retrieval on every query
+    static_log = TelemetryStore(quality_model=quality_model)
+    s_energy, s_usd = _phase(lambda rd, qi: None, static_log,
+                             {"retrieve": 0.9})
+
+    # explore: seeded uniform arm picks fill the telemetry log. The
+    # exploration coin is keyed by task identity, and every per-query RAG
+    # job names its retrieve task identically — varying the router seed
+    # per (round, query) is what spreads the picks across arms.
+    # synthesize floor 0.9 makes gemma2-9b (declared 0.90) the arm the
+    # explore phase actually runs, so calibration has samples to measure
+    # its 0.93 attained quality from
+    explore_log = TelemetryStore(quality_model=quality_model)
+    _phase(lambda rd, qi: Router(interfaces=("retrieve",), epsilon=1.0,
+                                 seed=SEED + 97 * rd + qi),
+           explore_log, {"synthesize": 0.9}, rounds=rounds)
+
+    # offline update (pure function of the log), then exploit
+    base = Router(interfaces=("retrieve",), epsilon=0.0, seed=SEED)
+    evaluator = OfflineEvaluator(quality_target=TARGET,
+                                 cost_weight=COST_WEIGHT, cost_key="usd")
+    trained = evaluator.update(base, explore_log)
+    learned_log = TelemetryStore(quality_model=quality_model)
+    l_energy, l_usd = _phase(lambda rd, qi: trained, learned_log, None)
+
+    s_att, l_att = _attainment(static_log), _attainment(learned_log)
+    routed = [r for r in learned_log.records if r.routed]
+    arms = sorted({(r.features.bucket(), r.impl) for r in routed})
+
+    sel = _model_selection(explore_log, verbose)
+
+    metrics = {
+        "static/energy_wh": round(s_energy, 3),
+        "static/usd": round(s_usd, 5),
+        "static/attainment": round(s_att, 4),
+        "learned/energy_wh": round(l_energy, 3),
+        "learned/usd": round(l_usd, 5),
+        "learned/attainment": round(l_att, 4),
+        "learned/weight_churn": trained.weight_churn(base),
+        "modelsel/fixed_usd": round(sel["fixed_usd"], 5),
+        "modelsel/calibrated_usd": round(sel["calibrated_usd"], 5),
+        "modelsel/usd_saving_frac": round(
+            1.0 - sel["calibrated_usd"] / max(sel["fixed_usd"], 1e-12), 4),
+    }
+    info = {
+        "rounds": rounds,
+        "queries": len(ROUTED_QUERIES),
+        "explore_records": len(explore_log),
+        "bucket_arms": [f"{b} -> {impl}" for b, impl in arms],
+        "model_selection": {k: v for k, v in sel.items()
+                            if k not in ("cheaper", "floor_met")},
+    }
+
+    gate_route = (l_energy <= s_energy and l_usd <= s_usd
+                  and l_att >= s_att)
+    gate_model = sel["cheaper"] and sel["floor_met"]
+    ok = gate_route and gate_model
+
+    if verbose:
+        hdr = (f"{'mode':>8s} {'energy_wh':>10s} {'usd':>9s} "
+               f"{'attainment':>11s}")
+        print(f"\n{hdr}")
+        print("-" * len(hdr))
+        print(f"{'static':>8s} {s_energy:>10.3f} {s_usd:>9.5f} "
+              f"{s_att:>11.3f}")
+        print(f"{'learned':>8s} {l_energy:>10.3f} {l_usd:>9.5f} "
+              f"{l_att:>11.3f}")
+        print(f"\nlearned routes: {', '.join(info['bucket_arms'])}")
+        print(f"gate 1 (routing): energy {l_energy:.3f} <= {s_energy:.3f},"
+              f" usd {l_usd:.5f} <= {s_usd:.5f}, attainment {l_att:.3f} >="
+              f" {s_att:.3f} => {'PASS' if gate_route else 'FAIL'}")
+        print(f"gate 2 (model selection): "
+              f"${sel['calibrated_usd']:.4f} < ${sel['fixed_usd']:.4f} "
+              f"at floor {SYNTH_FLOOR} "
+              f"=> {'PASS' if gate_model else 'FAIL'}")
+    return metrics, info, ok
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer explore rounds (CI bench-smoke mode)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write metrics JSON (e.g. BENCH_routing.json)")
+    args = ap.parse_args()
+
+    rounds = 2 if args.fast else 4
+    metrics, info, ok = run(rounds)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "routing",
+                       "mode": "fast" if args.fast else "full",
+                       "info": info, "metrics": metrics},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -27,6 +27,30 @@ RAG_QUERIES = (
                top_k=5, candidates=20),
 )
 
+# the learned-routing evaluation mix (DESIGN.md §11; benchmarks/
+# routing_bench.py): half *lookup-shaped* queries — document ids, fiscal
+# years, tickers, form numbers, where exact lexical (BM25) match wins —
+# and half *semantic* prose needing embedding recall. The featurizer
+# (core.telemetry.featurize) separates the two by digit/ID density; the
+# router learns to send each bucket to its cheapest adequate arm.
+ROUTED_QUERIES = (
+    # lookup-shaped: id/digit-dense, short
+    QueryInput("10-K 2024 item 1A", top_k=5, candidates=20),
+    QueryInput("FY2024 Q3 8-K filing AMZN", top_k=5, candidates=20),
+    QueryInput("CIK 0000320193 10-Q 2025", top_k=5, candidates=20),
+    QueryInput("NVDA 10-K exhibit 21.1 subsidiaries", top_k=5,
+               candidates=20),
+    # semantic: clean prose, no identifiers
+    QueryInput("How does management describe competitive pressure on "
+               "margins?", top_k=5, candidates=20),
+    QueryInput("Summarize the segment revenue trends year over year",
+               top_k=5, candidates=20),
+    QueryInput("What strategic rationale is given for the recent "
+               "acquisitions?", top_k=5, candidates=20),
+    QueryInput("Describe the liquidity outlook under the disclosed risk "
+               "factors", top_k=5, candidates=20),
+)
+
 
 # representative decode-bound stage for the batch-roofline knee sweep
 # (benchmarks/planner_bench.py): the synthesize interface's token footprint.
@@ -62,17 +86,27 @@ RAG_SCENARIO = SCENARIOS.register(Scenario(
     }))
 
 
-def make_rag_job(constraints=None, queries=RAG_QUERIES):
-    """Declarative agentic-RAG job over the default query mix."""
+def make_rag_job(constraints=None, queries=RAG_QUERIES, *,
+                 quality_floor=None):
+    """Declarative agentic-RAG job over the default query mix.
+
+    ``quality_floor`` overrides individual per-interface floors (merged
+    over the defaults below) — the routing bench raises the retrieve
+    floor to force the dense route (the static quality-safe baseline) and
+    the synthesize floor to exercise quality-aware model selection.
+    """
     from ..core.workflow import MIN_COST, Job
+    # floors admit the keyword route (0.82) but gate junk impls; raise
+    # the retrieve floor to force the dense/hybrid route.
+    floor = {"retrieve": 0.8, "rerank": 0.85, "synthesize": 0.85,
+             "embed": 0.85}
+    if quality_floor:
+        floor.update(quality_floor)
     return Job(
         description="Answer analyst questions over the filings corpus",
         inputs=queries,
         constraints=MIN_COST if constraints is None else constraints,
-        # floors admit the keyword route (0.82) but gate junk impls; raise
-        # the retrieve floor to force the dense/hybrid route.
-        quality_floor={"retrieve": 0.8, "rerank": 0.85, "synthesize": 0.85,
-                       "embed": 0.85})
+        quality_floor=floor)
 
 
 # -- open-loop serving preset (core/arrivals.py) ------------------------------

@@ -30,7 +30,10 @@ from .energy import (CATALOG, DeviceSpec, EnergyLedger, batch_knee,
 from .faults import FaultProfile, RetryPolicy
 from .orchestrator import LLMPlanner, RulePlanner, dag_creation_overhead
 from .profiles import Profile, ProfileStore
+from .router import OfflineEvaluator, Router
 from .scheduler import ExecutionPlan, Scheduler, TaskConfig
+from .telemetry import (QueryFeatures, TaskRecord, TelemetryStore, featurize,
+                        featurize_node)
 from .simulator import (OpenLoopReport, SimReport, Simulator, Submission,
                         TraceEntry, render_trace)
 from .spec import (ARTIFACTS, SCENARIOS, Artifact, ArtifactRegistry,
@@ -51,6 +54,9 @@ __all__ = [
     "batch_roofline_latency", "roofline_latency",
     "LLMPlanner", "RulePlanner", "dag_creation_overhead",
     "Profile", "ProfileStore", "ExecutionPlan", "Scheduler", "TaskConfig",
+    "OfflineEvaluator", "Router",
+    "QueryFeatures", "TaskRecord", "TelemetryStore", "featurize",
+    "featurize_node",
     "OpenLoopReport", "SimReport", "Simulator", "Submission", "TraceEntry",
     "render_trace",
     "DEFAULT_TENANT_SHARES", "SERVING_PRESETS", "ArrivalEvent",

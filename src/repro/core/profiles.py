@@ -201,6 +201,10 @@ class ProfileStore:
         self.library = library
         # (impl, device, n_devices) -> (batch curve, power_frac)
         self._pinned: dict[tuple[str, str, int], tuple[BatchCurve, float]] = {}
+        # impl -> measured quality override (the telemetry feedback loop's
+        # calibration target, DESIGN.md §11); absent impls answer with
+        # their declared ladder score
+        self._quality: dict[str, float] = {}
         self._cache: OrderedDict[tuple, float] = OrderedDict()
         self.cache_enabled = True
         self.cache_hits = 0
@@ -231,6 +235,34 @@ class ProfileStore:
         self._pinned[(impl, device, n_devices)] = (_as_curve(latency_s), pf)
         self._cache.clear()     # calibration invalidates memoized estimates
         self.version += 1
+
+    def pin_quality(self, impl: str, quality: float):
+        """Pin a *measured* quality for an implementation (DESIGN.md §11).
+
+        The quality column of the profile library: the scheduler's
+        ``quality_floor`` gate and quality estimates read
+        :meth:`quality`, so a telemetry-calibrated value (e.g. from
+        ``OfflineEvaluator.calibrate_profiles``) changes which impls are
+        selectable under a floor. Bumps ``version`` — the admission plan
+        cache is keyed on it, so stale plans are invalidated — without
+        touching the latency memo (quality prices nothing).
+        """
+        if impl not in self.library.impls:
+            raise KeyError(f"unknown implementation {impl!r}")
+        if not 0.0 < quality <= 1.0:
+            raise ValueError(f"quality must be in (0, 1], got {quality}")
+        self._quality[impl] = float(quality)
+        self.version += 1
+
+    def quality(self, impl_name: str) -> float:
+        """Implementation quality: the measured (pinned) value when the
+        telemetry loop calibrated one, else the declared ladder score.
+        With no pins this is exactly ``impl.quality`` — the scheduler's
+        pre-quality-column behaviour, byte-identical."""
+        q = self._quality.get(impl_name)
+        if q is not None:
+            return q
+        return self.library.impls[impl_name].quality
 
     # -- queries --------------------------------------------------------------
     def _pinned_curve(self, impl: AgentImpl, spec: DeviceSpec,
@@ -444,7 +476,7 @@ class ProfileStore:
         usd = lat * n_devices / 3600.0 * spec.usd_per_hour
         return Profile(impl=impl_name, device=device, n_devices=n_devices,
                        latency_s=lat, energy_j=energy, usd=usd,
-                       quality=impl.quality,
+                       quality=self.quality(impl_name),
                        pinned=(impl_name, device, n_devices) in self._pinned)
 
     # -- the "profile everything on add" sweep --------------------------------

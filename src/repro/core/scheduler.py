@@ -111,6 +111,15 @@ class Scheduler:
         # restores the legacy sequential order (count at batch=1, then one
         # batch candidate) — kept for benchmarks/planner_bench.py
         self.joint_batch = True
+        # learned routing (DESIGN.md §11): a core.router.Router consulted
+        # at level 1 for its covered interfaces; None keeps the static
+        # quality-gate + constraint-preference choice byte-identical
+        self.router = None
+        # level-3 expansion of per-(impl, pool) group bests behind a
+        # fan-out-aware pruning bound (DESIGN.md §11.4); False keeps the
+        # two-seed expansion (joint + batch=1 winners) — the default, so
+        # chosen plans stay byte-identical to the two-seed search
+        self.group_expand = False
         self._works: dict[tuple[str, int, int], object] = {}
 
     # -- estimation ------------------------------------------------------------
@@ -163,7 +172,10 @@ class Scheduler:
         usd = dev_s / 3600.0 * spec.usd_per_hour
         power = n_devices * n_instances * paths * pf * \
             (spec.active_w - spec.idle_w)
-        q = 1.0 - (1.0 - impl.quality) ** paths
+        # quality reads the profile store's quality column (measured pins
+        # override the declared ladder, DESIGN.md §11); with no pins this
+        # is exactly impl.quality
+        q = 1.0 - (1.0 - self.profiles.quality(impl.name)) ** paths
         return TaskConfig(impl=impl.name, pool=pool, n_devices=n_devices,
                           n_instances=n_instances, batch=batch, paths=paths,
                           est_latency_s=lat, est_energy_j=energy,
@@ -204,7 +216,7 @@ class Scheduler:
     def _dominated(self, node: TaskNode, impl: AgentImpl, pool: str,
                    counts: list[int], batches: list[int], warm: bool,
                    incumbent: TaskConfig, order: "ConstraintSpec",
-                   cache_frac: float = 0.0) -> bool:
+                   cache_frac: float = 0.0, hi_k: int = 1) -> bool:
         """Dominated-config pruning: can *any* (device count x batch) in
         this (impl, pool) group beat the incumbent under ``order``?
 
@@ -226,6 +238,17 @@ class Scheduler:
         if even the bound cannot beat the incumbent's key, no real
         candidate can — the whole candidate loop is skipped without
         changing the chosen plan.
+
+        ``hi_k > 1`` makes the bound *fan-out-aware* (the group-best
+        level-3 expansion, DESIGN.md §11.4): expanded candidates split
+        items across up to ``hi_k`` instances, so the compute part of the
+        latency bound divides by ``hi_k`` (load time does not split — the
+        greedy coupling the two-seed expansion was built around), while
+        the $/energy bound already holds under fan-out (``k * ceil(items
+        / k) >= items`` device-seconds, and extra execution paths only
+        add). Quality-seeking orders additionally get the max-paths
+        quality upper bound ``1 - (1-q)**4``, since expansion may boost
+        quality via parallel paths.
         """
         spec = CATALOG[self.cluster.pools[pool].device]
         work = self._work_of(impl, node)
@@ -250,15 +273,20 @@ class Scheduler:
             lat_lb = items * min(per_item(counts[-1], b) for b in batches)
             dev_s_lb = items * counts[0] * min(per_item(counts[0], b)
                                                for b in batches)
+        if hi_k > 1:
+            lat_lb /= hi_k
         if not warm:
             lat_lb += impl.load_time_s
         pf_lb = min(self.profiles.power_frac(impl, spec, n) for n in counts)
+        q_lb = self.profiles.quality(impl.name)
+        if hi_k > 1 and order.seeks_quality:
+            q_lb = 1.0 - (1.0 - q_lb) ** 4     # max execution paths
         lb = TaskConfig(
             impl=impl.name, pool=pool, n_devices=counts[0],
             est_latency_s=lat_lb,
             est_energy_j=dev_s_lb * pf_lb * (spec.active_w - spec.idle_w),
             est_usd=dev_s_lb / 3600.0 * spec.usd_per_hour,
-            quality=impl.quality, warm=warm)
+            quality=q_lb, warm=warm)
         return order.key(lb) >= order.key(incumbent)
 
     # -- the greedy hierarchical search -------------------------------------------
@@ -289,7 +317,11 @@ class Scheduler:
         batched level-2 comparison can still win after fan-out. Expanding
         both seeds makes the joint search's candidate set a strict
         superset of the sequential one, so the chosen config is never
-        worse under the constraint order.
+        worse under the constraint order. ``group_expand`` widens level 3
+        further: *every* per-(impl, pool) group best becomes an expansion
+        seed, with the fan-out-aware pruning bound (``_dominated`` with
+        ``hi_k``) skipping groups that provably cannot win — plan-equal to
+        exhaustively expanding all groups (DESIGN.md §11.4).
 
         ``session`` (keyword-only) is the serving session the task belongs
         to: (impl, pool) groups holding a resident KV prefix for it are
@@ -306,10 +338,23 @@ class Scheduler:
                  if isinstance(quality_floor, dict) else quality_floor)
 
         # Level 1 — implementation: quality gate, then constraint preference.
-        ok = [i for i in impls if i.quality >= floor] or \
-            [max(impls, key=lambda i: i.quality)]
+        # The gate reads the profile store's quality column (measured pins
+        # from the telemetry loop override the declared ladder, §11); with
+        # no pins q_of(i) == i.quality exactly.
+        q_of = self.profiles.quality
+        ok = [i for i in impls if q_of(i.name) >= floor] or \
+            [max(impls, key=lambda i: q_of(i.name))]
+        # learned routing (DESIGN.md §11): for covered interfaces the
+        # router picks the arm among the floor-passing candidates — the
+        # floor stays a hard gate, the router only chooses within it. A
+        # None answer (untrained bucket, no exploration) falls through to
+        # the static constraint-preference choice below.
+        if self.router is not None and self.router.covers(node.agent):
+            pick = self.router.route(node, [i.name for i in ok])
+            if pick is not None:
+                ok = [i for i in ok if i.name == pick]
         if order.seeks_quality:
-            cand_impls = sorted(ok, key=lambda i: -i.quality)[:2]
+            cand_impls = sorted(ok, key=lambda i: -q_of(i.name))[:2]
         else:
             cand_impls = ok  # defer to the objective over hw configs
 
@@ -332,8 +377,15 @@ class Scheduler:
                     hit_frac[key] = frac
 
         # Level 2 — hardware + device count (x batch, when joint) per
-        # candidate implementation.
-        def search(cands, joint: bool) -> TaskConfig | None:
+        # candidate implementation. With ``group_expand`` the joint search
+        # also collects the best config *per (impl, pool) group* — every
+        # group becomes a level-3 expansion seed (DESIGN.md §11.4), so
+        # pruning must use the fan-out-aware bound: a group may only be
+        # skipped when no member can win even after fan-out/paths.
+        groups: dict[tuple[str, str], tuple] = {}
+
+        def search(cands, joint: bool,
+                   collect: bool = False) -> TaskConfig | None:
             """Best (impl, pool, count[, batch]) config under ``order``."""
             best: TaskConfig | None = None
             for impl in cands:
@@ -357,11 +409,19 @@ class Scheduler:
                     else:
                         batches = [1]
                     cf = hit_frac.get((impl.name, pool_name), 0.0)
+                    hi_k = 1
+                    if collect and node.chunkable:
+                        # max fan-out any member could reach: smallest
+                        # device count in the group leaves the most free
+                        # instance slots
+                        hi_k = min(max(st["free"] // counts[0], 1),
+                                   node.work_items)
                     if best is not None and self.prune and self._dominated(
                             node, impl, pool_name, counts, batches, warm,
-                            best, order, cf):
+                            best, order, cf, hi_k=hi_k):
                         self.pruned += len(counts) * len(batches)
                         continue
+                    gbest: TaskConfig | None = None
                     for n in counts:
                         for b in batches:
                             cfg = self.estimate(node, impl, pool_name, n,
@@ -370,6 +430,13 @@ class Scheduler:
                             if best is None or self._key(cfg, order) < \
                                     self._key(best, order):
                                 best = cfg
+                            if collect and (gbest is None or
+                                            self._key(cfg, order) <
+                                            self._key(gbest, order)):
+                                gbest = cfg
+                    if collect and gbest is not None:
+                        groups[(impl.name, pool_name)] = \
+                            (gbest, counts, batches, warm, cf)
             return best
 
         # Level 3 — remaining parallelism levers, given free resources.
@@ -432,23 +499,51 @@ class Scheduler:
                         best = cand
             return best
 
-        best = search(cand_impls, self.joint_batch)
+        collect = self.group_expand and self.joint_batch
+        best = search(cand_impls, self.joint_batch, collect=collect)
         if best is None:   # quality-gated impls don't fit this cluster
-            cand_impls = sorted(impls, key=lambda i: -i.quality)
-            best = search(cand_impls, self.joint_batch)
+            groups.clear()
+            cand_impls = sorted(impls, key=lambda i: -q_of(i.name))
+            best = search(cand_impls, self.joint_batch, collect=collect)
         if best is None:
             raise ValueError(
                 f"no (pool x devices) fits agent {node.agent!r}; "
                 f"pools: {list(stats)}")
 
         final = expand(best, legacy_batch=not self.joint_batch)
+        expanded = {(best.impl, best.pool)}
         if self.joint_batch:
             # second seed: the sequential hierarchy's batch=1 level-2
             # winner, expanded through the legacy lever order — keeps the
             # joint candidate set a superset of the sequential one
             seed = search(cand_impls, joint=False)
             if seed is not None and seed != best:
+                expanded.add((seed.impl, seed.pool))
                 alt = expand(seed, legacy_batch=True)
+                if self._key(alt, order) < self._key(final, order):
+                    final = alt
+        if collect:
+            # Level-3 expansion of every remaining (impl, pool) group best
+            # (DESIGN.md §11.4). A group whose fan-out-aware lower bound
+            # cannot beat the incumbent is skipped — sound because the
+            # bound covers everything ``expand`` can build from the seed
+            # (fan-out up to the free-slot cap, any batch, paths <= 4) and
+            # ``final`` only ever improves under ``order``.
+            for gkey in sorted(groups):
+                if gkey in expanded:
+                    continue
+                gcfg, counts, batches, warm, cf = groups[gkey]
+                impl = self.library.impls[gcfg.impl]
+                hi_k = 1
+                if node.chunkable:
+                    hi_k = min(max(stats[gcfg.pool]["free"]
+                                   // gcfg.n_devices, 1), node.work_items)
+                if self.prune and self._dominated(
+                        node, impl, gcfg.pool, counts, batches, warm,
+                        final, order, cf, hi_k=hi_k):
+                    self.pruned += 1
+                    continue
+                alt = expand(gcfg, legacy_batch=False)
                 if self._key(alt, order) < self._key(final, order):
                     final = alt
         return final

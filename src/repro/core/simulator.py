@@ -878,6 +878,22 @@ class _Engine:
             self.trace.append(TraceEntry(wid, tid, rec.cfg.impl,
                                          rec.cfg.pool, rec.ndev,
                                          rec.start, t, note=rec.note))
+        tele = self.sim.telemetry
+        if tele is not None:
+            # one record per completed attempt, priced exactly as the
+            # ledger charged it (marginal energy over idle; $ over the full
+            # device-seconds). Pure observation — nothing above read it.
+            node = st.dag.nodes[tid]
+            spec = self.specs[cfg.pool]
+            energy = (rec.dev_s * rec.pf * (spec.active_w - spec.idle_w)
+                      if spec.metered else 0.0)
+            tele.observe(
+                t=t, workflow=wid, task=tid, node=node,
+                interface=node.agent, impl=cfg.impl, pool=cfg.pool,
+                latency_s=t - rec.start, energy_j=energy,
+                usd=rec.dev_s / 3600.0 * spec.usd_per_hour,
+                declared_quality=cfg.quality,
+                routed=node.agent in self.sim.routed_interfaces)
         # index newly-ready successors (their last dependency just
         # finished); a dead workflow spawns nothing
         done = st.done
@@ -1340,10 +1356,19 @@ class Simulator:
                  profiles: ProfileStore, resume: bool = True,
                  fast_dispatch: bool = True, kv_cache: bool = True,
                  cache_affinity: bool = True,
-                 faults: FaultProfile | None = None):
+                 faults: FaultProfile | None = None,
+                 telemetry=None, routed_interfaces: tuple = ()):
         self.cluster = cluster
         self.library = library
         self.profiles = profiles
+        # per-task outcome log feeding the offline routing evaluator
+        # (DESIGN.md §11): a core.telemetry.TelemetryStore, written *after*
+        # each task's accounting settles so it never influences the run;
+        # None keeps the engine byte-identical to a telemetry-less one.
+        # ``routed_interfaces`` marks which interfaces a learned router
+        # chose the impl for (stamped onto the records).
+        self.telemetry = telemetry
+        self.routed_interfaces = frozenset(routed_interfaces)
         # seeded fault injection + recovery (DESIGN.md §10); None keeps
         # every fault path provably inert — runs are byte-identical to an
         # engine without the subsystem (the golden tests pin this)

@@ -53,12 +53,20 @@ class Murakkab:
 
     def __init__(self, cluster: ClusterManager,
                  library: AgentLibrary | None = None,
-                 planner=None):
+                 planner=None, router=None, telemetry=None):
         self.library = library or default_library()
         self.profiles = ProfileStore(self.library)
         self.cluster = cluster
         self.planner = planner or RulePlanner(self.library)
         self.scheduler = Scheduler(self.library, self.profiles, self.cluster)
+        # learned routing + telemetry feedback loop (DESIGN.md §11):
+        # ``router`` is a core.router.Router consulted at the scheduler's
+        # level-1 implementation choice; ``telemetry`` a
+        # core.telemetry.TelemetryStore every simulator run logs per-task
+        # outcomes into. Both default to None — provably inert: plans and
+        # traces stay byte-identical to a system without the subsystem.
+        self.scheduler.router = router
+        self.telemetry = telemetry
         # admission-time plan reuse (DESIGN.md §7): identical tenants
         # arriving into an unchanged cluster skip the greedy search
         self._plan_cache: OrderedDict[tuple, ExecutionPlan] = OrderedDict()
@@ -66,16 +74,32 @@ class Murakkab:
         self.plan_cache_hits = 0
         self.plan_cache_misses = 0
 
+    # -- the routing/telemetry loop (DESIGN.md §11) -----------------------------
+    @property
+    def router(self):
+        """The learned router the scheduler consults (None = static)."""
+        return self.scheduler.router
+
+    @router.setter
+    def router(self, r):
+        self.scheduler.router = r
+
+    def _routed_interfaces(self) -> tuple:
+        """Interfaces whose impl choice the attached router decides."""
+        r = self.scheduler.router
+        return r.interfaces if r is not None else ()
+
     # -- cluster factories -------------------------------------------------------
     @classmethod
     def paper_cluster(cls, library: AgentLibrary | None = None,
-                      calibrated: bool = True) -> "Murakkab":
+                      calibrated: bool = True, router=None,
+                      telemetry=None) -> "Murakkab":
         """The paper's testbed: 2x ND96amsr = 16x A100 + 192 EPYC vCPUs."""
         cluster = ClusterManager([
             Pool("gpu", "a100-80g", capacity=16),
             Pool("cpu", "epyc-7v12-core", capacity=192),
         ])
-        sys = cls(cluster, library)
+        sys = cls(cluster, library, router=router, telemetry=telemetry)
         if calibrated:
             from ..configs.workflow_video import calibrate_paper_profiles
             calibrate_paper_profiles(sys.profiles)
@@ -84,7 +108,8 @@ class Murakkab:
     @classmethod
     def tpu_cluster(cls, v5e: int = 256, v5p: int = 64, v4_harvest: int = 128,
                     host_cores: int = 512,
-                    library: AgentLibrary | None = None) -> "Murakkab":
+                    library: AgentLibrary | None = None, router=None,
+                    telemetry=None) -> "Murakkab":
         """Deployment target: TPU pools + CPU hosts + harvestable v4 slices."""
         cluster = ClusterManager([
             Pool("v5e", "tpu-v5e", capacity=v5e),
@@ -93,7 +118,7 @@ class Murakkab:
                  harvestable=True),
             Pool("cpu", "host-core", capacity=host_cores),
         ])
-        return cls(cluster, library)
+        return cls(cluster, library, router=router, telemetry=telemetry)
 
     def prewarm(self, impl: str, pool: str, n_devices: int, count: int = 1):
         """Provision warm instances (PTU-style always-on capacity)."""
@@ -163,7 +188,9 @@ class Murakkab:
             subs[wid] = Submission(dag=dag, plan=None, arrival=arrival,
                                    tenant=job.tenant_class, plan_fn=_plan)
         sim = Simulator(self.cluster, self.library, self.profiles,
-                        resume=resume, faults=faults)
+                        resume=resume, faults=faults,
+                        telemetry=self.telemetry,
+                        routed_interfaces=self._routed_interfaces())
         return sim.run(subs, log=log, policy=policy)
 
     def open_loop(self, process: ArrivalProcess, horizon_s: float, *,
@@ -270,7 +297,8 @@ class Murakkab:
         sim = Simulator(self.cluster, self.library, self.profiles,
                         resume=resume, fast_dispatch=fast_dispatch,
                         kv_cache=kv_cache, cache_affinity=cache_affinity,
-                        faults=faults)
+                        faults=faults, telemetry=self.telemetry,
+                        routed_interfaces=self._routed_interfaces())
         return sim.run_open_loop(_stream(), horizon_s, warmup_s=warmup_s,
                                  policy=policy, autoscaler=autoscaler,
                                  log=log, collect_trace=collect_trace)
@@ -294,7 +322,12 @@ class Murakkab:
                self.scheduler.joint_batch,
                # session affinity prices plans per session (warm-prefix
                # discounts differ even at equal cluster digests)
-               job.session)
+               job.session,
+               # a learned router changes level-1 impl choices: any change
+               # to what it would answer (weights version, epsilon, seed)
+               # must invalidate cached plans; None when routing is off
+               self.scheduler.router.fingerprint()
+               if self.scheduler.router is not None else None)
         cached = self._plan_cache.get(key)
         if cached is not None:
             self._plan_cache.move_to_end(key)
@@ -375,7 +408,9 @@ class Murakkab:
     # -- shared run ------------------------------------------------------------------
     def _run(self, wfs, dag: DAG, plan: ExecutionPlan) -> JobResult:
         log: list[str] = []
-        sim = Simulator(self.cluster, self.library, self.profiles)
+        sim = Simulator(self.cluster, self.library, self.profiles,
+                        telemetry=self.telemetry,
+                        routed_interfaces=self._routed_interfaces())
         report = sim.run(wfs, log=log)
         toolcalls = (self.planner.toolcalls(dag)
                      if hasattr(self.planner, "toolcalls") else {})

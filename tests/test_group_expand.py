@@ -1,0 +1,92 @@
+"""Per-(impl, pool) group-best level-3 expansion (DESIGN.md §11.4).
+
+The ROADMAP carry-over: expanding *every* level-2 group best through the
+level-3 parallelism levers widens the candidate set beyond the two-seed
+expansion, and the fan-out-aware pruning bound must be plan-preserving —
+pruned groups provably cannot win even after fan-out/paths, so plans with
+pruning on equal the exhaustive (prune-off) expansion exactly.
+"""
+import pytest
+
+import repro.configs.workflow_docingest  # noqa: F401
+import repro.configs.workflow_rag  # noqa: F401
+import repro.configs.workflow_video  # noqa: F401
+from repro.configs.workflow_docingest import make_docingest_job
+from repro.configs.workflow_rag import make_rag_job
+from repro.configs.workflow_video import make_declarative_job
+from repro.core import MAX_QUALITY, MIN_ENERGY, MIN_LATENCY, Murakkab
+from repro.core.constraints import as_spec
+
+JOBS = {
+    "rag": make_rag_job,
+    "docingest": make_docingest_job,
+    "video": make_declarative_job,
+}
+
+
+def _plan(job, *, group_expand: bool, prune: bool = True):
+    system = Murakkab.tpu_cluster()
+    system.scheduler.group_expand = group_expand
+    system.scheduler.prune = prune
+    dag, plan = system.plan(job)
+    return system, dag, plan
+
+
+# -- plan equality: fan-out-aware pruning is plan-preserving ------------------
+
+@pytest.mark.parametrize("scenario", sorted(JOBS))
+def test_group_expand_prune_equals_exhaustive(scenario):
+    """Pruned group expansion == exhaustive expansion of every group, on
+    each scenario (the bound never skips a group that could have won)."""
+    job = JOBS[scenario]()
+    sys_p, dag_p, pruned = _plan(job, group_expand=True, prune=True)
+    sys_x, dag_x, exhaustive = _plan(job, group_expand=True, prune=False)
+    assert pruned.configs == exhaustive.configs
+    # the bound actually fired: pruning skipped real candidate work
+    assert sys_p.scheduler.pruned > 0
+    assert sys_p.scheduler.evals < sys_x.scheduler.evals
+
+
+@pytest.mark.parametrize("order", [MIN_ENERGY, MIN_LATENCY, MAX_QUALITY])
+def test_group_expand_prune_equality_across_orders(order):
+    """The same equality under latency-, energy- and quality-led orders
+    (the quality-led path exercises the max-paths quality bound)."""
+    job = make_rag_job(constraints=order)
+    _, _, pruned = _plan(job, group_expand=True, prune=True)
+    _, _, exhaustive = _plan(job, group_expand=True, prune=False)
+    assert pruned.configs == exhaustive.configs
+
+
+# -- never worse than the two-seed expansion ----------------------------------
+
+@pytest.mark.parametrize("scenario", sorted(JOBS))
+def test_group_expand_never_worse_than_two_seed(scenario):
+    """Group expansion's candidate set is a superset of the two-seed
+    search's: per task, the chosen config's constraint key is <= the
+    default search's key."""
+    job = JOBS[scenario]()
+    spec = as_spec(job.constraint_spec)
+    _, dag_d, default = _plan(job, group_expand=False)
+    _, dag_g, grouped = _plan(job, group_expand=True)
+    assert list(dag_d.topo_order) == list(dag_g.topo_order)
+    for tid in dag_d.topo_order:
+        assert spec.key(grouped[tid]) <= spec.key(default[tid])
+
+
+# -- default-off inertness ----------------------------------------------------
+
+def test_group_expand_off_by_default_and_plans_stable():
+    """The flag defaults off, and flipping it on/off round-trips to the
+    identical default plan (no hidden state leaks between searches)."""
+    system = Murakkab.tpu_cluster()
+    assert system.scheduler.group_expand is False
+    job = make_rag_job()
+    dag = system.lower(job)
+    before = system.scheduler.plan(dag, job.constraint_spec,
+                                   job.quality_floor)
+    system.scheduler.group_expand = True
+    system.scheduler.plan(dag, job.constraint_spec, job.quality_floor)
+    system.scheduler.group_expand = False
+    after = system.scheduler.plan(dag, job.constraint_spec,
+                                  job.quality_floor)
+    assert before.configs == after.configs

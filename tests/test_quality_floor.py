@@ -1,0 +1,138 @@
+"""Quality-floor semantics + the ProfileStore quality column (§11).
+
+ISSUE satellite: no selected config violates a satisfiable floor, the
+cost-vs-floor frontier is monotone (raising a floor never lowers cost),
+estimate/actual parity holds for quality-routed tasks, and measured
+quality pins reshape level-1 gating (quality-aware model selection).
+"""
+import pytest
+
+import repro.configs.workflow_docingest  # noqa: F401
+import repro.configs.workflow_rag  # noqa: F401
+import repro.configs.workflow_video  # noqa: F401
+from repro.configs.workflow_rag import ROUTED_QUERIES, make_rag_job
+from repro.core import MIN_COST, Murakkab, Router
+
+SYNTH_LADDER = {"deepseek-7b-synth": 0.86, "gemma2-9b-synth": 0.90,
+                "command-r-plus-104b-synth": 0.97}
+
+
+def _plan(floor: dict, system=None):
+    system = system or Murakkab.tpu_cluster()
+    job = make_rag_job(quality_floor=floor)
+    dag, plan = system.plan(job)
+    synth = next(t for t in dag.topo_order if "synthesize" in t)
+    return system, dag, plan, synth
+
+
+# -- the floor is a hard gate -------------------------------------------------
+
+@pytest.mark.parametrize("floor", [0.0, 0.8, 0.86, 0.90, 0.92, 0.97])
+def test_satisfiable_floor_never_violated(floor):
+    """Whenever >= 1 impl clears the floor, the chosen one does too."""
+    system, dag, plan, synth = _plan({"synthesize": floor})
+    assert system.profiles.quality(plan[synth].impl) >= floor
+    # and the planned config's quality estimate clears it as well
+    assert plan[synth].quality >= floor
+
+
+def test_unsatisfiable_floor_falls_back_to_best_available():
+    """A floor above the whole ladder degrades to max-quality, by design
+    (the planner prefers a slightly-under answer over no answer)."""
+    system, dag, plan, synth = _plan({"synthesize": 0.995})
+    assert plan[synth].impl == "command-r-plus-104b-synth"   # ladder top
+
+
+def test_cost_frontier_monotone_in_floor():
+    """Raising a floor shrinks the admissible set: MIN_COST plan cost is
+    non-decreasing along the floor grid, for $ and energy."""
+    usd, energy = [], []
+    for floor in (0.0, 0.86, 0.90, 0.92, 0.97):
+        system, dag, plan, _ = _plan({"synthesize": floor})
+        rep = plan.report(dag)
+        usd.append(rep["est_usd"])
+        energy.append(rep["est_energy_j"])
+    for lo, hi in zip(usd, usd[1:]):
+        assert hi >= lo - 1e-12
+    for lo, hi in zip(energy, energy[1:]):
+        assert hi >= lo - 1e-12
+    assert usd[-1] > usd[0]    # the grid actually moves the choice
+
+
+# -- estimate/actual parity for quality-routed tasks --------------------------
+
+def test_estimate_actual_parity_under_routing():
+    """A trained router narrowing the retrieve arm changes *which* config
+    runs, not the estimate/actual contract: every trace interval equals
+    its planned latency."""
+    weights = {("retrieve", b): {"bm25-keyword": 1.0}
+               for b in ("lookup:short", "semantic:short")}
+    system = Murakkab.paper_cluster(
+        router=Router(interfaces=("retrieve",), epsilon=0.0, seed=0,
+                      weights=weights))
+    res = system.execute(make_rag_job(queries=ROUTED_QUERIES[:1]))
+    assert res.plan[
+        next(iter(res.plan.configs))].impl    # plan resolved
+    retrieve = [e for e in res.sim.trace if "retrieve" in e.task]
+    assert retrieve and retrieve[0].impl == "bm25-keyword"
+    for entry in res.sim.trace:
+        cfg = res.plan[entry.task]
+        assert entry.end - entry.start == pytest.approx(
+            cfg.est_latency_s, rel=1e-9)
+
+
+# -- the quality column (measured pins) ---------------------------------------
+
+def test_pin_quality_validation():
+    system = Murakkab.tpu_cluster()
+    with pytest.raises(KeyError):
+        system.profiles.pin_quality("no-such-impl", 0.9)
+    for bad in (0.0, -0.1, 1.5):
+        with pytest.raises(ValueError):
+            system.profiles.pin_quality("gemma2-9b-synth", bad)
+
+
+def test_pin_quality_overrides_declared_ladder():
+    system = Murakkab.tpu_cluster()
+    for name, declared in SYNTH_LADDER.items():
+        assert system.profiles.quality(name) == declared
+    system.profiles.pin_quality("gemma2-9b-synth", 0.93)
+    assert system.profiles.quality("gemma2-9b-synth") == 0.93
+    # estimates read the pinned column
+    node = system.lower(make_rag_job()).nodes
+    synth = next(n for n in node.values() if n.agent == "synthesize")
+    impl = system.library.impls["gemma2-9b-synth"]
+    cfg = system.scheduler.estimate(synth, impl, "v5e", 1)
+    assert cfg.quality == pytest.approx(0.93)
+
+
+def test_calibrated_pin_admits_cheaper_model_at_same_floor():
+    """The ISSUE's model-selection criterion: at synthesize floor 0.92
+    the declared ladder admits only the 104B model; pinning gemma2's
+    measured 0.93 finds a strictly cheaper plan at the same floor."""
+    _, dag_f, plan_f, synth = _plan({"synthesize": 0.92})
+    assert plan_f[synth].impl == "command-r-plus-104b-synth"
+
+    system = Murakkab.tpu_cluster()
+    system.profiles.pin_quality("gemma2-9b-synth", 0.93)
+    _, dag_c, plan_c, synth_c = _plan({"synthesize": 0.92}, system=system)
+    assert plan_c[synth_c].impl == "gemma2-9b-synth"
+    assert system.profiles.quality(plan_c[synth_c].impl) >= 0.92
+    assert plan_c.report(dag_c)["est_usd"] < \
+        plan_f.report(dag_f)["est_usd"]
+
+
+def test_pin_quality_invalidates_plan_cache():
+    system = Murakkab.tpu_cluster()
+    job = make_rag_job(quality_floor={"synthesize": 0.92},
+                       constraints=MIN_COST)
+    dag = system.lower(job)
+    system.plan_admitted(dag, job)
+    system.plan_admitted(dag, job)
+    assert system.plan_cache_hits == 1
+    system.profiles.pin_quality("gemma2-9b-synth", 0.93)
+    misses = system.plan_cache_misses
+    plan = system.plan_admitted(dag, job)
+    assert system.plan_cache_misses == misses + 1
+    synth = next(t for t in dag.topo_order if "synthesize" in t)
+    assert plan[synth].impl == "gemma2-9b-synth"

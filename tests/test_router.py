@@ -1,0 +1,228 @@
+"""Learned router determinism + inertness (core/router.py, DESIGN.md §11).
+
+Two load-bearing properties, both ISSUE acceptance criteria:
+
+- identical ``(seed, telemetry log)`` pairs yield byte-identical routing
+  decisions (hypothesis properties over seeds/epsilon/log order);
+- ``router=None`` (and an attached-but-covering-nothing router) leaves
+  RAG plans and traces byte-identical to the pre-router engine, on both
+  open-loop dispatch paths (extending the fast-dispatch identity harness).
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.configs.workflow_docingest  # noqa: F401
+import repro.configs.workflow_rag  # noqa: F401
+import repro.configs.workflow_video  # noqa: F401
+from repro.configs.workflow_rag import ROUTED_QUERIES, make_rag_job
+from repro.core import (Murakkab, OfflineEvaluator, Router, TelemetryStore,
+                        featurize, featurize_node)
+from repro.core.arrivals import PoissonArrivals
+from repro.core.dag import TaskNode
+from repro.core.telemetry import TaskRecord
+
+ARMS = ["bm25-keyword", "dense-retrieval", "hybrid-retrieval"]
+
+
+def _node(tid: str, text: str) -> TaskNode:
+    return TaskNode(id=tid, description=text, agent="retrieve",
+                    args={"query": text})
+
+
+NODES = [_node(f"t{i}_retrieve", q.text)
+         for i, q in enumerate(ROUTED_QUERIES)]
+
+
+# -- featurization ------------------------------------------------------------
+
+def test_featurize_buckets_split_lookup_from_semantic():
+    for q in ROUTED_QUERIES[:4]:
+        assert featurize(q.text).bucket().startswith("lookup:")
+    for q in ROUTED_QUERIES[4:]:
+        assert featurize(q.text).bucket().startswith("semantic:")
+
+
+def test_featurize_node_prefers_text_args_over_description():
+    n = _node("t", "10-K 2024 item 1A")
+    assert featurize_node(n) == featurize("10-K 2024 item 1A")
+    bare = TaskNode(id="t", description="summarize the findings",
+                    agent="retrieve")
+    assert featurize_node(bare) == featurize("summarize the findings")
+
+
+def test_featurize_degenerate_inputs():
+    f = featurize("")
+    assert f.length == f.n_tokens == 0
+    assert f.bucket() == "semantic:short"
+
+
+# -- router construction ------------------------------------------------------
+
+def test_epsilon_validation_and_frozen_weights():
+    with pytest.raises(ValueError):
+        Router(epsilon=1.5)
+    with pytest.raises(ValueError):
+        Router(epsilon=-0.1)
+    r = Router(weights={("retrieve", "lookup:short"): {"a": 1.0}})
+    with pytest.raises(TypeError):
+        r.weights[("retrieve", "x")] = {}
+    with pytest.raises(TypeError):
+        r.weights[("retrieve", "lookup:short")]["a"] = 2.0
+
+
+def test_fingerprint_tracks_identity():
+    r = Router(interfaces=("retrieve",), epsilon=0.1, seed=3)
+    r2 = r.with_weights({("retrieve", "lookup:short"): {"a": 1.0}})
+    assert r.fingerprint() != r2.fingerprint()
+    assert r2.version == r.version + 1
+    assert Router(seed=3).fingerprint() == Router(seed=3).fingerprint()
+    assert Router(seed=3).fingerprint() != Router(seed=4).fingerprint()
+
+
+def test_untrained_router_defers_to_scheduler():
+    r = Router(epsilon=0.0, seed=0)    # no weights, no exploration
+    assert all(r.route(n, ARMS) is None for n in NODES)
+    assert r.route(NODES[0], []) is None
+
+
+# -- determinism properties ---------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.0, 1.0))
+def test_identical_routers_route_identically(seed, epsilon):
+    """Decisions are a pure function of (seed, weights, task): two router
+    instances built alike agree on every node, and repeated calls on one
+    instance never drift."""
+    weights = {("retrieve", b): {"bm25-keyword": 0.9,
+                                 "dense-retrieval": 0.8}
+               for b in ("lookup:short", "semantic:short",
+                         "lookup:long", "semantic:long")}
+    a = Router(epsilon=epsilon, seed=seed, weights=weights)
+    b = Router(epsilon=epsilon, seed=seed, weights=weights)
+    first = [a.route(n, ARMS) for n in NODES]
+    assert [b.route(n, ARMS) for n in NODES] == first
+    assert [a.route(n, ARMS) for n in NODES] == first
+    # every answer is a legal arm (or a deferral)
+    assert all(pick is None or pick in ARMS for pick in first)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_identical_seed_and_log_give_identical_decisions(seed):
+    """ISSUE acceptance: identical (seed, telemetry log) pairs yield
+    byte-identical routing decisions — including through a JSONL
+    round-trip of the log."""
+    store = TelemetryStore()
+    for i, q in enumerate(ROUTED_QUERIES):
+        arm = ARMS[i % len(ARMS)]
+        store.log(TaskRecord(
+            t=float(i), workflow="w", task=f"t{i}", interface="retrieve",
+            impl=arm, pool="cpu", features=featurize(q.text),
+            latency_s=0.5, energy_j=float(i), usd=0.001 * (i + 1),
+            quality=0.9 if arm != "bm25-keyword" else 0.7))
+    ev = OfflineEvaluator(quality_target=0.85, cost_weight=0.1,
+                          cost_key="usd")
+    base = Router(interfaces=("retrieve",), epsilon=0.05, seed=seed)
+    r1 = ev.update(base, store)
+    r2 = ev.update(base, TelemetryStore.from_jsonl(store.to_jsonl()))
+    assert dict(r1.weights) == dict(r2.weights)
+    assert [r1.route(n, ARMS) for n in NODES] == \
+        [r2.route(n, ARMS) for n in NODES]
+
+
+def test_exploit_picks_argmax_and_breaks_ties_lexicographically():
+    w = {("retrieve", "lookup:short"): {"bm25-keyword": 0.9,
+                                        "dense-retrieval": 0.9,
+                                        "hybrid-retrieval": 0.2}}
+    r = Router(epsilon=0.0, seed=0, weights=w)
+    n = _node("t0", "10-K 2024 item 1A")
+    # tie at 0.9: max over the sorted arm list keeps the first-sorted
+    # of the maxima — deterministic regardless of arms-list order
+    assert r.route(n, ARMS) == "bm25-keyword"
+    assert r.route(n, list(reversed(ARMS))) == "bm25-keyword"
+    # arms absent from the table never get picked in exploit mode
+    assert r.route(n, ["missing-arm"]) is None
+
+
+# -- inertness: router=None is byte-identical (tentpole acceptance) -----------
+
+def _serving(router=None, telemetry=None, fast=True):
+    sys_ = Murakkab.tpu_cluster(v5e=64, v5p=16, v4_harvest=32,
+                                host_cores=128, router=router,
+                                telemetry=telemetry)
+    return sys_.open_loop(
+        PoissonArrivals(rate_per_s=0.25, mix={"rag": 1.0}, seed=4),
+        horizon_s=300.0, warmup_s=30.0, fast_dispatch=fast)
+
+
+@pytest.mark.parametrize("fast", [True, False])
+def test_router_none_byte_identical_open_loop(fast):
+    """router=None + attached telemetry leave the open-loop RAG stream
+    byte-identical to the stock engine — on both dispatch paths."""
+    stock = _serving(fast=fast)
+    routed = _serving(router=None, telemetry=TelemetryStore(), fast=fast)
+    assert routed.trace == stock.trace
+    assert routed.energy_wh == stock.energy_wh
+    assert routed.makespan_s == stock.makespan_s
+    assert routed.per_class == stock.per_class
+
+
+def test_non_covering_router_byte_identical():
+    """A router that covers no interface defers every decision — traces
+    match the stock engine exactly."""
+    stock = _serving()
+    inert = _serving(router=Router(interfaces=(), epsilon=0.5, seed=9))
+    assert inert.trace == stock.trace
+    assert inert.energy_wh == stock.energy_wh
+
+
+def test_router_none_plans_byte_identical_closed_loop():
+    stock = Murakkab.paper_cluster().execute(make_rag_job())
+    routed = Murakkab.paper_cluster(router=None).execute(make_rag_job())
+    assert routed.plan.configs == stock.plan.configs
+    assert routed.sim.trace == stock.sim.trace
+    assert routed.energy_wh == stock.energy_wh
+
+
+def test_plan_cache_keyed_on_router_fingerprint():
+    system = Murakkab.paper_cluster()
+    job = make_rag_job()
+    dag = system.lower(job)
+    system.plan_admitted(dag, job)
+    system.plan_admitted(dag, job)
+    assert system.plan_cache_hits == 1
+    # attaching (or retraining) a router must invalidate cached plans
+    system.router = Router(interfaces=("retrieve",), epsilon=0.0, seed=1,
+                           weights={("retrieve", "lookup:short"):
+                                    {"bm25-keyword": 1.0}})
+    misses = system.plan_cache_misses
+    system.plan_admitted(dag, job)
+    assert system.plan_cache_misses == misses + 1
+    system.router = system.router.with_weights(
+        {("retrieve", "semantic:short"): {"dense-retrieval": 1.0}})
+    system.plan_admitted(dag, job)
+    assert system.plan_cache_misses == misses + 2
+
+
+def test_trained_router_changes_the_retrieve_arm_only_within_floor():
+    """A router exploit pick narrows level-1 choice to its arm; the
+    quality floor still gates — an arm below the floor is never offered
+    to the router."""
+    weights = {("retrieve", b): {"bm25-keyword": 1.0,
+                                 "dense-retrieval": 0.5}
+               for b in ("lookup:short", "semantic:short")}
+    router = Router(interfaces=("retrieve",), epsilon=0.0, seed=0,
+                    weights=weights)
+    system = Murakkab.paper_cluster(router=router)
+    job = make_rag_job(queries=ROUTED_QUERIES[:1])
+    dag, plan = system.plan(job)
+    retrieve = next(t for t in dag.topo_order if "retrieve" in t)
+    assert plan[retrieve].impl == "bm25-keyword"
+
+    # floor 0.9 excludes bm25 (0.82) from the router's arm list entirely
+    strict = Murakkab.paper_cluster(router=router)
+    dag2, plan2 = strict.plan(make_rag_job(queries=ROUTED_QUERIES[:1],
+                                           quality_floor={"retrieve": 0.9}))
+    retrieve2 = next(t for t in dag2.topo_order if "retrieve" in t)
+    assert plan2[retrieve2].impl != "bm25-keyword"
+    assert strict.profiles.quality(plan2[retrieve2].impl) >= 0.9
