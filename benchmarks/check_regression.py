@@ -25,6 +25,13 @@ regresses when it moves in its *bad* direction by more than ``tolerance``
 - everything else (makespan/span/energy/$/preemptions/requeues/
   ``wasted_dev_s``) is lower-is-better.
 
+Engine throughput (``info.events_per_s``, written by ``serving_bench.py``)
+is additionally gated as higher-is-better when both files carry it —
+under its own, wider ``--throughput-tolerance`` (default 50%), because
+wall-clock on a shared runner is noisy where the ``metrics`` map is
+deterministic. The gate catches engine-level slowdowns (an accidental
+O(n^2) rescan, a dropped memo), not scheduling jitter.
+
 Integer-valued metrics (event counts: preemptions, requeues) get one unit
 of absolute slack on top of the relative tolerance — a 1→2 preemption move
 is not a 100% regression worth failing CI over; large count jumps still
@@ -42,7 +49,7 @@ import json
 import sys
 
 HIGHER_IS_BETTER = ("quality", "saving", "warm_hit", "hit_rate",
-                    "attainment", "goodput", "completed")
+                    "attainment", "goodput", "completed", "events_per_s")
 # reported but never gated: value tracks event counts (e.g. work-items
 # salvaged by resume scales with how many preemptions occurred, scale
 # actions with the autoscaler's tick/cooldown interplay, injected faults
@@ -99,6 +106,10 @@ def main() -> int:
     ap.add_argument("--current", required=True)
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="max relative move in the bad direction (0.2 = 20%)")
+    ap.add_argument("--throughput-tolerance", type=float, default=0.5,
+                    help="separate (wider) tolerance for the gated "
+                         "info.events_per_s engine-throughput metric — "
+                         "wall-clock noise on shared runners")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -107,6 +118,15 @@ def main() -> int:
         cur = json.load(f)
     regressions, notes = compare(base.get("metrics", base),
                                  cur.get("metrics", cur), args.tolerance)
+    # engine throughput: gated higher-is-better, own tolerance (wall clock)
+    b_ev = base.get("info", {}).get("events_per_s")
+    c_ev = cur.get("info", {}).get("events_per_s")
+    if b_ev is not None and c_ev is not None:
+        r2, n2 = compare({"info/events_per_s": b_ev},
+                         {"info/events_per_s": c_ev},
+                         args.throughput_tolerance)
+        regressions += r2
+        notes += n2
     for line in notes:
         print(f"  note: {line}")
     if regressions:

@@ -157,6 +157,42 @@ def sweep(rates: tuple[float, ...], horizon: float, warmup: float,
     return metrics, info
 
 
+def profile_point(rate: float, horizon: float, warmup: float,
+                  top_n: int = 15, verbose: bool = True) -> list[dict]:
+    """--profile: cProfile the largest sweep point, top-N by cumulative.
+
+    Pure diagnostics for the engine's hot loop (where do the events/s
+    go?): the rows land in the JSON ``info`` block — never ``metrics`` —
+    so the regression gate ignores them, like every other wall-clock
+    artifact.
+    """
+    import cProfile
+    import pstats
+
+    prof = cProfile.Profile()
+    prof.enable()
+    _point(rate, horizon, warmup)
+    prof.disable()
+    stats = pstats.Stats(prof)
+    stats.sort_stats("cumulative")
+    rows: list[dict] = []
+    for func in stats.fcn_list:                    # sorted by cumtime
+        cc, nc, tt, ct, _callers = stats.stats[func]
+        path, line, name = func
+        mod = os.path.basename(path) if os.path.sep in path else path
+        rows.append({"func": f"{mod}:{line}({name})", "ncalls": nc,
+                     "tottime_s": round(tt, 4), "cumtime_s": round(ct, 4)})
+        if len(rows) >= top_n:
+            break
+    if verbose:
+        print(f"\nprofile @ rate={rate:g}/s (top {top_n} by cumulative):")
+        print(f"{'cumtime':>9s} {'tottime':>9s} {'ncalls':>10s}  function")
+        for r in rows:
+            print(f"{r['cumtime_s']:>9.3f} {r['tottime_s']:>9.3f} "
+                  f"{r['ncalls']:>10d}  {r['func']}")
+    return rows
+
+
 def autoscale_comparison(rate: float, horizon: float, warmup: float,
                          verbose: bool = True) \
         -> tuple[dict[str, float], bool]:
@@ -205,6 +241,11 @@ def main() -> int:
     ap.add_argument("--faults", action="store_true",
                     help="add one sweep point under a default FaultProfile "
                          "(smoke: fault injection on the serving path)")
+    ap.add_argument("--profile", nargs="?", const=15, default=None,
+                    type=int, metavar="N",
+                    help="cProfile the largest sweep point and report the "
+                         "top N functions by cumulative time (default 15) "
+                         "into the ungated JSON info block")
     ap.add_argument("--min-events-per-s", type=float, default=20_000.0,
                     help="engine-throughput floor asserted on the largest "
                          "sweep point (composite events/s; conservative "
@@ -229,6 +270,9 @@ def main() -> int:
         fault_metrics, faults_ok = faults_smoke(max(rates), horizon,
                                                 warmup)
         metrics.update(fault_metrics)
+    if args.profile:
+        info["profile"] = profile_point(max(rates), horizon, warmup,
+                                        top_n=args.profile)
 
     ev_s = info.get("events_per_s", 0)
     print(f"\nengine throughput @ rate={info.get('rate_per_s')}/s: "

@@ -109,6 +109,9 @@ class Instance:
     busy_until: float = 0.0
     warm_since: float = 0.0
     lease: "Lease | None" = None   # the devices this instance holds
+    # provisioning sequence number (assigned by ``add_instance``): lets
+    # index-driven scans reproduce the global instance-list order exactly
+    seq: int = 0
     # KV/prefix-cache residency (DESIGN.md §9): HBM budget left after the
     # weights, and the prefix entries resident in it, keyed by session.
     # Entries live and die with the instance — eviction drops them.
@@ -148,6 +151,18 @@ class ClusterManager:
         # warm-instance index: (impl, pool, n_devices) -> instances, so the
         # engine's reuse scan is O(matching) not O(all instances)
         self._inst_index: dict[tuple[str, str, int], list[Instance]] = {}
+        # per-pool instance index (insertion-ordered like ``instances``, so
+        # scans over one pool see victims in the same order a scan over the
+        # global list would): the engine's idle-eviction and crash-victim
+        # scans are O(pool) not O(cluster)
+        self._pool_insts: dict[str, list[Instance]] = {
+            p.name: [] for p in pools}
+        # per-impl instance index + provisioning sequence: ``rebalance``
+        # scans only the dead interfaces' instances (merged back into
+        # global provisioning order via ``Instance.seq``) instead of the
+        # whole cluster
+        self._impl_insts: dict[str, list[Instance]] = {}
+        self._iseq = itertools.count()
         # session -> instances holding a resident prefix entry for it (the
         # scheduler's affinity lookup; mirrors Instance.cache exactly)
         self._cache_index: dict[str, list[Instance]] = {}
@@ -176,8 +191,7 @@ class ClusterManager:
         if n <= 0 or self.pools[pool].capacity - self._used[pool] < n:
             return None
         self._used[pool] += n
-        lease = Lease(next(self._ids), pool, n, t, harvest=harvest,
-                      session=session)
+        lease = Lease(next(self._ids), pool, n, t, harvest, session)
         self._leases[lease.id] = lease
         self._digest = None
         if harvest:
@@ -321,11 +335,13 @@ class ClusterManager:
         done = self._done.get(wf_id)
         if done is not None and task_id not in done:
             done.add(task_id)
-            agent = self._dags[wf_id].nodes[task_id].agent
-            self._demand[agent] -= 1
-            if self._demand[agent] == 0:
+            dag = self._dags[wf_id]
+            agent = dag.nodes[task_id].agent
+            demand = self._demand
+            demand[agent] -= 1
+            if demand[agent] == 0:
                 self.demand_zeroed = True
-            if len(done) >= len(self._dags[wf_id].nodes):
+            if len(done) >= len(dag.nodes):
                 del self._dags[wf_id], self._done[wf_id]
 
     def abandon_workflow(self, wf_id: str):
@@ -360,7 +376,7 @@ class ClusterManager:
     # -- warm instances ------------------------------------------------------------
     def find_instance(self, impl: str, t: float) -> Instance | None:
         """Earliest-available warm instance of ``impl``."""
-        cands = [i for i in self.instances if i.impl == impl]
+        cands = self._impl_insts.get(impl)
         return min(cands, key=lambda i: i.busy_until) if cands else None
 
     def warm_instances(self, impl: str, pool: str,
@@ -369,11 +385,27 @@ class ClusterManager:
         via the instance index (the simulator's reuse scan)."""
         return self._inst_index.get((impl, pool, n_devices), ())
 
+    def pool_instances(self, pool: str) -> list[Instance]:
+        """Live warm instances on ``pool``, in provisioning order."""
+        return self._pool_insts.get(pool, ())
+
     def add_instance(self, inst: Instance):
         """Track a newly-provisioned warm model instance."""
+        inst.seq = next(self._iseq)
         self.instances.append(inst)
         key = (inst.impl, inst.pool, inst.n_devices)
-        self._inst_index.setdefault(key, []).append(inst)
+        rows = self._inst_index.get(key)
+        if rows is None:
+            rows = self._inst_index[key] = []
+        rows.append(inst)
+        rows = self._pool_insts.get(inst.pool)
+        if rows is None:
+            rows = self._pool_insts[inst.pool] = []
+        rows.append(inst)
+        rows = self._impl_insts.get(inst.impl)
+        if rows is None:
+            rows = self._impl_insts[inst.impl] = []
+        rows.append(inst)
         self._digest = None
 
     # -- KV/prefix-cache ledger (DESIGN.md §9) ----------------------------------
@@ -457,9 +489,18 @@ class ClusterManager:
             return []
         actions = []
         impls = library.impls
-        for inst in list(self.instances):
-            iface = impls[inst.impl].interface
-            if iface in dead and inst.busy_until <= t and not inst.cache:
+        # scan only the dead interfaces' instances via the per-impl index,
+        # merged back into global provisioning order (Instance.seq) so the
+        # eviction sequence — and the actions log — is exactly what a scan
+        # over the full instance list would produce
+        cands: list[Instance] = []
+        for impl_name, group in self._impl_insts.items():
+            if group and impls[impl_name].interface in dead:
+                cands.extend(group)
+        cands.sort(key=lambda i: i.seq)
+        for inst in cands:
+            if inst.busy_until <= t and not inst.cache:
+                iface = impls[inst.impl].interface
                 self.evict_instance(inst, t)
                 actions.append(f"reclaim {inst.impl} ({inst.n_devices} dev "
                                f"of {inst.pool}): no upcoming {iface} demand")
@@ -477,6 +518,8 @@ class ClusterManager:
             self._drop_entry(inst, session)
         self.instances.remove(inst)
         self._inst_index[(inst.impl, inst.pool, inst.n_devices)].remove(inst)
+        self._pool_insts[inst.pool].remove(inst)
+        self._impl_insts[inst.impl].remove(inst)
         self._digest = None
         if inst.lease is not None and inst.lease.id in self._leases:
             self.release(inst.lease, t)
@@ -526,6 +569,19 @@ class ClusterManager:
             assert inst in self._inst_index.get(
                 (inst.impl, inst.pool, inst.n_devices), ()), (
                 f"instance {inst.impl}@{inst.pool} missing from index")
+        pooled = [i for group in self._pool_insts.values() for i in group]
+        assert len(pooled) == len(self.instances), (
+            f"pool index holds {len(pooled)} entries but "
+            f"{len(self.instances)} instances are live")
+        by_impl = [i for group in self._impl_insts.values() for i in group]
+        assert len(by_impl) == len(self.instances), (
+            f"impl index holds {len(by_impl)} entries but "
+            f"{len(self.instances)} instances are live")
+        for inst in self.instances:
+            assert inst in self._pool_insts.get(inst.pool, ()), (
+                f"instance {inst.impl}@{inst.pool} missing from pool index")
+            assert inst in self._impl_insts.get(inst.impl, ()), (
+                f"instance {inst.impl}@{inst.pool} missing from impl index")
         # cache ledger: index entries live, residency within budget, and
         # index <-> per-instance entry dicts mirror each other
         live = {id(i) for i in self.instances}

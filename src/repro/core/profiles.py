@@ -21,6 +21,12 @@ import math
 import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
+from typing import Sequence
+
+try:                                    # the vectorized pricing kernel
+    import numpy as _np                 # (DESIGN.md §12); the scalar path
+except ImportError:                     # needs no numpy, so its absence
+    _np = None                          # only disables batching
 
 from .agents import AgentImpl, AgentLibrary, Work
 from .energy import (CATALOG, DeviceSpec, batch_roofline_latency,
@@ -294,6 +300,22 @@ class ProfileStore:
             f"benchmarks/calibrate_batch_curves.py).",
             DeprecationWarning, stacklevel=3)
 
+    def _alpha_step(self, impl: AgentImpl, spec: DeviceSpec, base: float,
+                    b: int, *, pinned: bool) -> float:
+        """The deprecated ``batch ** alpha`` batch model — the one site.
+
+        ``base`` is the batch=1 step latency: a single-point pin's
+        per-item latency, or the analytic ``overhead + roofline`` for a
+        work without a prefill/decode phase split. Pinned rows warn once
+        per (impl, device) when actually batched — they *could* carry a
+        measured curve and should; analytic phase-less works stay silent
+        (alpha is their declared batch model, there is nothing to
+        migrate).
+        """
+        if pinned and b > 1:
+            self._warn_alpha_fallback(impl, spec)
+        return base * b ** impl.batch_alpha
+
     @staticmethod
     def _require_query(method: str, query) -> None:
         if not isinstance(query, CostQuery):
@@ -330,18 +352,20 @@ class ProfileStore:
             if len(curve) > 1:
                 step = b * _curve_per_item(curve, b)
             else:
-                if b > 1:
-                    self._warn_alpha_fallback(impl, spec)
-                step = curve[0][1] * b ** impl.batch_alpha
+                step = self._alpha_step(impl, spec, curve[0][1], b,
+                                        pinned=True)
         elif work.has_phases:
             step = impl.overhead_s + b * batch_roofline_latency(
                 work, spec, n_devices=n_devices, batch=batch,
                 efficiency=impl.mxu_efficiency)
         else:
-            step = (impl.overhead_s + roofline_latency(
-                work.flops, work.hbm_bytes, spec, n_devices=n_devices,
-                collective_bytes=work.coll_bytes,
-                efficiency=impl.mxu_efficiency)) * b ** impl.batch_alpha
+            step = self._alpha_step(
+                impl, spec,
+                impl.overhead_s + roofline_latency(
+                    work.flops, work.hbm_bytes, spec, n_devices=n_devices,
+                    collective_bytes=work.coll_bytes,
+                    efficiency=impl.mxu_efficiency),
+                b, pinned=False)
         if self.cache_enabled:
             self._cache[key] = step
             if len(self._cache) > self.CACHE_MAX:
@@ -386,6 +410,155 @@ class ProfileStore:
             total += self._step(query.impl, query.spec, query.n_devices,
                                 eff, rem)
         return total
+
+    # -- vectorized batch kernel (DESIGN.md §12) ------------------------------
+    def step_latency_batch(self, queries: "Sequence[CostQuery]") \
+            -> list[float]:
+        """Price many one-step queries in one call — the batch kernel.
+
+        Bitwise-identical to mapping :meth:`step_latency` over ``queries``,
+        by construction: the analytic regimes' roofline arithmetic
+        (divisions, maxima, multiply-adds) runs as numpy elementwise ops
+        over the whole miss set — each IEEE-754 elementwise ``+ - * /`` and
+        ``maximum`` has exactly one correctly-rounded answer, so the lanes
+        match the scalar path bit for bit. Transcendentals do NOT vectorize
+        safely (numpy's SIMD ``log``/``exp``/``power`` round differently
+        from libm on ~3% of inputs), so the ``batch ** alpha`` power law
+        and the pinned curve's log-log interpolation stay scalar per
+        element. Results land in the shared step memo: later scalar calls
+        on the same keys are hits, which is how the scheduler's grid
+        prewarm feeds the estimate loop.
+        """
+        n_q = len(queries)
+        out: list = [None] * n_q
+        cache = self._cache if self.cache_enabled else None
+        # miss buckets: row = (position, resolved inputs...)
+        phased: list[tuple] = []        # analytic, prefill/decode split
+        alpha: list[tuple] = []         # analytic, no split (power law)
+        for i, q in enumerate(queries):
+            self._require_query("step_latency_batch", q)
+            work = q.effective_work()
+            key = (q.impl.name, q.spec.name, q.n_devices, q.batch, work)
+            if cache is not None:
+                hit = cache.get(key)
+                if hit is not None:
+                    cache.move_to_end(key)
+                    self.cache_hits += 1
+                    out[i] = hit
+                    continue
+            curve = self._pinned_curve(q.impl, q.spec, q.n_devices)
+            if curve is not None or _np is None:
+                # pinned rows (and the no-numpy fallback) price through
+                # the scalar path — it owns the memo bookkeeping
+                out[i] = self._step(q.impl, q.spec, q.n_devices, work,
+                                    q.batch)
+                continue
+            self.cache_misses += 1
+            b = max(q.batch, 1)
+            n = max(q.n_devices, 1)
+            if work.has_phases:
+                phased.append((i, key, q, work, b, n))
+            else:
+                alpha.append((i, key, q, work, b, n))
+        if phased:
+            # step = overhead + b * (max(compute, memory, coll) / b), with
+            # every expression shaped exactly like batch_roofline_latency's
+            bv = _np.array([r[4] for r in phased], dtype=float)
+            nv = _np.array([r[5] for r in phased], dtype=float)
+            flops = _np.array([r[3].flops for r in phased])
+            shared = _np.array([r[3].shared_bytes for r in phased])
+            per_it = _np.array([r[3].per_item_bytes for r in phased])
+            coll = _np.array([r[3].coll_bytes for r in phased])
+            peak = _np.array([r[2].spec.peak_flops for r in phased])
+            hbm = _np.array([r[2].spec.hbm_bw for r in phased])
+            link = _np.array([r[2].spec.link_bw for r in phased])
+            eff = _np.array([r[2].impl.mxu_efficiency for r in phased])
+            over = _np.array([r[2].impl.overhead_s for r in phased])
+            t_c = bv * flops / (nv * peak * eff)
+            t_m = (shared + bv * per_it) / (nv * hbm)
+            t_x = _np.zeros_like(t_c)
+            nz = link != 0.0
+            if nz.any():
+                t_x[nz] = bv[nz] * coll[nz] / (nv[nz] * link[nz])
+            step = over + bv * (_np.maximum(_np.maximum(t_c, t_m), t_x)
+                                / bv)
+            for (i, key, _q, _w, _b, _n), s in zip(phased, step):
+                out[i] = s = float(s)
+                if cache is not None:
+                    cache[key] = s
+        if alpha:
+            # base = overhead + max(three roofline terms); the power law
+            # itself stays scalar (libm, via _alpha_step — one fallback
+            # site, shared with the scalar path)
+            nv = _np.array([r[5] for r in alpha], dtype=float)
+            flops = _np.array([r[3].flops for r in alpha])
+            hbytes = _np.array([r[3].hbm_bytes for r in alpha])
+            coll = _np.array([r[3].coll_bytes for r in alpha])
+            peak = _np.array([r[2].spec.peak_flops for r in alpha])
+            hbm = _np.array([r[2].spec.hbm_bw for r in alpha])
+            link = _np.array([r[2].spec.link_bw for r in alpha])
+            eff = _np.array([r[2].impl.mxu_efficiency for r in alpha])
+            over = _np.array([r[2].impl.overhead_s for r in alpha])
+            t_c = flops / (nv * peak * eff)
+            t_m = hbytes / (nv * hbm)
+            t_x = _np.zeros_like(t_c)
+            nz = link != 0.0
+            if nz.any():
+                t_x[nz] = coll[nz] / (nv[nz] * link[nz])
+            base = over + _np.maximum(_np.maximum(t_c, t_m), t_x)
+            for (i, key, q, _w, b, _n), bs in zip(alpha, base):
+                out[i] = s = float(self._alpha_step(q.impl, q.spec,
+                                                    float(bs), b,
+                                                    pinned=False))
+                if cache is not None:
+                    cache[key] = s
+        if cache is not None:
+            while len(cache) > self.CACHE_MAX:
+                cache.popitem(last=False)
+        return out
+
+    def schedule_latency_batch(self, queries: "Sequence[CostQuery]") \
+            -> list[float]:
+        """Batched-execution schedules for many queries in one kernel call.
+
+        Expands each query into its full-batch step and (when ``items %
+        batch != 0``) its remainder step, prices all steps through
+        :meth:`step_latency_batch`, and recomposes ``full * step(b) +
+        step(rem)`` — the exact float-op sequence of
+        :meth:`schedule_latency`, so results (and the memo entries left
+        behind) are bitwise-identical to the scalar path.
+        """
+        step_qs: list[CostQuery] = []
+        plan: list[tuple] = []
+        for q in queries:
+            self._require_query("schedule_latency_batch", q)
+            eff = q.effective_work()
+            b = max(int(q.batch), 1)
+            items = max(int(q.items), 0)
+            if items == 0:
+                plan.append((0, 0, None, None))
+                continue
+            full, rem = divmod(items, b)
+            i_b = i_r = None
+            if full:
+                i_b = len(step_qs)
+                step_qs.append(CostQuery(impl=q.impl, spec=q.spec,
+                                         n_devices=q.n_devices, work=eff,
+                                         batch=b))
+            if rem:
+                i_r = len(step_qs)
+                step_qs.append(CostQuery(impl=q.impl, spec=q.spec,
+                                         n_devices=q.n_devices, work=eff,
+                                         batch=rem))
+            plan.append((full, rem, i_b, i_r))
+        steps = self.step_latency_batch(step_qs)
+        out = []
+        for full, rem, i_b, i_r in plan:
+            total = full * steps[i_b] if full else 0.0
+            if rem:
+                total += steps[i_r]
+            out.append(total)
+        return out
 
     def completed_items(self, query: CostQuery) -> tuple[int, float]:
         """Invert the ``schedule_latency`` step schedule at ``elapsed_s``.

@@ -132,38 +132,80 @@ class OfflineEvaluator:
     interface's mean over the same log (self-scaling, no tuning constant
     carries units). Both passes are pure functions of the record list:
     the same log always produces the same weights.
+
+    **Drift.** A plain lifetime mean never forgets: once an arm has
+    accumulated enough history, a regression in its *current* behavior
+    (quality drop after a model swap, a pool migration doubling cost) is
+    averaged away by the stale majority, and the router keeps routing to
+    it. ``half_life_s`` fixes this by exponentially decaying each record's
+    weight with its age — ``0.5 ** (age / half_life_s)`` against the
+    newest record in the log (sim-time, so replays stay deterministic) —
+    in *both* passes: the cost normalizer and the reward means.
+    ``window_s`` is the hard variant: records older than the window are
+    dropped outright. Both default off, reproducing the lifetime mean
+    exactly.
     """
 
     def __init__(self, quality_target: float = 0.85,
-                 cost_weight: float = 0.2, cost_key: str = "energy_j"):
+                 cost_weight: float = 0.2, cost_key: str = "energy_j",
+                 half_life_s: float | None = None,
+                 window_s: float | None = None):
         if not 0.0 < quality_target <= 1.0:
             raise ValueError("quality_target must be in (0, 1]")
         if cost_weight < 0.0:
             raise ValueError("cost_weight must be >= 0")
         if cost_key not in ("energy_j", "usd", "latency_s"):
             raise ValueError(f"unknown cost_key {cost_key!r}")
+        if half_life_s is not None and half_life_s <= 0.0:
+            raise ValueError("half_life_s must be > 0")
+        if window_s is not None and window_s <= 0.0:
+            raise ValueError("window_s must be > 0")
         self.quality_target = quality_target
         self.cost_weight = cost_weight
         self.cost_key = cost_key
+        self.half_life_s = half_life_s
+        self.window_s = window_s
+
+    def _weights_of(self, records) -> "list[tuple]":
+        """(record, age-weight) pairs under the decay/window policy.
+
+        Ages are measured against the newest record's sim-time — a pure
+        function of the log, unlike wall clocks — so the same store
+        always yields the same weights.
+        """
+        if not records:
+            return []
+        now = max(r.t for r in records)
+        rows = []
+        for r in records:
+            age = now - r.t
+            if self.window_s is not None and age > self.window_s:
+                continue
+            w = 0.5 ** (age / self.half_life_s) \
+                if self.half_life_s is not None else 1.0
+            rows.append((r, w))
+        return rows
 
     # -- the update rule ------------------------------------------------------
     def rewards(self, store: TelemetryStore) -> Weights:
-        """Per-(interface, bucket, arm) mean rewards from the log."""
-        cost_of = {r: getattr(r, self.cost_key) for r in store.records}
-        scale: dict[str, tuple[float, int]] = {}
-        for r in store.records:
-            tot, n = scale.get(r.interface, (0.0, 0))
-            scale[r.interface] = (tot + cost_of[r], n + 1)
+        """Per-(interface, bucket, arm) mean rewards from the log
+        (age-weighted means under ``half_life_s``/``window_s``)."""
+        rows = self._weights_of(store.records)
+        cost_of = {r: getattr(r, self.cost_key) for r, _ in rows}
+        scale: dict[str, tuple[float, float]] = {}
+        for r, w in rows:
+            tot, n = scale.get(r.interface, (0.0, 0.0))
+            scale[r.interface] = (tot + w * cost_of[r], n + w)
         mean_cost = {i: (tot / n if n and tot > 0 else 1.0)
                      for i, (tot, n) in scale.items()}
-        acc: dict[tuple[str, str], dict[str, tuple[float, int]]] = {}
-        for r in store.records:
+        acc: dict[tuple[str, str], dict[str, tuple[float, float]]] = {}
+        for r, w in rows:
             reward = (min(r.quality / self.quality_target, 1.0)
                       - self.cost_weight * cost_of[r]
                       / mean_cost[r.interface])
             tbl = acc.setdefault((r.interface, r.features.bucket()), {})
-            tot, n = tbl.get(r.impl, (0.0, 0))
-            tbl[r.impl] = (tot + reward, n + 1)
+            tot, n = tbl.get(r.impl, (0.0, 0.0))
+            tbl[r.impl] = (tot + w * reward, n + w)
         return {key: {arm: tot / n for arm, (tot, n) in sorted(tbl.items())}
                 for key, tbl in sorted(acc.items())}
 

@@ -421,6 +421,20 @@ class Scheduler:
                             best, order, cf, hi_k=hi_k):
                         self.pruned += len(counts) * len(batches)
                         continue
+                    if self.profiles.cache_enabled and \
+                            len(counts) * len(batches) > 1:
+                        # grid prewarm: one vectorized kernel call
+                        # (ProfileStore.schedule_latency_batch) prices every
+                        # (count, batch) candidate's memo misses at once;
+                        # the estimate loop below then runs on memo hits
+                        _work = self._work_of(impl, node)
+                        _spec = CATALOG[device]
+                        self.profiles.schedule_latency_batch([
+                            CostQuery(impl=impl, spec=_spec, n_devices=n,
+                                      work=_work, batch=b,
+                                      items=node.work_items,
+                                      cache_hit_frac=cf)
+                            for n in counts for b in batches])
                     gbest: TaskConfig | None = None
                     for n in counts:
                         for b in batches:

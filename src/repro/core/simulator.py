@@ -1,4 +1,4 @@
-"""Discrete-event execution engine over the modeled cluster.
+"""Discrete-event execution façade over the layered engine (``core/engine``).
 
 Runs one or many workflows (DAG + ExecutionPlan) against the cluster
 manager's pools: list-scheduling with dependency and capacity constraints,
@@ -6,6 +6,21 @@ warm-instance reuse, cold-start (weights-load) latencies, and energy/$
 integration via ``EnergyLedger``. Produces per-task traces — the Fig-3
 artifact — and is the scale path (a 1000-node cluster is just bigger pool
 capacities; the engine is O(events log events)).
+
+This module is the *stable import surface*: ``Simulator`` (run modes,
+duration pricing, pool limits) plus re-exports of the engine's public
+records (``Submission``/``TraceEntry``/``SimReport``/``OpenLoopReport``)
+and ``render_trace``. The event loop, dispatch, accounting and recovery
+layers live in :mod:`repro.core.engine` (DESIGN.md §12):
+
+- ``engine.events`` — event heap, clock, same-timestamp drain loops,
+  contiguous-finish coalescing;
+- ``engine.dispatch`` — admission, indexed ready-set, blocked-group epoch
+  memo, task start/preempt/finish settlement;
+- ``engine.ledger`` — energy/$/served charging and refunds, report
+  assembly, steady-state serving metrics;
+- ``engine.recovery`` — fault injection, retry/backoff, crash/repair,
+  hedging.
 
 Semantics notes:
 - A *model* implementation (``load_time_s > 0`` or zoo-backed) executes on
@@ -17,1336 +32,45 @@ Semantics notes:
 - Energy: active increments per task; the idle floor for every metered pool
   is integrated over the *capacity timeline* at finalize (paper Table-2
   semantics; under autoscaling the floor follows ``set_capacity`` changes).
-
-Multi-tenant semantics (core/admission.py):
-- Workflows may arrive as ``Submission`` objects carrying a tenant class
-  and an optional ``plan_fn``; planning then happens *at admission*, so the
-  scheduler sees the cluster state (warm instances, free devices) at
-  arrival rather than an empty cluster.
-- Ready work is dispatched in admission-policy order (FCFS /
-  strict-priority / weighted-fair), work-conserving.
-- Harvest-class tenants hold preemptible leases. When a priority tenant
-  cannot allocate, the engine reclaims harvest leases via
-  ``ClusterManager.preempt_harvest``: the victims' in-flight tasks are
-  cancelled, re-enqueued, and both the truncated run (``note="preempted"``)
-  and the re-execution appear in the trace.
-- Work-item checkpoint/resume (DESIGN.md §6.4): a *chunkable* victim's
-  completed batch steps survive preemption — ``cancel_task`` inverts the
-  ``ProfileStore.schedule_latency`` step schedule over the compute window
-  (``ProfileStore.completed_items``), records the surviving item count on
-  the workflow state, and the requeued attempt executes only the residual
-  (``note="resume"``, composed with warmth as e.g. ``"resume+cold"``).
-  Refunds are step-granular: completed steps stay charged (their items are
-  never re-executed), the in-flight step is refunded (its items ride the
-  residual, which re-charges them), so a resumed task's total charge is
-  exactly ``schedule_latency(total items)`` across attempts. Non-chunkable
-  tasks keep the restart-from-scratch path: time-fraction refund of the
-  unexecuted remainder, ``note="requeue"``. Discarded-but-executed compute
-  accrues in ``SimReport.wasted_dev_s`` either way.
+- Multi-tenant admission, harvest preemption and work-item
+  checkpoint/resume semantics are documented on the engine layers that
+  implement them (``engine.dispatch``, ``engine.ledger``).
 
 Event-engine fast path (DESIGN.md §8): the dispatch loop keeps an *indexed
 ready-set* per workflow — roots enter at admission, successors enter when
 their last dependency finishes, preemption victims re-enter on cancel — so
 each pass touches only genuinely ready tasks instead of rescanning every
 workflow's whole DAG. Tasks that failed to start are skipped while their
-pool's availability epoch is unchanged (``ClusterManager.free_epoch``): a
-failed ``try_start`` depends only on (impl, pool, n_devices, n_instances,
-tenant) and pool state, so identical-key retries under unchanged state fail
-identically and may be elided without changing the schedule. The seed's
-full rescan survives as ``fast_dispatch=False`` — the reference the
-equivalence tests compare byte-identical traces against.
+pool's availability epoch is unchanged (``ClusterManager.free_epoch``).
+The seed's full rescan survives as ``fast_dispatch=False`` — the reference
+the equivalence tests compare byte-identical traces against.
 """
 from __future__ import annotations
 
-import bisect
 import heapq
-import itertools
 import math
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Iterable, Iterator
+from typing import Iterable, Iterator
 
-from .admission import Admission, ServedLedger, get_policy
+from .admission import get_policy
 from .agents import AgentLibrary
-from .cluster import ClusterManager, Instance, Lease, kv_cache_cap
+from .cluster import ClusterManager, Instance, kv_cache_cap
 from .dag import DAG
-from .energy import CATALOG, EnergyLedger
+from .energy import CATALOG
+from .engine import (Engine, OpenLoopReport, SimReport, Submission,
+                     TraceEntry)
 from .faults import FaultProfile
 from .profiles import CostQuery, ProfileStore
 from .scheduler import ExecutionPlan, TaskConfig
 
+# back-compat alias: the engine class was ``simulator._Engine`` before the
+# package split
+_Engine = Engine
 
-@dataclass(frozen=True)
-class TraceEntry:
-    """One task execution interval in the Fig-3-style trace."""
-
-    workflow: str
-    task: str
-    impl: str
-    pool: str
-    devices: int              # total devices (n_devices * n_instances)
-    start: float
-    end: float
-    note: str = ""
-
-
-@dataclass
-class SimReport:
-    """Aggregate outcome of one simulated run (energy, trace, spans)."""
-
-    makespan_s: float
-    energy_wh: float
-    active_wh: float
-    idle_wh: float
-    usd: float
-    trace: list[TraceEntry]
-    per_workflow: dict[str, dict]
-    pool_busy_device_s: dict[str, float]
-    preemptions: int = 0
-    requeues: int = 0            # task re-executions caused by preemption
-    resumed_items: int = 0       # work-items salvaged by checkpoint/resume
-    wasted_dev_s: float = 0.0    # executed-then-discarded device-seconds
-    # KV/prefix-cache residency (DESIGN.md §9): lookups = session tasks
-    # that could have hit, hits = tasks that started with a warm prefix
-    cache_lookups: int = 0
-    cache_hits: int = 0
-    cache_hit_rate: float = 0.0
-    prefill_tokens_saved: float = 0.0   # un-recomputed prefill tokens
-    # fault injection + recovery (DESIGN.md §10); all zero when faults=None
-    faults_injected: int = 0     # crashes + transient fails + stragglers
-    instance_crashes: int = 0    # crash events that killed a live instance
-    task_faults: int = 0         # transient mid-compute task failures
-    fault_retries: int = 0       # task re-executions after a fault backoff
-    hedges_launched: int = 0     # straggler duplicates started
-    hedges_won: int = 0          # duplicates that beat their primary
-    dead_letters: int = 0        # workflows abandoned (retries exhausted)
-    degrade_replans: int = 0     # replans onto the degraded live cluster
-
-    def workflow_span(self, wf: str) -> float:
-        """Arrival-to-finish seconds for one workflow (tenant latency)."""
-        return self.per_workflow[wf]["finish"] - self.per_workflow[wf]["start"]
-
-
-@dataclass
-class OpenLoopReport(SimReport):
-    """SimReport + steady-state serving metrics from ``run_open_loop``."""
-
-    horizon_s: float = 0.0       # arrival window length
-    warmup_s: float = 0.0        # arrivals before this are trimmed
-    offered_rps: float = 0.0     # arrivals / horizon
-    arrivals: int = 0            # workflows admitted
-    completed: int = 0           # workflows finished
-    measured: int = 0            # completions past warmup (metric base)
-    goodput_rps: float = 0.0     # SLO-met completions / measured seconds
-    per_class: dict = field(default_factory=dict)
-    n_events: int = 0            # heap events processed
-    n_attempts: int = 0          # dispatch attempts (try_start calls)
-    wall_s: float = 0.0
-    events_per_s: float = 0.0    # (n_events + n_attempts) / wall_s
-    scale_actions: list = field(default_factory=list)
-
-
-@dataclass(slots=True)
-class Submission:
-    """One tenant's workflow submission to the multi-tenant engine.
-
-    ``plan`` may be ``None`` with a ``plan_fn`` instead: the engine calls it
-    when the workflow is admitted (its arrival event fires), so scheduling
-    sees the live cluster state. ``slo_s``/``scenario`` feed the open-loop
-    SLO-attainment metrics and are ignored by the closed-loop ``run``.
-    """
-
-    dag: DAG
-    plan: ExecutionPlan | None
-    arrival: float
-    tenant: str = "standard"
-    plan_fn: "Callable[[], ExecutionPlan] | None" = None
-    slo_s: float | None = None
-    scenario: str = ""
-    session: str = ""            # serving-session identity (KV affinity)
-
-
-@dataclass(slots=True)
-class _WfState:
-    dag: DAG
-    plan: ExecutionPlan | None
-    arrival: float
-    tenant: str = "standard"
-    plan_fn: "Callable[[], ExecutionPlan] | None" = None
-    done: set[str] = field(default_factory=set)
-    started: set[str] = field(default_factory=set)
-    finish: float = 0.0
-    attempt: dict[str, int] = field(default_factory=dict)
-    # work-items checkpointed per task: survived preemption, never re-run
-    items_done: dict[str, int] = field(default_factory=dict)
-    slo_s: float | None = None
-    scenario: str = ""
-    session: str = ""
-    # indexed ready set: (topo_rank, task_id), kept sorted by insort
-    ready: list = field(default_factory=list)
-    adm: Admission | None = None
-    sort_key: tuple | None = None     # static-policy dispatch key
-    # fault machinery (inert when faults=None)
-    dead: bool = False                # dead-lettered: retries exhausted
-    fails: dict[str, int] = field(default_factory=dict)   # fault count/task
-
-
-@dataclass(slots=True)
-class _Running:
-    """Book-keeping for an in-flight task (needed to preempt it)."""
-
-    cfg: TaskConfig
-    leases: list[Lease]
-    insts: list[Instance]
-    start: float
-    end: float
-    compute_begin: float      # start + weights-load wall time
-    ndev: int
-    dev_s: float
-    pf: float
-    note: str
-    n_inst: int               # instances actually acquired (may be < plan)
-    batch: int                # effective batch (CPU pools force 1)
-    items_done0: int          # items already checkpointed before this run
-    items_per_inst: int       # the split _duration charged (refund inverts it)
-    resumable: bool           # chunkable: completed steps survive preempt
-    session: str = ""         # serving session the run belongs to
-    cache_frac: float = 0.0   # prefix-cache hit fraction priced into dur
-    slow: float = 1.0         # straggler multiplier on the compute window
-
-
-class _Engine:
-    """One run's event-loop state, shared by ``run`` and ``run_open_loop``.
-
-    The seed kept all of this in closures inside ``run``; hoisting it lets
-    the open-loop mode reuse admission, preemption, dispatch and accounting
-    verbatim (identical float-op order — the golden tests pin it).
-    """
-
-    def __init__(self, sim: "Simulator", pol, log: list | None,
-                 collect_trace: bool = True):
-        self.sim = sim
-        self.cluster = sim.cluster
-        self.pol = pol
-        self.log = log
-        self.collect_trace = collect_trace
-        # hot-path caches: pool -> device spec (device SKUs never change
-        # mid-run; capacities may) and impl name -> "is a model" (vs tool)
-        self.specs = {name: p.spec for name, p in sim.cluster.pools.items()}
-        self.impls = sim.library.impls
-        self.is_model = {name: sim._is_model(impl)
-                         for name, impl in sim.library.impls.items()}
-        self.wfs: dict[str, _WfState] = {}
-        self.ledger = EnergyLedger()
-        self.served = ServedLedger()
-        self.preempt0 = sim.cluster.preemptions
-        self.trace: list[TraceEntry] = []
-        self.busy: dict[str, float] = {}
-        self.running: dict[tuple[str, str], _Running] = {}
-        self.lease_owner: dict[int, tuple[str, str]] = {}
-        self.requeues = 0
-        self.resumed_items = 0
-        self.wasted_dev_s = 0.0
-        # fault injection + recovery (DESIGN.md §10). ``faults`` is None on
-        # a fault-free run: every fault path below is gated on it, so the
-        # event heap, float-op order and counters stay byte-identical.
-        self.faults: FaultProfile | None = sim.faults
-        self.retry = sim.faults.retry if sim.faults is not None else None
-        self.hedges: dict[tuple[str, str], _Running] = {}
-        self._pool_rng: dict = {}        # pool -> crash-process generator
-        self.incomplete = 0              # live (not finished/dead) workflows
-        self.faults_injected = 0
-        self.instance_crashes = 0
-        self.task_faults = 0
-        self.fault_retries = 0
-        self.hedges_launched = 0
-        self.hedges_won = 0
-        self.dead_letters = 0
-        self.degrade_replans = 0
-        # KV/prefix-cache counters (DESIGN.md §9)
-        self.cache_lookups = 0
-        self.cache_hits = 0
-        self.prefill_tokens_saved = 0.0
-        self.events: list[tuple[float, int, str, object]] = []
-        self.ctr = itertools.count()
-        self.t = 0.0
-        self.n_events = 0
-        self.n_attempts = 0
-        # dispatch-order index over admitted, incomplete workflows:
-        # static policies keep a key-sorted list (keys are immutable
-        # admission facts); weighted-fair re-sorts per pass (virtual time
-        # moves between passes)
-        self.active: list[tuple[tuple, str]] = []    # static: (key, wid)
-        self.active_dyn: list[str] = []              # dynamic: wids
-        # static policies only: the subset of ``active`` whose ready set is
-        # nonempty, kept key-sorted — dispatch passes iterate this instead
-        # of filtering every active workflow (invariant: (key, wid) here
-        # ⟺ wfs[wid].ready nonempty)
-        self.active_ready: list[tuple[tuple, str]] = []
-        # blocked-group memo: (impl, pool, n_devices, n_instances, tenant)
-        # -> pool free_epoch at last failed attempt. Skip while unchanged.
-        self.blocked: dict[tuple, int] = {}
-        # root (topo_rank, tid) pairs per distinct DAG object (id-keyed;
-        # the DAGs are kept alive by wfs entries)
-        self._roots: dict[int, list] = {}
-
-    # -- submissions / admission ------------------------------------------------
-    def add_submission(self, wid: str, sub: Submission):
-        """Queue a workflow's arrival event."""
-        self.wfs[wid] = _WfState(sub.dag, sub.plan, sub.arrival, sub.tenant,
-                                 sub.plan_fn, slo_s=sub.slo_s,
-                                 scenario=sub.scenario, session=sub.session)
-        self.incomplete += 1
-        heapq.heappush(self.events,
-                       (sub.arrival, next(self.ctr), "arrive", wid))
-
-    def admit(self, wid: str):
-        """Arrive event: resolve the plan and index the workflow's roots."""
-        st = self.wfs[wid]
-        if st.plan is None:
-            if st.plan_fn is None:
-                raise ValueError(f"workflow {wid!r} submitted without a "
-                                 f"plan or plan_fn")
-            # admission-time planning: the scheduler sees the live cluster
-            # (warm instances, free devices)
-            st.plan = st.plan_fn()
-        st.adm = Admission(wid, st.tenant, st.arrival)
-        dag = st.dag
-        roots = self._roots.get(id(dag))
-        if roots is None:
-            # open-loop submissions share one DAG per scenario: compute
-            # the root (topo_rank, tid) pairs once per distinct DAG
-            roots = self._roots[id(dag)] = [
-                (dag.topo_index(tid), tid) for tid in dag.topo_order
-                if not dag.nodes[tid].deps]
-        st.ready.extend(roots)
-        if self.pol.dynamic:
-            self.active_dyn.append(wid)
-        else:
-            st.sort_key = self.pol.key(st.adm, self.served.served)
-            bisect.insort(self.active, (st.sort_key, wid))
-            if st.ready:
-                bisect.insort(self.active_ready, (st.sort_key, wid))
-
-    def _deactivate(self, wid: str, st: _WfState):
-        if self.pol.dynamic:
-            self.active_dyn.remove(wid)
-        else:
-            i = bisect.bisect_left(self.active, (st.sort_key, wid))
-            del self.active[i]
-
-    def _push_ready(self, wid: str, st: _WfState, tid: str):
-        if not st.ready and not self.pol.dynamic:
-            bisect.insort(self.active_ready, (st.sort_key, wid))
-        bisect.insort(st.ready, (st.dag.topo_index(tid), tid))
-
-    # -- dispatch candidates -----------------------------------------------------
-    def _ready_scan(self) -> list[tuple[str, str]]:
-        """The seed's full rescan: every workflow, every task, every pass.
-
-        Kept verbatim as the ``fast_dispatch=False`` reference path; the
-        equivalence tests assert the indexed ready-set produces
-        byte-identical traces against this.
-        """
-        out = []
-        t = self.t
-        admitted = [Admission(wid, st.tenant, st.arrival)
-                    for wid, st in self.wfs.items()
-                    if t >= st.arrival and st.plan is not None]
-        for adm in sorted(admitted,
-                          key=lambda a: self.pol.key(a, self.served.served)):
-            st = self.wfs[adm.workflow]
-            for tid in st.dag.topo_order:
-                if tid in st.done or tid in st.started:
-                    continue
-                if all(d in st.done for d in st.dag.nodes[tid].deps):
-                    out.append((adm.workflow, tid))
-        return out
-
-    def _candidates(self) -> list[tuple[str, str]]:
-        """Ready (workflow, task) pairs in admission-policy order, from the
-        incremental index: O(active + ready) instead of O(total tasks)."""
-        out = []
-        wfs = self.wfs
-        if self.pol.dynamic:
-            served = self.served.served
-            # filtering to ready-nonempty before the sort commutes with it
-            order = sorted((w for w in self.active_dyn if wfs[w].ready),
-                           key=lambda w: self.pol.key(wfs[w].adm, served))
-            for wid in order:
-                out.extend((wid, tid) for _, tid in wfs[wid].ready)
-            return out
-        for _, wid in self.active_ready:
-            out.extend((wid, tid) for _, tid in wfs[wid].ready)
-        return out
-
-    def dispatch(self):
-        """Start whatever is ready and fits, repeating while progress."""
-        if not self.sim.fast_dispatch:
-            progress = True
-            while progress:
-                progress = False
-                for wid, tid in self._ready_scan():
-                    self.n_attempts += 1
-                    if self.try_start(wid, tid):
-                        progress = True
-            return
-        cluster = self.cluster
-        epochs = cluster.free_epoch
-        progress = True
-        while progress:
-            progress = False
-            epoch_snap = cluster.epoch_total
-            for wid, tid in self._candidates():
-                st = self.wfs[wid]
-                if tid in st.started or tid in st.done:
-                    continue
-                cfg = st.plan.configs[tid]
-                key = (cfg.impl, cfg.pool, cfg.n_devices, cfg.n_instances,
-                       st.tenant)
-                # a failed start depends only on this key and pool state;
-                # while the pool epoch hasn't moved since the last failure,
-                # a retry fails identically — skip it (DESIGN.md §8)
-                if self.blocked.get(key) == epochs[cfg.pool]:
-                    continue
-                self.n_attempts += 1
-                if self.try_start(wid, tid):
-                    progress = True
-                else:
-                    # record *post*-attempt epoch: a failing attempt may
-                    # itself evict idle instances (bumping the epoch), and
-                    # those evictions don't make this key startable
-                    cfg2 = st.plan.configs[tid]   # degrade may have moved it
-                    key2 = (cfg2.impl, cfg2.pool, cfg2.n_devices,
-                            cfg2.n_instances, st.tenant)
-                    self.blocked[key2] = epochs[cfg2.pool]
-            # a re-scan pass can only start something if availability
-            # moved during this pass (preemption, eviction, release,
-            # harvest supply): every survivor is memoized at the current
-            # epoch, and new ready entries only appear via cancel_task,
-            # which releases (bumping the epoch). No movement ⟹ the next
-            # pass is provably a no-op — skip it.
-            if progress and cluster.epoch_total == epoch_snap:
-                break
-        return
-
-    # -- preemption ---------------------------------------------------------------
-    def cancel_task(self, vwid: str, vtid: str):
-        """Preemption: roll a task back to pending, checkpoint the work
-        already finished (chunkable tasks), refund the unearned energy/$
-        and release whatever it still holds."""
-        t = self.t
-        rec = self.running.pop((vwid, vtid), None)
-        if rec is None:
-            return
-        if self.hedges:
-            # a hedge dies with its primary: any rollback of the primary
-            # also cancels the in-flight duplicate (its work is discarded)
-            self._kill_hedge(vwid, vtid)
-        vst = self.wfs[vwid]
-        vst.started.discard(vtid)
-        self._push_ready(vwid, vst, vtid)
-        vst.attempt[vtid] = vst.attempt.get(vtid, 0) + 1
-        for lease in rec.leases:
-            self.lease_owner.pop(lease.id, None)
-            if self.cluster.lease_active(lease):
-                self.cluster.release(lease, t)
-        for inst in rec.insts:
-            if inst.lease is not None:
-                self.lease_owner.pop(inst.lease.id, None)
-            if inst in self.cluster.instances:
-                self.cluster.evict_instance(inst, t)
-        self._refund(rec, vst, vtid, t)
-        self.requeues += 1
-        if self.collect_trace:
-            self.trace.append(TraceEntry(vwid, vtid, rec.cfg.impl,
-                                         rec.cfg.pool, rec.ndev, rec.start,
-                                         t, note="preempted"))
-        if self.log is not None:
-            kept = vst.items_done.get(vtid, 0)
-            self.log.append(f"[{t:8.1f}s] preempt {vwid}:{vtid} "
-                            f"({rec.ndev}x{rec.cfg.pool}); requeued"
-                            + (f" ({kept} items checkpointed)" if kept
-                               else ""))
-
-    def _refund(self, rec: _Running, vst: _WfState, vtid: str, t: float,
-                salvage: bool = True):
-        """Roll back an interrupted run's energy/$ charge, step-granularly.
-
-        Shared by preemption (``cancel_task``), fault failures
-        (``fail_task``) and hedge cancellation (``_kill_hedge``, with
-        ``salvage=False`` — a losing duplicate's completed steps are
-        discarded, never checkpointed). For a straggling run
-        (``rec.slow != 1.0``) the schedule inversion sees the *unslowed*
-        clock (the schedule charged normal step times; the wall merely
-        stretched), and kept charges scale back up by ``slow`` — so the
-        refund inverts exactly what ``try_start`` billed.
-        """
-        spec = CATALOG[self.cluster.pools[rec.cfg.pool].device]
-        # the charged dev_s covers compute only (weights-load is an
-        # idle-power period), so progress is measured over the compute
-        # window [compute_begin, end] — a victim preempted mid-load
-        # gets a full refund either way
-        window = max(rec.end - rec.compute_begin, 1e-12)
-        elapsed = min(max(t - rec.compute_begin, 0.0), window)
-        # executed device-seconds so far; dev_s spreads uniformly over
-        # the window (paths run concurrently, so the rate is
-        # ndev * paths even when the wall clock is path-multiplied)
-        exec_dev_s = rec.dev_s * (elapsed / window)
-        if salvage and rec.resumable and self.sim.resume:
-            # checkpoint/resume: invert the step schedule over the
-            # compute window — completed batch steps survive, the
-            # in-flight step is discarded
-            impl = self.sim.library.impls[rec.cfg.impl]
-            node = vst.dag.nodes[vtid]
-            work = impl.work_fn(node.tokens_in, node.tokens_out)
-            # the refund inverts the exact schedule _duration charged,
-            # including its prefix-cache discount (rec.cache_frac)
-            sched_elapsed = (elapsed if rec.slow == 1.0
-                             else elapsed / rec.slow)
-            done, wall = self.sim.profiles.completed_items(CostQuery(
-                impl=impl, spec=spec, n_devices=rec.cfg.n_devices,
-                work=work, batch=rec.batch, items=rec.items_per_inst,
-                elapsed_s=sched_elapsed, cache_hit_frac=rec.cache_frac))
-            kept_items = min(done * rec.n_inst,
-                             node.work_items - rec.items_done0)
-            if kept_items:
-                vst.items_done[vtid] = rec.items_done0 + kept_items
-                self.resumed_items += kept_items
-            # step-granular refund: completed steps stay charged (their
-            # items never re-run); the in-flight step is refunded — its
-            # items ride the residual requeue, which re-charges them,
-            # so the task's total charge across attempts is exactly
-            # schedule_latency(total items)
-            kept_dev_s = wall * rec.ndev * rec.cfg.paths
-            if rec.slow != 1.0:
-                kept_dev_s *= rec.slow
-            refund = max(rec.dev_s - kept_dev_s, 0.0)
-            self.wasted_dev_s += max(exec_dev_s - kept_dev_s, 0.0)
-        else:
-            # restart from scratch (non-chunkable / resume disabled /
-            # losing hedge): refund only the unexecuted remainder — the
-            # executed compute stays charged (that energy was really
-            # burned) and is all wasted, since nothing of it survives
-            refund = rec.dev_s * (1.0 - elapsed / window)
-            self.wasted_dev_s += exec_dev_s
-        self.ledger.charge_active(spec, -refund,
-                                  utilization=rec.pf, pool=rec.cfg.pool)
-        self.busy[rec.cfg.pool] = self.busy.get(rec.cfg.pool, 0.0) - refund
-        self.served.charge(vst.tenant, -refund)
-
-    def try_preempt(self, pool: str, n_needed: int) -> bool:
-        """Reclaim harvest-class leases for a priority tenant."""
-        t = self.t
-        deficit = n_needed - self.cluster.free(pool)
-        if deficit <= 0 or self.cluster.harvest_devices(pool) < deficit:
-            return False
-        victims = self.cluster.preempt_harvest(pool, deficit, t)
-        for lease in victims:
-            # idle warm instance on a preempted lease: drop the shell
-            # through the manager's eviction path so its bookkeeping
-            # (instance list + lease table) stays consistent; the lease
-            # itself was already released by preempt_harvest, which
-            # evict_instance tolerates
-            for inst in [i for i in self.cluster.instances
-                         if i.lease is not None
-                         and i.lease.id == lease.id]:
-                self.cluster.evict_instance(inst, t)
-            owner = self.lease_owner.pop(lease.id, None)
-            if owner is not None:
-                if len(owner) == 3:
-                    # ("h", wid, tid): a hedge duplicate lost its devices —
-                    # cancel just the hedge; its primary keeps running
-                    self._kill_hedge(owner[1], owner[2])
-                else:
-                    self.cancel_task(*owner)
-        return bool(victims)
-
-    # -- task start ----------------------------------------------------------------
-    def _alloc_or_evict(self, cluster, cfg, n: int, t: float,
-                        harvest: bool):
-        """Allocate ``n`` devices, evicting idle other-impl warm instances
-        (LRU by warm_since) until the allocation fits or nothing is left."""
-        lease = cluster.alloc(cfg.pool, n, t, harvest=harvest)
-        if lease is None:
-            idle = sorted(
-                (i for i in cluster.instances
-                 if i.pool == cfg.pool and i.busy_until <= t
-                 and i.impl != cfg.impl),
-                key=lambda i: i.warm_since)
-            for victim in idle:
-                cluster.evict_instance(victim, t)
-                lease = cluster.alloc(cfg.pool, n, t, harvest=harvest)
-                if lease is not None:
-                    break
-        return lease
-
-    def _acquire(self, cluster, cfg, t: float, harvest: bool,
-                 insts: list, session: str = "") -> int:
-        """Fill ``insts`` up to ``cfg.n_instances`` — reusing idle warm
-        instances first (first-fit in index order), then provisioning new
-        ones; returns how many were newly provisioned.
-
-        A non-empty ``session`` reorders the warm-reuse scan by resident
-        prefix tokens for that session, descending (stable, so instances
-        with no cache entry keep index order): session affinity prefers the
-        shell whose KV cache already holds the conversation prefix
-        (DESIGN.md §9). With ``session == ""`` the scan is byte-identical
-        to the affinity-less engine.
-        """
-        new_inst = 0
-        need = cfg.n_instances - len(insts)
-        warm = cluster.warm_instances(cfg.impl, cfg.pool, cfg.n_devices)
-        if session:
-            warm = sorted(
-                warm, key=lambda i: -i.cache[session].tokens
-                if session in i.cache else 0)
-        for i in warm:
-            if need <= 0:
-                break
-            if i.busy_until <= t and i not in insts:
-                insts.append(i)
-                need -= 1
-        while len(insts) < cfg.n_instances:
-            lease = self._alloc_or_evict(cluster, cfg, cfg.n_devices, t,
-                                         harvest)
-            if lease is None:
-                break
-            inst = Instance(cfg.impl, cfg.pool, cfg.n_devices,
-                            warm_since=t, lease=lease,
-                            cache_cap_bytes=self.sim._cache_cap(cfg))
-            cluster.add_instance(inst)
-            insts.append(inst)
-            new_inst += 1
-        return new_inst
-
-    def try_start(self, wid: str, tid: str) -> bool:
-        """Start a ready task if its resources fit right now."""
-        t = self.t
-        st = self.wfs[wid]
-        cluster = self.cluster
-        node = st.dag.nodes[tid]
-        cfg = st.plan.configs[tid]
-        impl = self.impls[cfg.impl]
-        spec = self.specs[cfg.pool]
-        harvest = st.tenant == "harvest"
-        priority = st.tenant == "priority"
-        leases: list[Lease] = []
-        insts: list[Instance] = []
-        new_inst = 0
-        # degrade configs planned for a larger cluster (elasticity)
-        cap = cluster.pools[cfg.pool].capacity
-        if cfg.n_devices > cap:
-            if cap < self.sim._pool_limit(cfg.pool):
-                # the pool is autoscaled below its limit right now: wait
-                # for the scale-up instead of permanently degrading the
-                # plan to the shrunken size
-                return False
-            lo = impl.min_devices.get(spec.kind, 1)
-            n = 1
-            while n * 2 <= cap:
-                n *= 2
-            if n < lo:
-                raise RuntimeError(
-                    f"{cfg.impl} needs >= {lo} {spec.kind} devices; "
-                    f"pool {cfg.pool} has {cap}")
-            cfg = cfg.with_(n_devices=n, n_instances=1)
-            # copy-on-write: amortized open-loop submissions share one
-            # template plan per scenario; take a private copy before the
-            # only in-place plan mutation the engine ever performs
-            st.plan = ExecutionPlan(dict(st.plan.configs))
-            st.plan.configs[tid] = cfg
-
-        # KV/prefix cache (DESIGN.md §9): a task is cache-eligible when the
-        # engine models caches, the workflow carries a session and the node
-        # has a session-shared prefix on a KV-tracking impl. The affinity
-        # lever (cache_affinity) only reorders warm-shell reuse — pricing
-        # below uses whatever cache the acquired shells actually hold.
-        session = (st.session if self.sim.kv_cache and st.session
-                   and node.prefix_tokens > 0
-                   and impl.kv_bytes_per_token > 0 else "")
-        if self.is_model[cfg.impl]:
-            affinity = session if self.sim.cache_affinity else ""
-            new_inst = self._acquire(cluster, cfg, t, harvest, insts,
-                                     affinity)
-            if not insts and priority and \
-                    self.try_preempt(cfg.pool, cfg.n_devices):
-                new_inst += self._acquire(cluster, cfg, t, harvest, insts,
-                                          affinity)
-            if not insts:
-                return False
-            for inst in insts:
-                lease = inst.lease
-                if lease is not None and lease.harvest != harvest:
-                    self.sim._relabel_lease(inst, harvest, t)
-            n_inst = len(insts)
-        else:
-            total = cfg.n_devices * cfg.n_instances
-            lease = cluster.alloc(cfg.pool, total, t, harvest=harvest)
-            n_inst = cfg.n_instances
-            if lease is None:
-                lease = self._alloc_or_evict(cluster, cfg, cfg.n_devices,
-                                             t, harvest)
-                n_inst = 1
-                if lease is None and priority and \
-                        self.try_preempt(cfg.pool, cfg.n_devices):
-                    lease = self._alloc_or_evict(cluster, cfg,
-                                                 cfg.n_devices, t, harvest)
-                if lease is None:
-                    return False
-            leases.append(lease)
-
-        items_done = st.items_done.get(tid, 0) if self.sim.resume else 0
-        cache_frac = 0.0
-        if session and insts:
-            self.cache_lookups += 1
-            # every acquired shell must hold the prefix for the discount
-            # to apply to the whole (identically-priced) instance group;
-            # in practice chat turns run on one instance
-            tok = min((inst.cache[session].tokens if session in inst.cache
-                       else 0) for inst in insts)
-            hit_tokens = min(tok, node.prefix_tokens)
-            if hit_tokens > 0 and node.tokens_in > 0:
-                cache_frac = hit_tokens / node.tokens_in
-                self.cache_hits += 1
-                remaining = max(node.work_items - items_done, 0)
-                self.prefill_tokens_saved += hit_tokens * remaining
-                for inst in insts:
-                    cluster.cache_touch(inst, session, t)
-        dur, compute, per_inst = self.sim._duration(node, cfg, n_inst,
-                                                    new_inst, items_done,
-                                                    cache_frac)
-        pmult = cfg.paths if cfg.paths > 1 and not node.chunkable else 1.0
-        dur *= pmult
-        # seeded fault draws (DESIGN.md §10): a pure function of
-        # (seed, wid, tid, attempt), so replay and the fast/reference
-        # dispatch paths see identical fault streams regardless of
-        # dispatch order. All three draws always happen (stream stability).
-        attempt = st.attempt.get(tid, 0)
-        slow, fail_frac = 1.0, 0.0
-        fp = self.faults
-        if fp is not None:
-            u_fail, u_frac, u_strag = fp.task_draws(wid, tid, attempt)
-            if u_fail < fp.task_fail_p:
-                # transient failure somewhere inside the compute window
-                fail_frac = 0.05 + 0.9 * u_frac
-            elif u_strag < fp.straggler_p:
-                slow = fp.straggler_mult
-                self.faults_injected += 1
-        base_dur = dur          # the CostQuery estimate (hedge trigger)
-        if slow != 1.0:
-            extra = compute * (slow - 1.0)
-            compute = compute * slow
-            dur = dur + extra * pmult
-        end = t + dur
-        # the tail of the run is compute; any lead-in is weights load
-        compute_begin = end - compute * pmult
-        for inst in insts:
-            inst.busy_until = end
-        ndev = cfg.n_devices * n_inst
-        dev_s = compute * ndev * cfg.paths
-        pf = self.sim.profiles.power_frac(impl, spec, cfg.n_devices)
-        self.ledger.charge_active(spec, dev_s, utilization=pf,
-                                  pool=cfg.pool)
-        self.busy[cfg.pool] = self.busy.get(cfg.pool, 0.0) + dev_s
-        self.served.charge(st.tenant, dev_s)
-        st.started.add(tid)
-        i = bisect.bisect_left(st.ready, (st.dag.topo_index(tid), tid))
-        if i < len(st.ready) and st.ready[i][1] == tid:
-            del st.ready[i]
-            if not st.ready and not self.pol.dynamic:
-                j = bisect.bisect_left(self.active_ready,
-                                       (st.sort_key, wid))
-                if j < len(self.active_ready) and \
-                        self.active_ready[j][1] == wid:
-                    del self.active_ready[j]
-        # compose the note: restart kind + warmth, so preemption
-        # analysis sees a requeue that also paid a cold weights load
-        # ("requeue+cold") rather than losing the restart cost
-        restart = ("resume" if attempt and items_done else
-                   "requeue" if attempt else "")
-        warmth = "cold" if new_inst else ("warm" if insts else "")
-        if cache_frac > 0.0:
-            # surface the prefix hit in the trace ("warm+kv")
-            warmth = warmth + "+kv" if warmth else "kv"
-        note = (restart + "+" + warmth if restart and warmth
-                else restart or warmth)
-        if slow != 1.0:
-            note = note + "+slow" if note else "slow"
-        for lease in leases:
-            self.lease_owner[lease.id] = (wid, tid)
-        for inst in insts:
-            if inst.lease is not None:
-                self.lease_owner[inst.lease.id] = (wid, tid)
-        self.running[(wid, tid)] = _Running(cfg, leases, insts, t, end,
-                                            compute_begin, ndev, dev_s, pf,
-                                            note, n_inst=n_inst,
-                                            batch=(1 if spec.kind == "cpu"
-                                                   else cfg.batch),
-                                            items_done0=items_done,
-                                            items_per_inst=per_inst,
-                                            resumable=node.chunkable,
-                                            session=session,
-                                            cache_frac=cache_frac,
-                                            slow=slow)
-        if fail_frac:
-            # this attempt dies mid-compute instead of finishing
-            fail_t = compute_begin + (end - compute_begin) * fail_frac
-            heapq.heappush(self.events, (fail_t, next(self.ctr), "tfail",
-                                         (wid, tid, attempt)))
-        else:
-            heapq.heappush(self.events, (end, next(self.ctr), "finish",
-                                         (wid, tid, attempt)))
-            if fp is not None and fp.hedge and slow >= fp.hedge_threshold:
-                # straggler detected against the CostQuery estimate: at
-                # threshold x the estimated duration the task is still
-                # running — launch a duplicate then (first finish wins)
-                heapq.heappush(
-                    self.events,
-                    (t + base_dur * fp.hedge_threshold, next(self.ctr),
-                     "hedge", (wid, tid, attempt)))
-        if self.log is not None:
-            self.log.append(f"[{t:8.1f}s] start {wid}:{tid} on "
-                            f"{ndev}x{cfg.pool} ({cfg.impl})"
-                            + (f" [{restart}]" if restart else ""))
-        return True
-
-    # -- finish -------------------------------------------------------------------
-    def on_finish(self, payload) -> bool:
-        """Finish event; returns True when the whole workflow completed."""
-        wid, tid, attempt = payload
-        st = self.wfs[wid]
-        if st.attempt.get(tid, 0) != attempt:
-            return False    # stale: this execution was preempted
-        rec = self.running.pop((wid, tid))
-        if self.hedges:
-            # the primary beat its duplicate: cancel the hedge, discard
-            # and waste whatever it had executed (first finish wins)
-            self._kill_hedge(wid, tid)
-        return self._complete(wid, tid, st, rec)
-
-    def _complete(self, wid: str, tid: str, st: _WfState,
-                  rec: _Running) -> bool:
-        """Book a finished run (shared by primary finishes and hedge wins).
-
-        For a dead-lettered workflow the run still settles its resources
-        and trace, but spawns no successors and can never count as a
-        workflow completion.
-        """
-        t = self.t
-        cluster = self.cluster
-        st.done.add(tid)
-        if t > st.finish:
-            st.finish = t
-        cluster.complete_task(wid, tid)
-        if rec.slow != 1.0:
-            # a straggler that ran to completion burned ``slow``x the
-            # compute the work required: the excess is overhead of the
-            # fault, booked as waste — the same currency a hedge-beaten
-            # primary's discarded run is booked in, so the fault bench
-            # compares hedging against let-it-drag honestly
-            self.wasted_dev_s += rec.dev_s * (rec.slow - 1.0) / rec.slow
-        cfg = rec.cfg
-        model = self.is_model[cfg.impl]
-        lease_owner = self.lease_owner
-        for lease in rec.leases:
-            # model instances keep their devices (stay warm); tools
-            # release. Instance devices are reclaimed by rebalance.
-            lease_owner.pop(lease.id, None)
-            if not model:
-                cluster.release(lease, t)
-        for inst in rec.insts:
-            if inst.lease is not None:
-                lease_owner.pop(inst.lease.id, None)
-        # session finished a turn on these shells: the full prompt+reply KV
-        # is now resident, serving the *next* turn's prefix (DESIGN.md §9).
-        # Insertion is gated like the pricing above, so cache-less runs
-        # never touch the ledger (byte-identity with the pre-cache engine).
-        if rec.session:
-            node = st.dag.nodes[tid]
-            impl = self.impls[cfg.impl]
-            tokens = node.tokens_in + node.tokens_out
-            nbytes = impl.kv_bytes_per_token * tokens
-            for inst in rec.insts:
-                cluster.cache_insert(inst, rec.session, tokens, nbytes, t)
-        # the task's instances just went idle: blocked tasks keyed on this
-        # pool may now reuse (or evict) them, so the availability epoch
-        # must move even though no lease was released (model path)
-        cluster.free_epoch[cfg.pool] += 1
-        cluster.epoch_total += 1
-        if self.collect_trace:
-            self.trace.append(TraceEntry(wid, tid, rec.cfg.impl,
-                                         rec.cfg.pool, rec.ndev,
-                                         rec.start, t, note=rec.note))
-        tele = self.sim.telemetry
-        if tele is not None:
-            # one record per completed attempt, priced exactly as the
-            # ledger charged it (marginal energy over idle; $ over the full
-            # device-seconds). Pure observation — nothing above read it.
-            node = st.dag.nodes[tid]
-            spec = self.specs[cfg.pool]
-            energy = (rec.dev_s * rec.pf * (spec.active_w - spec.idle_w)
-                      if spec.metered else 0.0)
-            tele.observe(
-                t=t, workflow=wid, task=tid, node=node,
-                interface=node.agent, impl=cfg.impl, pool=cfg.pool,
-                latency_s=t - rec.start, energy_j=energy,
-                usd=rec.dev_s / 3600.0 * spec.usd_per_hour,
-                declared_quality=cfg.quality,
-                routed=node.agent in self.sim.routed_interfaces)
-        # index newly-ready successors (their last dependency just
-        # finished); a dead workflow spawns nothing
-        done = st.done
-        nodes = st.dag.nodes
-        if not st.dead:
-            for succ in st.dag.succ(tid):
-                if succ in done or succ in st.started:
-                    continue
-                if all(d in done for d in nodes[succ].deps):
-                    self._push_ready(wid, st, succ)
-        finished = not st.dead and len(done) == len(nodes)
-        if finished:
-            self._deactivate(wid, st)
-            self.incomplete -= 1
-        # workflow-aware reclamation once demand disappears. Gated on the
-        # demand-hit-zero flag: rebalance can only newly reclaim at the
-        # instant some interface's pending count reaches 0 (an interface
-        # with zero demand has no running tasks either, so its instances
-        # were all idle — and evicted — the moment it zeroed), which makes
-        # skipping the other calls a pure no-op elision.
-        if self.cluster.demand_zeroed:
-            self.cluster.demand_zeroed = False
-            for action in self.cluster.rebalance(self.sim.library, t):
-                if self.log is not None:
-                    self.log.append(f"[{t:8.1f}s] rebalance: {action}")
-        return finished
-
-    # -- fault injection + recovery (DESIGN.md §10) -----------------------------
-    def seed_faults(self):
-        """Arm the per-pool crash processes (called once, at run start)."""
-        fp = self.faults
-        fp.validate_pools(self.cluster.pools)
-        # crash-shrunk pools must make over-sized plans *wait* for repair,
-        # not permanently degrade them: remember the nominal capacities as
-        # the no-autoscaler pool limit (Simulator._pool_limit)
-        self.sim._nominal_caps = {name: p.capacity
-                                  for name, p in self.cluster.pools.items()}
-        for pool in sorted(fp.instance_mtbf_s):
-            rng = self._pool_rng[pool] = fp.pool_stream(pool)
-            gap = rng.expovariate(1.0 / fp.instance_mtbf_s[pool])
-            heapq.heappush(self.events,
-                           (gap, next(self.ctr), "crash", pool))
-
-    def on_fault_event(self, kind: str, payload) -> None:
-        """Dispatch one fault-machinery heap event."""
-        if kind == "crash":
-            self.on_crash(payload)
-        elif kind == "repair":
-            self.on_repair(payload)
-        elif kind == "tfail":
-            wid, tid, attempt = payload
-            self.fail_task(wid, tid, attempt, "fault")
-        elif kind == "retry":
-            self.on_retry(payload)
-        elif kind == "hedge":
-            self.on_hedge(payload)
-        elif kind == "hfinish":
-            self.on_hfinish(payload)
-        else:
-            raise RuntimeError(f"unknown event kind {kind!r}")
-
-    def fail_task(self, wid: str, tid: str, t_attempt: int, reason: str,
-                  crashed: Instance | None = None):
-        """A running task just failed (transient fault or instance crash).
-
-        Like ``cancel_task``, but: surviving shells go *idle* instead of
-        being evicted (the software failed, not the hardware), the failure
-        counts against the workflow's retry budget, and the task re-queues
-        only after a seeded exponential backoff (the retry event) — or the
-        workflow dead-letters once the budget is exhausted. Chunkable tasks
-        checkpoint their completed steps through the same ``_refund``
-        inversion preemption uses, so a retry resumes from ``items_done``.
-        """
-        st = self.wfs[wid]
-        if st.attempt.get(tid, 0) != t_attempt:
-            return                      # stale: that execution already ended
-        rec = self.running.pop((wid, tid), None)
-        if rec is None:
-            return
-        t = self.t
-        if self.hedges:
-            self._kill_hedge(wid, tid)  # a hedge dies with its primary
-        st.started.discard(tid)
-        st.attempt[tid] = t_attempt + 1
-        for lease in rec.leases:
-            self.lease_owner.pop(lease.id, None)
-            if self.cluster.lease_active(lease):
-                self.cluster.release(lease, t)
-        for inst in rec.insts:
-            if inst.lease is not None:
-                self.lease_owner.pop(inst.lease.id, None)
-            if inst is crashed or inst not in self.cluster.instances:
-                continue
-            inst.busy_until = t         # surviving shells idle immediately
-        if rec.insts:
-            # availability moved (shells idled / died): wake blocked keys
-            self.cluster.free_epoch[rec.cfg.pool] += 1
-            self.cluster.epoch_total += 1
-        self._refund(rec, st, tid, t)
-        self.faults_injected += 1
-        if reason == "fault":
-            self.task_faults += 1
-        if self.collect_trace:
-            self.trace.append(TraceEntry(
-                wid, tid, rec.cfg.impl, rec.cfg.pool, rec.ndev, rec.start,
-                t, note=("crashed" if reason == "crash" else "failed")))
-        if st.dead:
-            return      # already dead-lettered: this run just settled
-        fails = st.fails.get(tid, 0) + 1
-        st.fails[tid] = fails
-        if fails >= self.retry.attempts_for(st.tenant):
-            if self.log is not None:
-                self.log.append(f"[{t:8.1f}s] {reason} {wid}:{tid} "
-                                f"(attempt {fails}); retries exhausted")
-            self._dead_letter(wid, st)
-            return
-        delay = self.retry.backoff_s(
-            fails, self.faults.retry_jitter(wid, tid, fails))
-        heapq.heappush(self.events,
-                       (t + delay, next(self.ctr), "retry",
-                        (wid, tid, fails)))
-        if self.log is not None:
-            self.log.append(f"[{t:8.1f}s] {reason} {wid}:{tid} "
-                            f"(attempt {fails}); retry in {delay:.1f}s")
-
-    def _dead_letter(self, wid: str, st: _WfState):
-        """Abandon a workflow whose task exhausted its retry budget."""
-        self.dead_letters += 1
-        st.dead = True
-        if st.ready and not self.pol.dynamic:
-            j = bisect.bisect_left(self.active_ready, (st.sort_key, wid))
-            if j < len(self.active_ready) and \
-                    self.active_ready[j][1] == wid:
-                del self.active_ready[j]
-        st.ready.clear()
-        self._deactivate(wid, st)
-        # its unfinished tasks are no longer upcoming demand
-        self.cluster.abandon_workflow(wid)
-        self.incomplete -= 1
-        if self.log is not None:
-            self.log.append(f"[{self.t:8.1f}s] dead-letter {wid} "
-                            f"({st.tenant})")
-
-    def on_crash(self, pool: str):
-        """Exponential-MTBF instance crash on ``pool``.
-
-        The victim dies through ``evict_instance`` — its lease is released
-        and its KV/prefix entries die with the shell — and the crashed
-        device group leaves the pool's capacity until a seeded repair
-        restores it (the autoscaler may backfill sooner). The draws happen
-        unconditionally so the crash clock is a pure function of the seed,
-        whatever the cluster looks like when it fires.
-        """
-        fp = self.faults
-        rng = self._pool_rng[pool]
-        u_victim = rng.random()
-        gap = rng.expovariate(1.0 / fp.instance_mtbf_s[pool])
-        repair = rng.expovariate(1.0 / fp.repair_s)
-        if self.incomplete <= 0:
-            return      # run drained: stop the crash process
-        t = self.t
-        live = [i for i in self.cluster.instances if i.pool == pool]
-        if live:
-            victim = live[min(int(u_victim * len(live)), len(live) - 1)]
-            self.instance_crashes += 1
-            lease = victim.lease
-            owner = (self.lease_owner.pop(lease.id, None)
-                     if lease is not None else None)
-            n = victim.n_devices
-            self.cluster.evict_instance(victim, t)
-            cap = self.cluster.pools[pool].capacity
-            self.cluster.set_capacity(pool, cap - n, t)
-            heapq.heappush(self.events,
-                           (t + repair, next(self.ctr), "repair",
-                            (pool, n)))
-            if self.log is not None:
-                self.log.append(f"[{t:8.1f}s] crash {victim.impl} "
-                                f"({n}x{pool}); repair in {repair:.0f}s")
-            if owner is None:
-                self.faults_injected += 1   # idle shell (KV died with it)
-            elif len(owner) == 3:
-                self.faults_injected += 1
-                self._kill_hedge(owner[1], owner[2])
-            else:
-                wid, tid = owner
-                self.fail_task(wid, tid,
-                               self.wfs[wid].attempt.get(tid, 0),
-                               "crash", crashed=victim)
-        if self.incomplete > 0:
-            heapq.heappush(self.events,
-                           (t + gap, next(self.ctr), "crash", pool))
-
-    def on_repair(self, payload):
-        """Restore a crashed device group's capacity (clamped to the pool
-        limit, so an autoscaler keeps authority over the final size)."""
-        pool, n = payload
-        cap = self.cluster.pools[pool].capacity
-        new_cap = min(cap + n, self.sim._pool_limit(pool))
-        if new_cap > cap:
-            self.cluster.set_capacity(pool, new_cap, self.t)
-            if self.log is not None:
-                self.log.append(f"[{self.t:8.1f}s] repair +{n}x{pool}")
-
-    def on_retry(self, payload):
-        """Backoff elapsed: requeue the failed task (maybe replanned)."""
-        wid, tid, fails = payload
-        st = self.wfs.get(wid)
-        if st is None or st.dead or st.fails.get(tid, 0) != fails:
-            return
-        if tid in st.done or tid in st.started:
-            return
-        self.fault_retries += 1
-        rp = self.retry
-        if rp.replan_after > 0 and fails >= rp.replan_after \
-                and st.plan_fn is not None:
-            # graceful degradation: under retry pressure, replan the
-            # workflow's remaining tasks against the *live* (possibly
-            # capacity-degraded) cluster — the planner picks a cheaper
-            # impl/config within the quality floor if the original no
-            # longer fits well
-            self._degrade_replan(wid, st)
-        self._push_ready(wid, st, tid)
-        if self.log is not None:
-            self.log.append(f"[{self.t:8.1f}s] retry {wid}:{tid} "
-                            f"(failure {fails})")
-
-    def _degrade_replan(self, wid: str, st: _WfState):
-        """Re-plan remaining tasks on the degraded cluster (copy-on-write)."""
-        try:
-            fresh = st.plan_fn()
-        except Exception:
-            return                      # planning may fail mid-degradation
-        cfgs = dict(st.plan.configs)
-        changed = False
-        for tid, cfg in fresh.configs.items():
-            if tid in st.done or tid in st.started:
-                continue                # only not-yet-run tasks may move
-            if cfgs.get(tid) != cfg:
-                cfgs[tid] = cfg
-                changed = True
-        if changed:
-            st.plan = ExecutionPlan(cfgs)
-            self.degrade_replans += 1
-            if self.log is not None:
-                self.log.append(f"[{self.t:8.1f}s] degrade-replan {wid}")
-
-    def on_hedge(self, payload):
-        """Straggler-detection event: the task has now run for
-        ``hedge_threshold x`` its estimate — launch a duplicate if it is
-        still running and resources fit."""
-        wid, tid, attempt = payload
-        st = self.wfs.get(wid)
-        if st is None or st.dead or st.attempt.get(tid, 0) != attempt:
-            return
-        rec = self.running.get((wid, tid))
-        if rec is None or (wid, tid) in self.hedges:
-            return
-        self._start_hedge(wid, tid, attempt, st, rec)
-
-    def _start_hedge(self, wid: str, tid: str, attempt: int,
-                     st: _WfState, rec: _Running):
-        """Duplicate a straggling run on other shells (first finish wins).
-
-        Hedges are opportunistic: they use genuinely free capacity only —
-        no eviction, no preemption — and are themselves preemptible and
-        crash-prone, but never straggle or fault (one level of recursion
-        is enough). The duplicate prices the same residual the primary
-        did (``items_done0``), sessionless (its shells hold no prefix).
-        """
-        t = self.t
-        cluster = self.cluster
-        cfg = rec.cfg
-        node = st.dag.nodes[tid]
-        impl = self.impls[cfg.impl]
-        spec = self.specs[cfg.pool]
-        harvest = st.tenant == "harvest"
-        leases: list[Lease] = []
-        insts: list[Instance] = []
-        new_inst = 0
-        if self.is_model[cfg.impl]:
-            for i in cluster.warm_instances(cfg.impl, cfg.pool,
-                                            cfg.n_devices):
-                if len(insts) >= rec.n_inst:
-                    break
-                if i.busy_until <= t and i not in rec.insts:
-                    insts.append(i)
-            provisioned = []
-            while len(insts) < rec.n_inst:
-                lease = cluster.alloc(cfg.pool, cfg.n_devices, t,
-                                      harvest=harvest)
-                if lease is None:
-                    break
-                inst = Instance(cfg.impl, cfg.pool, cfg.n_devices,
-                                warm_since=t, lease=lease,
-                                cache_cap_bytes=self.sim._cache_cap(cfg))
-                cluster.add_instance(inst)
-                insts.append(inst)
-                provisioned.append(inst)
-                new_inst += 1
-            if len(insts) < rec.n_inst:
-                for inst in provisioned:    # couldn't fit: roll back
-                    cluster.evict_instance(inst, t)
-                return
-        else:
-            lease = cluster.alloc(cfg.pool, cfg.n_devices * rec.n_inst, t,
-                                  harvest=harvest)
-            if lease is None:
-                return
-            leases.append(lease)
-        n_inst = rec.n_inst
-        dur, compute, per_inst = self.sim._duration(
-            node, cfg, n_inst, new_inst, rec.items_done0, 0.0)
-        pmult = cfg.paths if cfg.paths > 1 and not node.chunkable else 1.0
-        dur *= pmult
-        end = t + dur
-        compute_begin = end - compute * pmult
-        for inst in insts:
-            inst.busy_until = end
-        ndev = cfg.n_devices * n_inst
-        dev_s = compute * ndev * cfg.paths
-        pf = self.sim.profiles.power_frac(impl, spec, cfg.n_devices)
-        self.ledger.charge_active(spec, dev_s, utilization=pf,
-                                  pool=cfg.pool)
-        self.busy[cfg.pool] = self.busy.get(cfg.pool, 0.0) + dev_s
-        self.served.charge(st.tenant, dev_s)
-        howner = ("h", wid, tid)
-        for lease in leases:
-            self.lease_owner[lease.id] = howner
-        for inst in insts:
-            if inst.lease is not None:
-                self.lease_owner[inst.lease.id] = howner
-        self.hedges[(wid, tid)] = _Running(
-            cfg, leases, insts, t, end, compute_begin, ndev, dev_s, pf,
-            note="hedge+" + ("cold" if new_inst else "warm"),
-            n_inst=n_inst, batch=(1 if spec.kind == "cpu" else cfg.batch),
-            items_done0=rec.items_done0, items_per_inst=per_inst,
-            resumable=node.chunkable)
-        self.hedges_launched += 1
-        heapq.heappush(self.events, (end, next(self.ctr), "hfinish",
-                                     (wid, tid, attempt)))
-        if self.log is not None:
-            self.log.append(f"[{t:8.1f}s] hedge {wid}:{tid} on "
-                            f"{ndev}x{cfg.pool} (primary "
-                            f"{rec.slow:.1f}x slow)")
-
-    def _kill_hedge(self, wid: str, tid: str):
-        """Cancel an in-flight hedge; its executed work is discarded."""
-        hrec = self.hedges.pop((wid, tid), None)
-        if hrec is None:
-            return
-        t = self.t
-        for lease in hrec.leases:
-            self.lease_owner.pop(lease.id, None)
-            if self.cluster.lease_active(lease):
-                self.cluster.release(lease, t)
-        for inst in hrec.insts:
-            if inst.lease is not None:
-                self.lease_owner.pop(inst.lease.id, None)
-            if inst in self.cluster.instances:
-                inst.busy_until = t
-        if hrec.insts:
-            self.cluster.free_epoch[hrec.cfg.pool] += 1
-            self.cluster.epoch_total += 1
-        # salvage=False: the loser's completed steps don't checkpoint (the
-        # winner runs the full residual itself — crediting both would
-        # double-count items), so executed = wasted, unexecuted = refunded
-        self._refund(hrec, self.wfs[wid], tid, t, salvage=False)
-        if self.collect_trace:
-            self.trace.append(TraceEntry(
-                wid, tid, hrec.cfg.impl, hrec.cfg.pool, hrec.ndev,
-                hrec.start, t, note="hedge_lost"))
-
-    def on_hfinish(self, payload):
-        """A hedge finished first: cancel the straggling primary and
-        complete the task through the duplicate's run."""
-        wid, tid, attempt = payload
-        hrec = self.hedges.get((wid, tid))
-        st = self.wfs.get(wid)
-        if hrec is None or st is None or \
-                st.attempt.get(tid, 0) != attempt:
-            return
-        del self.hedges[(wid, tid)]
-        t = self.t
-        prec = self.running.pop((wid, tid), None)
-        if prec is not None:
-            # invalidate the primary's in-flight finish event
-            st.attempt[tid] = attempt + 1
-            for lease in prec.leases:
-                self.lease_owner.pop(lease.id, None)
-                if self.cluster.lease_active(lease):
-                    self.cluster.release(lease, t)
-            for inst in prec.insts:
-                if inst.lease is not None:
-                    self.lease_owner.pop(inst.lease.id, None)
-                if inst in self.cluster.instances:
-                    inst.busy_until = t
-            if prec.insts:
-                self.cluster.free_epoch[prec.cfg.pool] += 1
-                self.cluster.epoch_total += 1
-            self._refund(prec, st, tid, t, salvage=False)
-            if self.collect_trace:
-                self.trace.append(TraceEntry(
-                    wid, tid, prec.cfg.impl, prec.cfg.pool, prec.ndev,
-                    prec.start, t, note="hedge_beat_primary"))
-        self.hedges_won += 1
-        self._complete(wid, tid, st, hrec)
-
-    # -- accounting ---------------------------------------------------------------
-    def finalize(self, makespan: float):
-        """Integrate the idle-power floor over each pool's capacity log."""
-        for pool, p in self.cluster.pools.items():
-            spec = p.spec
-            log = self.cluster.capacity_log(pool)
-            if len(log) == 1:
-                # constant capacity: the seed's exact expression (golden
-                # traces pin the float op order)
-                self.ledger.charge_idle(spec, p.capacity, makespan)
-            else:
-                dev_s = self.cluster.capacity_device_seconds(pool, makespan)
-                self.ledger.charge_idle(spec, 1, dev_s)
-
-    def report(self, makespan: float) -> SimReport:
-        per_wf = {wid: {"start": st.arrival, "finish": st.finish,
-                        "tasks": len(st.dag), "tenant": st.tenant}
-                  for wid, st in self.wfs.items()}
-        return SimReport(
-            makespan_s=makespan,
-            energy_wh=self.ledger.wh,
-            active_wh=self.ledger.active_joules / 3600.0,
-            idle_wh=self.ledger.idle_joules / 3600.0,
-            usd=self.ledger.usd,
-            trace=sorted(self.trace,
-                         key=lambda e: (e.start, e.end, e.workflow)),
-            per_workflow=per_wf,
-            pool_busy_device_s=self.busy,
-            preemptions=self.cluster.preemptions - self.preempt0,
-            requeues=self.requeues,
-            resumed_items=self.resumed_items,
-            wasted_dev_s=self.wasted_dev_s,
-            cache_lookups=self.cache_lookups,
-            cache_hits=self.cache_hits,
-            cache_hit_rate=(self.cache_hits / self.cache_lookups
-                            if self.cache_lookups else 0.0),
-            prefill_tokens_saved=self.prefill_tokens_saved,
-            faults_injected=self.faults_injected,
-            instance_crashes=self.instance_crashes,
-            task_faults=self.task_faults,
-            fault_retries=self.fault_retries,
-            hedges_launched=self.hedges_launched,
-            hedges_won=self.hedges_won,
-            dead_letters=self.dead_letters,
-            degrade_replans=self.degrade_replans,
-        )
+__all__ = [
+    "OpenLoopReport", "SimReport", "Simulator", "Submission", "TraceEntry",
+    "render_trace",
+]
 
 
 class Simulator:
@@ -1483,7 +207,7 @@ class Simulator:
         ``log`` collects human-readable event lines when provided.
         """
         pol = get_policy(policy)
-        eng = _Engine(self, pol, log)
+        eng = Engine(self, pol, log)
         for wid, sub in workflows.items():
             if not isinstance(sub, Submission):
                 dag, plan, arrival = sub
@@ -1493,31 +217,8 @@ class Simulator:
             self.cluster.register_workflow(wid, st.dag)
         if self.faults is not None:
             eng.seed_faults()
-
-        events = eng.events
         try:
-            while events:
-                t, _, kind, payload = heapq.heappop(events)
-                eng.t = t
-                # drain every event sharing this timestamp before
-                # dispatching: simultaneous arrivals are all admitted (and
-                # planned) before any of them starts work, so
-                # admission-policy order holds for same-time tenants and
-                # identical tenants admitted into the same cluster state
-                # share one plan via the plan cache.
-                batch = [(kind, payload)]
-                while events and events[0][0] == t:
-                    _, _, k, p = heapq.heappop(events)
-                    batch.append((k, p))
-                eng.n_events += len(batch)
-                for kind, payload in batch:
-                    if kind == "arrive":
-                        eng.admit(payload)
-                    elif kind == "finish":
-                        eng.on_finish(payload)
-                    else:
-                        eng.on_fault_event(kind, payload)
-                eng.dispatch()
+            eng.loop_closed()
         finally:
             self._nominal_caps = {}
 
@@ -1565,7 +266,7 @@ class Simulator:
         """
         wall0 = time.perf_counter()
         pol = get_policy(policy)
-        eng = _Engine(self, pol, log, collect_trace=collect_trace)
+        eng = Engine(self, pol, log, collect_trace=collect_trace)
         stream: Iterator[tuple[str, Submission]] = iter(source)
         arrivals = 0
         last_arrival = 0.0
@@ -1604,56 +305,8 @@ class Simulator:
                            (autoscaler.interval_s, next(eng.ctr),
                             "scale", None))
         scale_actions: list[tuple] = []
-        events = eng.events
-        heappop = heapq.heappop
         try:
-            while events:
-                t, _, kind, payload = heappop(events)
-                eng.t = t
-                n = 1
-                # drain every same-t event (including ones the handlers
-                # chain in: zero-lag applies, same-t arrivals pulled from
-                # the stream) before dispatching once for the timestamp.
-                # Same-t events pop in push-counter order, so handling
-                # them as they pop matches handling them as a batch.
-                while True:
-                    if kind == "arrive":
-                        eng.admit(payload)
-                        # keep exactly one future arrival in the heap
-                        self.cluster.register_workflow(
-                            payload, eng.wfs[payload].dag)
-                        _pull()
-                    elif kind == "finish":
-                        eng.on_finish(payload)
-                    elif kind == "scale":
-                        for act in autoscaler.decide(
-                                self.cluster, self._demand_by_pool(eng), t):
-                            if act.lag_s > 0:
-                                heapq.heappush(
-                                    events, (t + act.lag_s, next(eng.ctr),
-                                             "scale_apply", act))
-                            else:
-                                autoscaler.apply(self.cluster, act, t)
-                                scale_actions.append(
-                                    (t, act.pool, act.capacity))
-                        if events or eng.running or \
-                                any(st.ready for st in eng.wfs.values()):
-                            heapq.heappush(
-                                events, (t + autoscaler.interval_s,
-                                         next(eng.ctr), "scale", None))
-                    elif kind == "scale_apply":
-                        autoscaler.apply(self.cluster, payload, t)
-                        scale_actions.append(
-                            (t, payload.pool, payload.capacity))
-                    else:
-                        eng.on_fault_event(kind, payload)
-                    if events and events[0][0] == t:
-                        _, _, kind, payload = heappop(events)
-                        n += 1
-                    else:
-                        break
-                eng.n_events += n
-                eng.dispatch()
+            eng.loop_open(_pull, autoscaler, scale_actions)
         finally:
             self._scale_limits = {}
             self._nominal_caps = {}
@@ -1664,102 +317,8 @@ class Simulator:
         eng.finalize(makespan)
         rep = eng.report(makespan)
         wall = time.perf_counter() - wall0
-        return self._steady_state(rep, eng, horizon_s, warmup_s, arrivals,
-                                  wall, scale_actions)
-
-    def _demand_by_pool(self, eng: _Engine) -> dict[str, int]:
-        """Devices wanted right now per pool: held + queued (ready) work."""
-        demand = dict(self.cluster._used)
-        for st in eng.wfs.values():
-            if st.plan is None:
-                continue
-            for _, tid in st.ready:
-                cfg = st.plan.configs[tid]
-                demand[cfg.pool] = demand.get(cfg.pool, 0) + \
-                    cfg.n_devices * cfg.n_instances
-        return demand
-
-    def _steady_state(self, rep: SimReport, eng: _Engine, horizon_s: float,
-                      warmup_s: float, arrivals: int, wall: float,
-                      scale_actions: list) -> OpenLoopReport:
-        """Fold steady-state serving metrics into an OpenLoopReport."""
-        completed = 0
-        per_class: dict[str, dict] = {}
-        spans: dict[str, list[float]] = {}
-        met: dict[str, int] = {}
-        # dead-lettered workflows per tenant (post-warmup): they count
-        # against SLO attainment — an abandoned request is a missed SLO,
-        # not a dropped sample — but contribute no latency span
-        dead: dict[str, int] = {}
-        measured = 0
-        goodput_n = 0
-        for wid, st in eng.wfs.items():
-            done = len(st.done) == len(st.dag.nodes)
-            if done:
-                completed += 1
-            if st.arrival < warmup_s:
-                continue
-            if st.dead:
-                measured += 1
-                dead[st.tenant] = dead.get(st.tenant, 0) + 1
-                continue
-            if not done:
-                continue
-            measured += 1
-            span = st.finish - st.arrival
-            spans.setdefault(st.tenant, []).append(span)
-            if st.slo_s is not None:
-                ok = span <= st.slo_s
-                met[st.tenant] = met.get(st.tenant, 0) + (1 if ok else 0)
-                if ok:
-                    goodput_n += 1
-        for tenant, ss in sorted(spans.items()):
-            ss.sort()
-            n = len(ss)
-            per_class[tenant] = {
-                "n": n,
-                "p50_s": ss[int(0.50 * (n - 1))],
-                "p95_s": ss[int(0.95 * (n - 1))],
-                "p99_s": ss[int(0.99 * (n - 1))],
-                "mean_s": sum(ss) / n,
-                "dead": dead.get(tenant, 0),
-                "slo_attainment": (
-                    met[tenant] / (n + dead.get(tenant, 0))
-                    if tenant in met else None),
-            }
-        for tenant, n_dead in sorted(dead.items()):
-            if tenant not in per_class:
-                # every post-warmup workflow of this class dead-lettered
-                per_class[tenant] = {
-                    "n": 0, "p50_s": 0.0, "p95_s": 0.0, "p99_s": 0.0,
-                    "mean_s": 0.0, "dead": n_dead, "slo_attainment": 0.0,
-                }
-        elapsed = max(rep.makespan_s - warmup_s, 1e-9)
-        n_ev = eng.n_events + eng.n_attempts
-        return OpenLoopReport(
-            **{f: getattr(rep, f) for f in (
-                "makespan_s", "energy_wh", "active_wh", "idle_wh", "usd",
-                "trace", "per_workflow", "pool_busy_device_s",
-                "preemptions", "requeues", "resumed_items", "wasted_dev_s",
-                "cache_lookups", "cache_hits", "cache_hit_rate",
-                "prefill_tokens_saved", "faults_injected",
-                "instance_crashes", "task_faults", "fault_retries",
-                "hedges_launched", "hedges_won", "dead_letters",
-                "degrade_replans")},
-            horizon_s=horizon_s,
-            warmup_s=warmup_s,
-            offered_rps=arrivals / max(horizon_s, 1e-9),
-            arrivals=arrivals,
-            completed=completed,
-            measured=measured,
-            goodput_rps=goodput_n / elapsed,
-            per_class=per_class,
-            n_events=eng.n_events,
-            n_attempts=eng.n_attempts,
-            wall_s=wall,
-            events_per_s=n_ev / max(wall, 1e-9),
-            scale_actions=scale_actions,
-        )
+        return eng.steady_state(rep, horizon_s, warmup_s, arrivals, wall,
+                                scale_actions)
 
     def _relabel_lease(self, inst: Instance, harvest: bool, t: float):
         """Keep an instance lease's preemptibility in sync with the tenant

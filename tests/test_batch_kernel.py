@@ -1,0 +1,190 @@
+"""Vectorized pricing kernel (DESIGN.md §12): ``step_latency_batch`` /
+``schedule_latency_batch`` must be *bitwise*-identical to mapping the
+scalar path — the memo they feed is the same memo ``Simulator._duration``
+and ``Scheduler.estimate`` read, so any ULP drift would fork estimates
+from actuals. Every equality below is ``==``, never approx."""
+import warnings
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.core.profiles as profiles_mod
+from repro.core import CATALOG, Murakkab, Work
+from repro.core.profiles import CostQuery
+
+V5E = CATALOG["tpu-v5e"]
+CPU = CATALOG["epyc-7v12-core"]     # link_bw == 0: the masked-lane regime
+
+
+def _system():
+    return Murakkab.tpu_cluster()
+
+
+def _queries(impl, work, spec=V5E, *, counts=(1, 2, 4), batches=(1, 3, 8),
+             items=17):
+    return [CostQuery(impl=impl, spec=spec, n_devices=n, work=work,
+                      batch=b, items=items)
+            for n in counts for b in batches]
+
+
+def _check_step_identity(prof, queries):
+    """Batch result == scalar result, element by element, bit for bit."""
+    got = prof.step_latency_batch(queries)
+    prof.cache_reset()
+    want = [prof.step_latency(q) for q in queries]
+    assert got == want     # exact: same floats, not approx
+    return got
+
+
+# -- the four pricing regimes -------------------------------------------------
+
+
+def test_analytic_phased_regime_bitwise_identical():
+    """Prefill/decode-split works: the numpy roofline lanes match scalar."""
+    sys_ = _system()
+    impl = sys_.library.impls["gemma2-9b"]
+    _check_step_identity(sys_.profiles, _queries(impl, impl.work_fn(700, 90)))
+
+
+def test_analytic_alpha_regime_bitwise_identical():
+    """Phase-less works: vectorized roofline base, scalar ``b ** alpha``."""
+    sys_ = _system()
+    impl = sys_.library.impls["dense-retrieval"]
+    work = impl.work_fn(700, 90)
+    assert not work.has_phases
+    _check_step_identity(sys_.profiles, _queries(impl, work))
+
+
+def test_pinned_curve_regime_bitwise_identical():
+    """Measured curves stay on the scalar path (log-log interp is libm)."""
+    sys_ = _system()
+    impl = sys_.library.impls["gemma2-9b"]
+    sys_.profiles.pin("gemma2-9b", V5E.name, 4,
+                      {1: 0.9, 8: 0.2, 64: 0.12})
+    _check_step_identity(sys_.profiles, _queries(impl, impl.work_fn(700, 90),
+                                                 counts=(2, 4, 8)))
+
+
+def test_pinned_single_point_regime_warns_and_matches():
+    """Single-point pins: alpha fallback, one deprecation warning, equal."""
+    sys_ = _system()
+    impl = sys_.library.impls["gemma2-9b"]
+    sys_.profiles.pin("gemma2-9b", V5E.name, 4, 0.75)
+    with pytest.warns(DeprecationWarning, match="batch_alpha"):
+        _check_step_identity(sys_.profiles,
+                             _queries(impl, impl.work_fn(700, 90),
+                                      counts=(4,), batches=(2, 8)))
+
+
+def test_zero_link_bw_lanes_match_scalar_mask():
+    """spec.link_bw == 0 zeroes the collective term, exactly like the
+    scalar conditional — even with nonzero coll_bytes in the work."""
+    sys_ = _system()
+    impl = sys_.library.impls["dense-retrieval"]
+    work = Work(flops=3e12, hbm_bytes=5e10, coll_bytes=7e9)
+    phased = Work.two_phase(2e12, 9e12, 1e10, 4e10, 2e10, 90,
+                            coll_bytes=7e9)
+    qs = _queries(impl, work, spec=CPU) + _queries(impl, phased, spec=CPU) \
+        + _queries(impl, phased, spec=V5E)
+    _check_step_identity(sys_.profiles, qs)
+
+
+# -- kernel mechanics ---------------------------------------------------------
+
+
+def test_mixed_regimes_one_call_preserves_order():
+    """One call spanning all regimes returns results in query order."""
+    sys_ = _system()
+    prof = sys_.profiles
+    prof.pin("gemma2-9b", V5E.name, 2, {1: 0.9, 8: 0.2})
+    gem = sys_.library.impls["gemma2-9b"]
+    ret = sys_.library.impls["dense-retrieval"]
+    qs = (_queries(gem, gem.work_fn(700, 90), counts=(1, 2))     # pin+phased
+          + _queries(ret, ret.work_fn(700, 90))                  # alpha
+          + _queries(ret, ret.work_fn(10, 5), spec=CPU))         # masked
+    _check_step_identity(prof, qs)
+
+
+def test_batch_call_feeds_the_shared_memo():
+    """After one batch call, every scalar re-ask is a memo hit — and the
+    cached value is the one the scalar path would have computed."""
+    sys_ = _system()
+    prof = sys_.profiles
+    impl = sys_.library.impls["gemma2-9b"]
+    qs = _queries(impl, impl.work_fn(700, 90))
+    got = prof.step_latency_batch(qs)
+    prof.cache_hits = prof.cache_misses = 0
+    assert [prof.step_latency(q) for q in qs] == got
+    assert prof.cache_hits == len(qs) and prof.cache_misses == 0
+
+
+def test_schedule_batch_matches_scalar_schedule():
+    """Full + remainder recomposition is the scalar float-op sequence."""
+    sys_ = _system()
+    prof = sys_.profiles
+    impl = sys_.library.impls["gemma2-9b"]
+    work = impl.work_fn(700, 90)
+    qs = [CostQuery(impl=impl, spec=V5E, n_devices=n, work=work,
+                    batch=b, items=i)
+          for n in (1, 4) for b in (1, 3, 8) for i in (0, 1, 7, 24)]
+    got = prof.schedule_latency_batch(qs)
+    prof.cache_reset()
+    assert got == [prof.schedule_latency(q) for q in qs]
+
+
+def test_cache_hit_frac_discount_flows_through():
+    """The prefill discount prices through effective_work, both paths."""
+    sys_ = _system()
+    prof = sys_.profiles
+    impl = sys_.library.impls["gemma2-9b"]
+    work = impl.work_fn(8000, 4)     # prompt-heavy: prefill dominates
+    qs = [CostQuery(impl=impl, spec=V5E, n_devices=2, work=work,
+                    batch=4, items=11, cache_hit_frac=f)
+          for f in (0.0, 0.35, 0.9)]
+    got = prof.schedule_latency_batch(qs)
+    prof.cache_reset()
+    assert got == [prof.schedule_latency(q) for q in qs]
+    assert got[0] > got[1] > got[2]     # the discount actually discounts
+
+
+def test_kernel_without_numpy_falls_back_to_scalar(monkeypatch):
+    """``_np is None`` (numpy absent): identical answers, scalar route."""
+    sys_ = _system()
+    prof = sys_.profiles
+    impl = sys_.library.impls["gemma2-9b"]
+    qs = _queries(impl, impl.work_fn(700, 90))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # fallback must stay silent
+        monkeypatch.setattr(profiles_mod, "_np", None)
+        got = prof.step_latency_batch(qs)
+    prof.cache_reset()
+    assert got == [prof.step_latency(q) for q in qs]
+
+
+def test_empty_batch_is_a_no_op():
+    prof = _system().profiles
+    assert prof.step_latency_batch([]) == []
+    assert prof.schedule_latency_batch([]) == []
+
+
+def test_batch_rejects_positional_form():
+    prof = _system().profiles
+    with pytest.raises(TypeError, match="CostQuery"):
+        prof.step_latency_batch([("gemma2-9b", V5E, 1)])
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(1e9, 1e15), st.floats(1e9, 1e15),
+       st.floats(0.0, 1e12), st.floats(0.0, 1e12),
+       st.floats(1e8, 2e11), st.integers(1, 512),
+       st.integers(1, 16), st.integers(1, 64))
+def test_property_phased_kernel_bitwise(pf, df, pb, db, wb, steps, n, b):
+    """Random phased works: the numpy lane equals the scalar float."""
+    sys_ = _system()
+    impl = sys_.library.impls["gemma2-9b"]
+    work = Work.two_phase(pf, df, pb, db, wb, steps)
+    q = CostQuery(impl=impl, spec=V5E, n_devices=n, work=work, batch=b)
+    got = sys_.profiles.step_latency_batch([q])[0]
+    sys_.profiles.cache_reset()
+    assert got == sys_.profiles.step_latency(q)

@@ -326,15 +326,8 @@ def test_chat_affinity_beats_blind_end_to_end():
     assert w_att >= c_att
 
 
-def test_chat_fast_dispatch_stays_byte_identical():
-    """The cache-aware engine preserves the PR 6 dispatch-equivalence
-    property on the *stateful* stream too."""
-    fast = _chat_run(fast=True, horizon=400.0)
-    ref = _chat_run(fast=False, horizon=400.0)
-    assert fast.trace == ref.trace
-    assert fast.energy_wh == ref.energy_wh
-    assert fast.cache_hit_rate == ref.cache_hit_rate
-    assert fast.per_class == ref.per_class
+# (the chat fast-vs-reference byte-identity witness moved to
+# test_engine_identity.py, parametrized with the other three scenarios)
 
 
 def test_cacheless_stream_unchanged_by_kv_machinery():

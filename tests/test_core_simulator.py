@@ -23,6 +23,27 @@ def system():
     return Murakkab.tpu_cluster(v5e=32, v5p=0, v4_harvest=0, host_cores=64)
 
 
+def test_simulator_import_shim_is_warning_free():
+    """``repro.core.simulator`` is the stable import surface over the
+    ``core/engine`` package (DESIGN.md §12): a fresh import of every
+    public name must emit no warnings — no deprecation shims, no lazy
+    fallbacks — and the façade must re-export the engine's report types
+    unchanged."""
+    import importlib
+    import warnings
+
+    import repro.core.simulator as shim
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        mod = importlib.reload(shim)
+        for name in ("Simulator", "Submission", "SimReport",
+                     "OpenLoopReport", "TraceEntry", "render_trace"):
+            assert getattr(mod, name) is not None
+    from repro.core.engine import OpenLoopReport, SimReport
+    assert mod.SimReport is SimReport
+    assert mod.OpenLoopReport is OpenLoopReport
+
+
 def test_dependency_order(system):
     dag, plan, rep = _run(system, make_declarative_job())
     start = {e.task: e.start for e in rep.trace}

@@ -17,8 +17,9 @@ from repro.core.dag import TaskNode
 
 
 def _rec(impl: str, text: str, quality: float, usd: float,
-         interface: str = "retrieve", energy: float = 0.0) -> TaskRecord:
-    return TaskRecord(t=1.0, workflow="w", task="t", interface=interface,
+         interface: str = "retrieve", energy: float = 0.0,
+         t: float = 1.0) -> TaskRecord:
+    return TaskRecord(t=t, workflow="w", task="t", interface=interface,
                       impl=impl, pool="p", features=featurize(text),
                       latency_s=0.5, energy_j=energy, usd=usd,
                       quality=quality)
@@ -96,6 +97,59 @@ def test_rewards_pure_function_of_log():
     # ...and never mutates the input router (frozen weights)
     with pytest.raises(TypeError):
         r.weights[("retrieve", "x")] = {}
+
+
+def _two_phase_drift_log() -> TelemetryStore:
+    """Phase 1 (t <= 100): ``drift-arm`` is excellent, 18 records deep.
+    Phase 2 (t ~ 1000): it regressed hard; ``steady-arm`` never moved."""
+    store = TelemetryStore()
+    for i in range(18):
+        store.log(_rec("drift-arm", LOOKUP, 0.95, 0.01, t=5.0 * i))
+    for i in range(2):
+        store.log(_rec("drift-arm", LOOKUP, 0.40, 0.01, t=1000.0 + 10 * i))
+    for t in (10.0, 60.0, 1000.0, 1010.0):
+        store.log(_rec("steady-arm", LOOKUP, 0.80, 0.01, t=t))
+    return store
+
+
+def test_half_life_decay_tracks_drift():
+    """The two-phase drift property: a lifetime mean is dominated by the
+    stale majority and keeps preferring the regressed arm; a half-life
+    evaluator forgets phase 1 and flips to the arm that still works."""
+    store = _two_phase_drift_log()
+    bucket = ("retrieve", featurize(LOOKUP).bucket())
+    lifetime = OfflineEvaluator(cost_weight=0.0).rewards(store)[bucket]
+    decayed = OfflineEvaluator(cost_weight=0.0,
+                               half_life_s=100.0).rewards(store)[bucket]
+    assert lifetime["drift-arm"] > lifetime["steady-arm"]    # the bug
+    assert decayed["drift-arm"] < decayed["steady-arm"]      # the fix
+    # phase 2 is what the decayed estimate converges toward
+    assert decayed["drift-arm"] == pytest.approx(0.40 / 0.85, abs=0.05)
+
+
+def test_window_drops_stale_records_outright():
+    """The hard-cutoff variant: only phase 2 survives a 50 s window."""
+    store = _two_phase_drift_log()
+    bucket = ("retrieve", featurize(LOOKUP).bucket())
+    windowed = OfflineEvaluator(cost_weight=0.0,
+                                window_s=50.0).rewards(store)[bucket]
+    assert windowed["drift-arm"] == pytest.approx(0.40 / 0.85)
+    assert windowed["steady-arm"] == pytest.approx(0.80 / 0.85)
+
+
+def test_decay_off_reproduces_the_lifetime_mean_exactly():
+    """Defaults (no half-life, no window) are the legacy aggregation,
+    bitwise: unit age-weights multiply through as exact identities."""
+    store = _two_phase_drift_log()
+    bucket = ("retrieve", featurize(LOOKUP).bucket())
+    got = OfflineEvaluator(cost_weight=0.0).rewards(store)[bucket]
+    drift = [min(r.quality / 0.85, 1.0) for r in store.records
+             if r.impl == "drift-arm"]
+    assert got["drift-arm"] == sum(drift) / len(drift)
+    with pytest.raises(ValueError, match="half_life_s"):
+        OfflineEvaluator(half_life_s=0.0)
+    with pytest.raises(ValueError, match="window_s"):
+        OfflineEvaluator(window_s=-1.0)
 
 
 def test_two_arm_convergence_smoke():
